@@ -1,0 +1,58 @@
+"""Flat-npz pytree checkpointing with round resumption metadata.
+
+Leaves are stored under path-encoded keys ("layer/0/w"), dtypes preserved
+(bfloat16 round-trips via a view trick since npz has no bf16).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save(path: str | Path, tree, *, step: int = 0, extra: dict | None = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    meta = {"step": step, **(extra or {})}
+    path.with_suffix(".meta.json").write_text(json.dumps(meta))
+
+
+def restore(path: str | Path, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/SDS)."""
+    path = Path(path)
+    z = np.load(path if path.suffix == ".npz" else path.with_suffix(".npz"))
+    flat = dict(z.items())
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key + _BF16_TAG in flat:
+            arr = flat[key + _BF16_TAG].view(jnp.bfloat16)
+        else:
+            arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), f"shape mismatch at {key}"
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str | Path) -> dict:
+    return json.loads(Path(path).with_suffix(".meta.json").read_text())

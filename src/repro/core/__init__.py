@@ -1,0 +1,10 @@
+from repro.core import aggregation, cluster_collectives, distill, hierarchical, kmeans, stats
+
+__all__ = [
+    "aggregation",
+    "cluster_collectives",
+    "distill",
+    "hierarchical",
+    "kmeans",
+    "stats",
+]

@@ -1,0 +1,71 @@
+"""Weight aggregation operators.
+
+FedAvg:        w_g = sum_i (d_i / d) w_i                        (McMahan '17)
+FedSiKD (Alg. 1, lines 16-18):
+               wbar_k = (1/|C_k|) sum_{i in C_k} w_i
+               w_g    = (1/K)    sum_k          wbar_k
+
+All operators act on arbitrary parameter pytrees.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(params: Sequence, weights: Sequence[float]):
+    """sum_i weights_i * params_i / sum(weights) over pytrees."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        out = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            out = out + wi * leaf.astype(jnp.float32)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(avg, *params)
+
+
+def fedavg(params: Sequence, num_examples: Sequence[int]):
+    return weighted_average(params, [float(n) for n in num_examples])
+
+
+def uniform_average(params: Sequence):
+    return weighted_average(params, [1.0] * len(params))
+
+
+def hierarchical_average(params: Sequence, cluster_of: Sequence[int],
+                         *, weighting: str = "size"):
+    """FedSiKD two-level mean (Alg.1 lines 16-18).
+
+    ``weighting="uniform"`` is the literal Alg.1 formula (1/K sum of cluster
+    means) — degenerate when cluster sizes are skewed (a 1-client cluster
+    gets 1/K of the global model).  ``weighting="size"`` follows §IV-C.5's
+    text ("we scale the weights according to the number of clients in each
+    cluster"), i.e. cluster means combine with |C_k|/N weights."""
+    labels = np.asarray(cluster_of)
+    ks = sorted(set(labels.tolist()))
+    cluster_means, sizes = [], []
+    for k in ks:
+        members = [p for p, c in zip(params, labels) if c == k]
+        cluster_means.append(uniform_average(members))
+        sizes.append(len(members))
+    if weighting == "uniform":
+        return uniform_average(cluster_means)
+    return weighted_average(cluster_means, [float(s) for s in sizes])
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, s: float):
+    return jax.tree_util.tree_map(lambda x: x * s, a)

@@ -1,0 +1,109 @@
+"""FedSiKD aggregation as TPU collectives.
+
+The paper's server loop (gather all student weights -> mean per cluster ->
+mean of cluster means) is mapped onto the ICI torus inside ``shard_map``
+over the client axis.  jax 0.8's shard_map does not implement
+``psum(..., axis_index_groups=...)`` (NotImplementedError), so the grouped
+reductions are expressed as ``all_gather`` + a per-device weighted-row
+contraction — the weight matrix IS the grouped-mean operator, and XLA is
+free to lower the gather+reduce onto the torus links.  No parameter server,
+no point-to-point RPC; this is the hardware-adapted form of Alg. 1 lines
+16-18 (DESIGN.md §3).
+
+All helpers are meant to be called INSIDE a shard_map'd function where
+``axis_name`` is bound.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cluster_groups(assignments: Sequence[int]) -> list[list[int]]:
+    """Partition of device indices along the client axis by cluster id."""
+    labels = np.asarray(assignments)
+    return [np.flatnonzero(labels == k).tolist() for k in np.unique(labels)]
+
+
+def _intra_matrix(groups: list[list[int]]) -> np.ndarray:
+    D = sum(len(g) for g in groups)
+    w = np.zeros((D, D), np.float32)
+    for g in groups:
+        for d in g:
+            w[d, list(g)] = 1.0 / len(g)
+    return w
+
+
+def _global_row(groups: list[list[int]]) -> np.ndarray:
+    D = sum(len(g) for g in groups)
+    K = len(groups)
+    row = np.zeros((D,), np.float32)
+    for g in groups:
+        row[list(g)] = 1.0 / (K * len(g))
+    return row
+
+
+def _weighted_gather(tree, axis_name: str, row_for_device):
+    """out = sum_e w[e] * x_e with x_e gathered across the axis.
+
+    ``row_for_device``: (D,) weights, or (D, D) matrix indexed by this
+    device's axis position."""
+    table = jnp.asarray(row_for_device)
+
+    def leaf(x):
+        gathered = jax.lax.all_gather(x.astype(jnp.float32), axis_name)
+        if table.ndim == 2:
+            w = table[jax.lax.axis_index(axis_name)]
+        else:
+            w = table
+        return jnp.tensordot(w, gathered, axes=1).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def intra_cluster_mean(tree, axis_name: str, groups: list[list[int]]):
+    """Per-cluster mean across the client axis (Alg. 1 line 16): after this
+    call every device holds the mean over ITS OWN cluster."""
+    return _weighted_gather(tree, axis_name, _intra_matrix(groups))
+
+
+def fedsikd_global_mean(tree, axis_name: str, groups: list[list[int]]):
+    """Two-level FedSiKD mean: (1/K) sum_k (1/|C_k|) sum_{i in C_k} w_i
+    (Alg. 1 line 18) — every device ends with the same global model."""
+    return _weighted_gather(tree, axis_name, _global_row(groups))
+
+
+def fedavg_mean(tree, axis_name: str, num_examples: jax.Array):
+    """Example-weighted FedAvg all-reduce: sum_i (d_i/d) w_i.
+
+    ``num_examples`` is this device's client dataset size (scalar)."""
+    total = jax.lax.psum(num_examples.astype(jnp.float32), axis_name)
+    w = num_examples.astype(jnp.float32) / total
+
+    def leaf(x):
+        return jax.lax.psum(x.astype(jnp.float32) * w, axis_name).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def broadcast_from(tree, axis_name: str, src: int, groups: list[list[int]] | None = None):
+    """Broadcast leader/teacher weights along the client axis.
+
+    With ``groups``, ``src`` indexes WITHIN each group's device list,
+    implementing per-cluster teacher broadcast."""
+    if groups is None:
+        def leaf(x):
+            mask = (jax.lax.axis_index(axis_name) == src).astype(x.dtype)
+            return jax.lax.psum(x * mask, axis_name)
+        return jax.tree_util.tree_map(leaf, tree)
+
+    D = sum(len(g) for g in groups)
+    w = np.zeros((D, D), np.float32)
+    for g in groups:
+        leader = g[min(src, len(g) - 1)]
+        for d in g:
+            w[d, leader] = 1.0
+    return _weighted_gather(tree, axis_name, w)

@@ -1,0 +1,60 @@
+"""Knowledge-distillation losses (paper §IV-C).
+
+Student objective  =  CE(student(x), y)
+                    + alpha * tau^2 * KL( softmax(T(x)/tau) || softmax(S(x)/tau) )
+
+The tau^2 factor keeps gradient magnitudes comparable across temperatures
+(Hinton et al. 2015).  ``distillation_loss`` is the pure-jnp reference; the
+Pallas kernel in ``repro.kernels.kd_softmax_kl`` computes the same quantity
+blocked over vocab and is used by the LLM-scale train steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over valid (label >= 0) positions; labels == -1 are padding."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    ce = logz - picked
+    mask = (labels >= 0).astype(logits.dtype)
+    return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def kl_teacher_student(
+    teacher_logits: jax.Array,
+    student_logits: jax.Array,
+    *,
+    temperature: float = 2.0,
+) -> jax.Array:
+    """tau^2 * KL(p_T || p_S) with temperature-softened distributions, mean
+    over all leading axes."""
+    t = teacher_logits / temperature
+    s = student_logits / temperature
+    p_t = jax.nn.softmax(t, axis=-1)
+    kl = jnp.sum(p_t * (jax.nn.log_softmax(t, -1) - jax.nn.log_softmax(s, -1)), -1)
+    return (temperature**2) * kl.mean()
+
+
+def distillation_loss(
+    student_logits: jax.Array,
+    teacher_logits: jax.Array,
+    labels: jax.Array,
+    *,
+    temperature: float = 2.0,
+    alpha: float = 0.5,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Combined student loss of §IV-C.4.  Returns (loss, aux dict)."""
+    ce = softmax_cross_entropy(student_logits, labels)
+    kl = kl_teacher_student(teacher_logits, student_logits, temperature=temperature)
+    loss = (1.0 - alpha) * ce + alpha * kl
+    return loss, {"ce": ce, "kl": kl}
+
+
+def masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    mask = mask.astype(x.dtype)
+    return jnp.sum(x * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,157 @@
+"""Server-side k-means clustering of client statistics (paper §IV-A, Eq. 2)
+plus the three cluster-quality metrics the paper uses to pick K:
+Silhouette coefficient, Calinski-Harabasz index, Davies-Bouldin index.
+
+Pure JAX (jax.lax control flow) so the whole selection procedure jits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array    # (K, F)
+    assignments: jax.Array  # (N,) int32
+    inertia: jax.Array      # () — J of Eq. (2)
+
+
+def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(N,K) squared euclidean distances via the expansion trick (MXU-friendly)."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N,1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]                # (1,K)
+    xc = x @ c.T                                         # (N,K)
+    return jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)
+
+
+def _plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding, fori_loop over the K-1 remaining centroids."""
+    n = x.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        d = _sq_dists(x, cents)
+        # distance to nearest chosen centroid; un-chosen slots masked out by
+        # giving them +inf distance contribution via the iota mask.
+        valid = jnp.arange(k) < i
+        d = jnp.where(valid[None, :], d, jnp.inf).min(axis=1)
+        probs = d / jnp.maximum(d.sum(), _EPS)
+        idx = jax.random.choice(sub, n, p=probs)
+        return cents.at[i].set(x[idx]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int = 50) -> KMeansResult:
+    """Lloyd's algorithm minimising Eq. (2): J = sum_k sum_{x in C_k} ||x-mu_k||^2."""
+    cents0 = _plus_plus_init(key, x, k)
+
+    def step(_, cents):
+        assign = jnp.argmin(_sq_dists(x, cents), axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)       # (N,K)
+        counts = onehot.sum(axis=0)                              # (K,)
+        sums = onehot.T @ x                                      # (K,F)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep old centroid for empty clusters
+        return jnp.where(counts[:, None] > 0, new, cents)
+
+    cents = jax.lax.fori_loop(0, iters, step, cents0)
+    assign = jnp.argmin(_sq_dists(x, cents), axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.take_along_axis(_sq_dists(x, cents), assign[:, None], 1))
+    return KMeansResult(cents, assign, inertia)
+
+
+# --------------------------------------------------------------------------
+# Cluster-quality metrics (paper cites Rousseeuw '87, Calinski-Harabasz '74,
+# Davies-Bouldin '79).  All are O(N^2 F) at FL-client scale (N ~ 40) — cheap.
+# --------------------------------------------------------------------------
+
+def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Mean silhouette coefficient; higher is better."""
+    n = x.shape[0]
+    d = jnp.sqrt(_sq_dists(x, x))                                  # (N,N)
+    same = assign[:, None] == assign[None, :]                      # (N,N)
+    onehot = jax.nn.one_hot(assign, k)                             # (N,K)
+    counts = onehot.sum(axis=0)                                    # (K,)
+    # mean distance from i to every cluster c: (N,K)
+    sums = d @ onehot
+    own = counts[assign]
+    a = jnp.where(own > 1,
+                  jnp.sum(jnp.where(same, d, 0.0), axis=1) / jnp.maximum(own - 1, 1),
+                  0.0)
+    mean_to = sums / jnp.maximum(counts[None, :], 1.0)
+    other = jnp.where(jax.nn.one_hot(assign, k, dtype=bool), jnp.inf, mean_to)
+    b = jnp.where(counts[None, :] > 0, other, jnp.inf).min(axis=1)
+    s = jnp.where(own > 1, (b - a) / jnp.maximum(jnp.maximum(a, b), _EPS), 0.0)
+    del n
+    return s.mean()
+
+
+def calinski_harabasz(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Between/within dispersion ratio; higher is better."""
+    n = x.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    counts = onehot.sum(axis=0)
+    cents = (onehot.T @ x) / jnp.maximum(counts, 1.0)[:, None]
+    overall = x.mean(axis=0)
+    ssb = jnp.sum(counts * jnp.sum((cents - overall) ** 2, axis=1))
+    ssw = jnp.sum((x - cents[assign]) ** 2)
+    return (ssb / jnp.maximum(k - 1, 1)) / jnp.maximum(ssw / jnp.maximum(n - k, 1), _EPS)
+
+
+def davies_bouldin(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Mean worst-case cluster similarity; LOWER is better."""
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    counts = onehot.sum(axis=0)
+    cents = (onehot.T @ x) / jnp.maximum(counts, 1.0)[:, None]
+    # mean intra-cluster distance to centroid
+    dist = jnp.sqrt(jnp.sum((x - cents[assign]) ** 2, axis=1))
+    s = (onehot.T @ dist) / jnp.maximum(counts, 1.0)               # (K,)
+    m = jnp.sqrt(_sq_dists(cents, cents))                          # (K,K)
+    ratio = (s[:, None] + s[None, :]) / jnp.maximum(m, _EPS)
+    ratio = jnp.where(jnp.eye(k, dtype=bool), -jnp.inf, ratio)
+    valid = (counts[:, None] > 0) & (counts[None, :] > 0)
+    ratio = jnp.where(valid, ratio, -jnp.inf)
+    return jnp.where(counts > 0, ratio.max(axis=1), 0.0).sum() / jnp.maximum(
+        jnp.sum(counts > 0), 1)
+
+
+def select_k(
+    key: jax.Array,
+    x: jax.Array,
+    k_min: int = 2,
+    k_max: int = 8,
+    iters: int = 50,
+) -> tuple[int, dict[int, dict[str, float]]]:
+    """Paper's K selection: sweep K, score with the three metrics, majority vote.
+
+    Each metric votes for its best K (max silhouette, max CH, min DB); ties go
+    to the smaller K.  Returns (chosen_k, per-k metric table).
+    """
+    table: dict[int, dict[str, float]] = {}
+    ks = list(range(k_min, min(k_max, x.shape[0] - 1) + 1))
+    for k in ks:
+        res = kmeans(jax.random.fold_in(key, k), x, k, iters)
+        table[k] = {
+            "silhouette": float(silhouette_score(x, res.assignments, k)),
+            "calinski_harabasz": float(calinski_harabasz(x, res.assignments, k)),
+            "davies_bouldin": float(davies_bouldin(x, res.assignments, k)),
+            "inertia": float(res.inertia),
+        }
+    votes = [
+        max(ks, key=lambda k: table[k]["silhouette"]),
+        max(ks, key=lambda k: table[k]["calinski_harabasz"]),
+        min(ks, key=lambda k: table[k]["davies_bouldin"]),
+    ]
+    chosen = max(set(votes), key=lambda k: (votes.count(k), -k))
+    return chosen, table

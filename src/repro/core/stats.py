@@ -1,0 +1,98 @@
+"""Client dataset-distribution statistics (paper §IV-A, Eq. 1).
+
+Each client computes per-feature mean, standard deviation and skewness of its
+local dataset and shares ONLY these with the server (never raw data).  An
+optional Gaussian-mechanism differential-privacy hook perturbs the statistics
+before sharing, matching the paper's assumption that "differential privacy is
+applied to this shared information".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientStats:
+    """The (mu, sigma, gamma) triple of Eq. (1), one row per feature group."""
+
+    mean: jax.Array      # (F,)
+    std: jax.Array       # (F,)
+    skewness: jax.Array  # (F,)
+
+    def vector(self) -> jax.Array:
+        """Flat feature vector used by the server-side k-means."""
+        return jnp.concatenate([self.mean, self.std, self.skewness])
+
+
+def compute_stats(data: jax.Array, *, feature_axis: int = -1) -> ClientStats:
+    """mu / sigma / gamma over all non-feature axes of ``data``.
+
+    ``data`` is (num_examples, ..., features); every axis except
+    ``feature_axis`` is treated as sample dimension, so images ((N,28,28))
+    reduce to per-column stats and HAR windows ((N,561)) to per-channel stats.
+    """
+    data = jnp.asarray(data, jnp.float32)
+    axes = tuple(a for a in range(data.ndim) if a != feature_axis % data.ndim)
+    mean = jnp.mean(data, axis=axes)
+    centered = data - jnp.expand_dims(mean, axes)
+    var = jnp.mean(centered**2, axis=axes)
+    std = jnp.sqrt(var)
+    # Fisher-Pearson skewness  E[(x-mu)^3] / sigma^3, guarded for constants.
+    third = jnp.mean(centered**3, axis=axes)
+    skew = third / jnp.maximum(std, _EPS) ** 3
+    return ClientStats(mean=mean, std=std, skewness=skew)
+
+
+def label_histogram(labels: jax.Array, num_classes: int) -> jax.Array:
+    """Normalised label histogram — optional extra similarity feature."""
+    counts = jnp.bincount(labels.astype(jnp.int32), length=num_classes)
+    return counts / jnp.maximum(counts.sum(), 1)
+
+
+def privatize(
+    stats: ClientStats,
+    *,
+    noise_multiplier: float,
+    clip: float = 10.0,
+    key: Optional[jax.Array] = None,
+) -> ClientStats:
+    """Gaussian-mechanism DP hook (paper: exact DP model out of scope).
+
+    Each statistic is clipped to [-clip, clip] (bounding sensitivity) and
+    perturbed with N(0, (noise_multiplier*clip)^2) noise.  ``noise_multiplier=0``
+    returns the stats unchanged.
+    """
+    if noise_multiplier <= 0.0:
+        return stats
+    if key is None:
+        raise ValueError("privatize() with noise needs an explicit PRNG key")
+    ks = jax.random.split(key, 3)
+    sigma = noise_multiplier * clip
+
+    def noisy(x, k):
+        return jnp.clip(x, -clip, clip) + sigma * jax.random.normal(k, x.shape)
+
+    return ClientStats(
+        mean=noisy(stats.mean, ks[0]),
+        std=noisy(stats.std, ks[1]),
+        skewness=noisy(stats.skewness, ks[2]),
+    )
+
+
+def stack_stats(all_stats: list[ClientStats]) -> jax.Array:
+    """(N_clients, 3F) matrix the server clusters on — Eq. (1) client_stats."""
+    return jnp.stack([s.vector() for s in all_stats], axis=0)
+
+
+def standardize(features: jax.Array) -> jax.Array:
+    """Column-standardise the stats matrix so k-means treats mu/sigma/gamma
+    on equal footing (the three statistics live on very different scales)."""
+    mu = features.mean(axis=0, keepdims=True)
+    sd = features.std(axis=0, keepdims=True)
+    return (features - mu) / jnp.maximum(sd, _EPS)

@@ -1,0 +1,3 @@
+from repro.data import dirichlet, pipeline, synthetic
+
+__all__ = ["dirichlet", "pipeline", "synthetic"]

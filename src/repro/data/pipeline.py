@@ -1,0 +1,57 @@
+"""Client data pipeline: per-client shards, deterministic epoch shuffling,
+fixed-size batch iterators (padded final batch with label -1 = ignore), and
+synthetic token streams for the LLM-scale configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import Dataset
+
+
+@dataclasses.dataclass
+class ClientShard:
+    client_id: int
+    x: np.ndarray
+    y: np.ndarray
+
+    @property
+    def num_examples(self) -> int:
+        return len(self.y)
+
+    def batches(self, batch_size: int, *, epoch: int = 0, seed: int = 0,
+                drop_remainder: bool = False) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        rng = np.random.default_rng(hash((seed, self.client_id, epoch)) % (2**32))
+        order = rng.permutation(self.num_examples)
+        for start in range(0, self.num_examples, batch_size):
+            idx = order[start:start + batch_size]
+            if len(idx) < batch_size:
+                if drop_remainder:
+                    return
+                pad = batch_size - len(idx)
+                x = np.concatenate([self.x[idx], np.zeros((pad,) + self.x.shape[1:],
+                                                          self.x.dtype)])
+                y = np.concatenate([self.y[idx], np.full(pad, -1, self.y.dtype)])
+                yield x, y
+                return
+            yield self.x[idx], self.y[idx]
+
+
+def make_client_shards(ds: Dataset, num_clients: int, alpha: float,
+                       *, seed: int = 0) -> list[ClientShard]:
+    """Paper setup: Dirichlet(alpha) label-skew split across clients."""
+    parts = dirichlet_partition(ds.y_train, num_clients, alpha, seed=seed)
+    return [ClientShard(i, ds.x_train[p], ds.y_train[p]) for i, p in enumerate(parts)]
+
+
+def token_stream(vocab_size: int, batch: int, seq: int, *, seed: int = 0,
+                 num_batches: int = 1) -> Iterator[dict[str, np.ndarray]]:
+    """Synthetic LM batches (tokens + next-token labels) for LLM-scale runs."""
+    rng = np.random.default_rng(seed)
+    for _ in range(num_batches):
+        toks = rng.integers(0, vocab_size, size=(batch, seq + 1), dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,3 @@
+from repro.fed.rounds import FedConfig, run_federated
+
+__all__ = ["FedConfig", "run_federated"]

@@ -1,0 +1,257 @@
+"""Federated round engines: FedSiKD (Alg. 1) and the paper's baselines
+(FedAvg, FL+HC, RandomCluster) plus FedProx.
+
+The engine is model-agnostic: it takes the paper's CNNs by default but any
+(init_fn, fwd_fn) pair works.  FedSiKD's phases follow Alg. 1 exactly:
+  1. ClientStatisticsSharing  -> core.stats
+  2. ClusterFormation         -> core.kmeans (+ metric-voted K)
+  3. KnowledgeDistillation    -> per-cluster teacher/student rounds
+  4. hierarchical aggregation -> core.aggregation.hierarchical_average
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import hierarchical, kmeans, stats
+from repro.data.pipeline import ClientShard, make_client_shards
+from repro.data.synthetic import Dataset
+from repro.fed.client import evaluate, make_steps
+from repro.models.cnn import make_model
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class FedConfig:
+    algorithm: str = "fedsikd"        # fedsikd | fedavg | flhc | random | fedprox
+    num_clients: int = 40
+    alpha: float = 0.5                # Dirichlet skew
+    rounds: int = 5
+    local_epochs: int = 1
+    batch_size: int = 64
+    lr: float = 1e-3
+    student_lr: float = 3e-3          # smaller net needs a hotter lr (see
+                                      # EXPERIMENTS.md calibration)
+    kd_temperature: float = 2.0
+    kd_alpha: float = 0.5
+    prox_mu: float = 0.01
+    num_clusters: Optional[int] = None   # None -> metric-voted K (paper)
+    k_range: tuple[int, int] = (2, 5)
+    # Alg.1: "FL rounds start after ... the establishment of knowledge
+    # distillation within each cluster" -> teachers warm up before round 1.
+    teacher_warmup_epochs: int = 3
+    # Alg.1 line 12 trains the teacher on CLUSTER data (union of members,
+    # hosted at the leader/edge node).  "leader" restricts to the leader's
+    # own shard — strictly more private, weaker teacher.  See DESIGN.md §7.
+    teacher_data: str = "leader"         # leader (privacy-faithful: the
+                                         # teacher sees only the leader's own
+                                         # shard) | cluster (Alg.1 literal)
+    cluster_weighting: str = "size"      # size (§IV-C.5 text) | uniform (Alg.1)
+    dp_noise: float = 0.0                # DP noise multiplier on shared stats
+    seed: int = 0
+
+
+def _local_epochs(shard: ClientShard, steps, params, opt_state, key, cfg,
+                  *, step_fn, extra=()):
+    for epoch in range(cfg.local_epochs):
+        for bi, (x, y) in enumerate(shard.batches(cfg.batch_size, epoch=epoch,
+                                                  seed=cfg.seed)):
+            key, sub = jax.random.split(key)
+            params, opt_state, _ = step_fn(params, opt_state,
+                                           {"x": x, "y": y}, sub, *extra)
+    return params, opt_state
+
+
+def _cluster_epochs(members: list[ClientShard], params, opt_state, key, cfg,
+                    *, step_fn, epochs: int):
+    """Teacher pass over the union of cluster members' shards (Alg.1 l.12).
+
+    The cluster data is POOLED and shuffled globally — visiting member shards
+    sequentially causes catastrophic interference under label skew (each
+    shard's classes overwrite the previous one's; measured in EXPERIMENTS.md
+    calibration: loss diverges 2.5 -> 2.9)."""
+    pooled = ClientShard(
+        client_id=-1,
+        x=np.concatenate([sh.x for sh in members]),
+        y=np.concatenate([sh.y for sh in members]))
+    for epoch in range(epochs):
+        for x, y in pooled.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
+            key, sub = jax.random.split(key)
+            params, opt_state, _ = step_fn(params, opt_state,
+                                           {"x": x, "y": y}, sub)
+    return params, opt_state
+
+
+def _cluster_by_stats(shards: list[ClientShard], cfg: FedConfig) -> np.ndarray:
+    """Alg. 1 phases 1-2."""
+    key = jax.random.PRNGKey(cfg.seed + 17)
+    all_stats = []
+    for i, sh in enumerate(shards):
+        s = stats.compute_stats(sh.x.reshape(sh.num_examples, -1))
+        if cfg.dp_noise > 0:
+            s = stats.privatize(s, noise_multiplier=cfg.dp_noise,
+                                key=jax.random.fold_in(key, i))
+        all_stats.append(s)
+    feats = stats.standardize(stats.stack_stats(all_stats))
+    if cfg.num_clusters is None:
+        k, _ = kmeans.select_k(key, feats, *cfg.k_range)
+    else:
+        k = cfg.num_clusters
+    res = kmeans.kmeans(key, feats, k)
+    return np.asarray(res.assignments)
+
+
+def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dict:
+    """Runs ``cfg.rounds`` federated rounds; returns per-round test metrics."""
+    shards = make_client_shards(ds, cfg.num_clients, cfg.alpha, seed=cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    opt = adamw(cfg.lr)
+    s_opt = adamw(cfg.student_lr)
+
+    t_init, t_fwd = make_model(ds.name, student=False)
+    s_init, s_fwd = make_model(ds.name, student=True)
+    teacher_steps = make_steps(t_fwd, opt, prox_mu=cfg.prox_mu)
+    student_steps = make_steps(s_fwd, s_opt, kd_temperature=cfg.kd_temperature,
+                               kd_alpha=cfg.kd_alpha)
+    distill_step = student_steps["make_distill"](t_fwd)
+
+    history = {"acc": [], "loss": [], "round": []}
+
+    def record(params, eval_fn, rnd):
+        acc, loss = evaluate(eval_fn, params, ds.x_test, ds.y_test)
+        history["acc"].append(acc)
+        history["loss"].append(loss)
+        history["round"].append(rnd)
+        if progress:
+            print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}")
+
+    # ---------------------------------------------------------- clustering
+    if cfg.algorithm in ("fedsikd", "random"):
+        if cfg.algorithm == "fedsikd":
+            labels = _cluster_by_stats(shards, cfg)
+        else:
+            rng = np.random.default_rng(cfg.seed + 3)
+            k = cfg.num_clusters or 4
+            labels = rng.integers(0, k, cfg.num_clients)
+        clusters = [np.flatnonzero(labels == c) for c in np.unique(labels)]
+        # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
+        leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
+                   for c in clusters]
+        history["num_clusters"] = len(clusters)
+
+        global_student = s_init(key)
+        teachers = [t_init(jax.random.fold_in(key, 100 + k))
+                    for k in range(len(clusters))]
+        t_opts = [opt.init(t) for t in teachers]
+        def teacher_shards(ci):
+            if cfg.teacher_data == "cluster":
+                return [shards[i] for i in clusters[ci]]
+            return [shards[leaders[ci]]]
+
+        # KD establishment phase (pre-round teacher warm-up)
+        for ci in range(len(clusters)):
+            if cfg.teacher_warmup_epochs:
+                teachers[ci], t_opts[ci] = _cluster_epochs(
+                    teacher_shards(ci), teachers[ci], t_opts[ci],
+                    jax.random.fold_in(key, 9000 + ci), cfg,
+                    step_fn=teacher_steps["ce"],
+                    epochs=cfg.teacher_warmup_epochs)
+        for rnd in range(1, cfg.rounds + 1):
+            new_params, cluster_of = [], []
+            for ci, members in enumerate(clusters):
+                # Alg.1 line 12: teacher trains on cluster data
+                teachers[ci], t_opts[ci] = _cluster_epochs(
+                    teacher_shards(ci), teachers[ci], t_opts[ci],
+                    jax.random.fold_in(key, rnd * 1000 + ci), cfg,
+                    step_fn=teacher_steps["ce"], epochs=cfg.local_epochs)
+                for i in members:
+                    sp = jax.tree_util.tree_map(jnp.copy, global_student)
+                    so = s_opt.init(sp)
+                    sp, _ = _local_epochs(
+                        shards[i], None, sp, so,
+                        jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
+                        step_fn=distill_step, extra=(teachers[ci],))
+                    new_params.append(sp)
+                    cluster_of.append(ci)
+            global_student = agg.hierarchical_average(new_params, cluster_of,
+                                                       weighting=cfg.cluster_weighting)
+            record(global_student, student_steps["eval"], rnd)
+        return history
+
+    if cfg.algorithm == "flhc":
+        # FL+HC (Briggs 2020): one pre-round of local training, agglomerative
+        # clustering of updates, then per-cluster FedAvg forever after.
+        global_params = t_init(key)
+        locals_, updates = [], []
+        for i, sh in enumerate(shards):
+            p = jax.tree_util.tree_map(jnp.copy, global_params)
+            o = opt.init(p)
+            p, _ = _local_epochs(sh, None, p, o, jax.random.fold_in(key, i),
+                                 cfg, step_fn=teacher_steps["ce"])
+            locals_.append(p)
+            updates.append(hierarchical.flatten_update(
+                agg.tree_sub(p, global_params)))
+        k = cfg.num_clusters or 4
+        labels = hierarchical.agglomerative(np.stack(updates), n_clusters=k)
+        clusters = [np.flatnonzero(labels == c) for c in np.unique(labels)]
+        cluster_models = [
+            agg.fedavg([locals_[i] for i in c],
+                       [shards[i].num_examples for i in c]) for c in clusters]
+        history["num_clusters"] = len(clusters)
+
+        def flhc_record(rnd):
+            # client-weighted mean over cluster models on the global test set
+            accs, losses, ws = [], [], []
+            for cm, c in zip(cluster_models, clusters):
+                a, l = evaluate(teacher_steps["eval"], cm, ds.x_test, ds.y_test)
+                w = sum(shards[i].num_examples for i in c)
+                accs.append(a * w); losses.append(l * w); ws.append(w)
+            history["acc"].append(sum(accs) / sum(ws))
+            history["loss"].append(sum(losses) / sum(ws))
+            history["round"].append(rnd)
+            if progress:
+                print(f"  round {rnd:3d}  acc={history['acc'][-1]:.4f}")
+
+        flhc_record(1)
+        for rnd in range(2, cfg.rounds + 1):
+            for ci, members in enumerate(clusters):
+                locs = []
+                for i in members:
+                    p = jax.tree_util.tree_map(jnp.copy, cluster_models[ci])
+                    o = opt.init(p)
+                    p, _ = _local_epochs(
+                        shards[i], None, p, o,
+                        jax.random.fold_in(key, rnd * 777 + i), cfg,
+                        step_fn=teacher_steps["ce"])
+                    locs.append(p)
+                cluster_models[ci] = agg.fedavg(
+                    locs, [shards[i].num_examples for i in members])
+            flhc_record(rnd)
+        return history
+
+    # ------------------------------------------------- fedavg / fedprox
+    global_params = t_init(key)
+    for rnd in range(1, cfg.rounds + 1):
+        locals_, sizes = [], []
+        for i, sh in enumerate(shards):
+            p = jax.tree_util.tree_map(jnp.copy, global_params)
+            o = opt.init(p)
+            if cfg.algorithm == "fedprox":
+                p, _ = _local_epochs(sh, None, p, o,
+                                     jax.random.fold_in(key, rnd * 31 + i), cfg,
+                                     step_fn=teacher_steps["prox"],
+                                     extra=(global_params,))
+            else:
+                p, _ = _local_epochs(sh, None, p, o,
+                                     jax.random.fold_in(key, rnd * 31 + i), cfg,
+                                     step_fn=teacher_steps["ce"])
+            locals_.append(p)
+            sizes.append(sh.num_examples)
+        global_params = agg.fedavg(locals_, sizes)
+        record(global_params, teacher_steps["eval"], rnd)
+    return history

@@ -1,0 +1,131 @@
+"""Public jit'd wrappers around the Pallas kernels: shape padding, batch-dim
+flattening, custom_vjp wiring, and automatic interpret-mode on CPU.
+
+On this container (CPU) kernels always run in interpret mode; on TPU pass
+``interpret=False`` (the default resolves via backend detection).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kd_softmax_kl as _kd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kmeans_assign as _km
+
+NEG = -1e30
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult, value):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------- kd loss
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def kd_distillation_loss(student_logits, teacher_logits, labels,
+                         tau: float = 2.0, alpha: float = 0.5,
+                         interpret: bool | None = None):
+    """Mean fused distillation loss over all tokens with label >= 0.
+
+    student/teacher logits: (..., V); labels: (...)."""
+    loss, _ = _kd_fwd_impl(student_logits, teacher_logits, labels, tau, alpha,
+                           interpret)
+    return loss
+
+
+def _blocks(V):
+    bv = 512 if V % 512 == 0 or V > 512 else V
+    return 128, bv
+
+
+def _kd_fwd_impl(s, t, y, tau, alpha, interpret):
+    interpret = _interpret_default() if interpret is None else interpret
+    V = s.shape[-1]
+    sf = s.reshape(-1, V)
+    tf = t.reshape(-1, V)
+    yf = y.reshape(-1)
+    bt, bv = _blocks(V)
+    sf = _pad_to(_pad_to(sf, 0, bt, 0.0), 1, bv, NEG)
+    tf = _pad_to(_pad_to(tf, 0, bt, 0.0), 1, bv, NEG)
+    yf = _pad_to(yf, 0, bt, -1)
+    per_tok, stats = _kd.kd_loss_fwd(sf, tf, yf, tau=tau, alpha=alpha,
+                                     block_t=bt, block_v=bv,
+                                     interpret=interpret)
+    denom = jnp.maximum(jnp.sum((yf >= 0).astype(jnp.float32)), 1.0)
+    return jnp.sum(per_tok) / denom, (stats, denom)
+
+
+def _kd_vjp_fwd(s, t, y, tau, alpha, interpret):
+    loss, (stats, denom) = _kd_fwd_impl(s, t, y, tau, alpha, interpret)
+    return loss, (s, t, y, stats, denom)
+
+
+def _kd_vjp_bwd(tau, alpha, interpret, res, g):
+    s, t, y, stats, denom = res
+    interpret = _interpret_default() if interpret is None else interpret
+    V = s.shape[-1]
+    sf = s.reshape(-1, V)
+    tf = t.reshape(-1, V)
+    yf = y.reshape(-1)
+    bt, bv = _blocks(V)
+    T0 = sf.shape[0]
+    sfp = _pad_to(_pad_to(sf, 0, bt, 0.0), 1, bv, NEG)
+    tfp = _pad_to(_pad_to(tf, 0, bt, 0.0), 1, bv, NEG)
+    yfp = _pad_to(yf, 0, bt, -1)
+    gf = jnp.full((sfp.shape[0],), 1.0, jnp.float32) * (g / denom)
+    ds = _kd.kd_loss_bwd(sfp, tfp, yfp, stats, gf, tau=tau, alpha=alpha,
+                         block_t=bt, block_v=bv, interpret=interpret)
+    ds = ds[:T0, :V].reshape(s.shape).astype(s.dtype)
+    return ds, None, None
+
+
+kd_distillation_loss.defvjp(_kd_vjp_fwd, _kd_vjp_bwd)
+
+
+# --------------------------------------------------------- flash attention
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool | None = None):
+    """q: (B,T,H,hd); k,v: (B,S,KVH,hd) -> (B,T,H,hd)  (layer-layout order).
+
+    Pads T/S to block multiples; padded keys are masked out by the
+    right-aligned causal mask only when causal=True (non-causal callers must
+    pad themselves)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    qt = jnp.moveaxis(q, 2, 1)                       # (B,H,T,hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    T, S = qt.shape[2], kt.shape[2]
+    bq = min(128, T) if T % 128 else 128
+    bk = min(128, S) if S % 128 else 128
+    qt = _pad_to(qt, 2, bq, 0.0)
+    kt = _pad_to(kt, 2, bk, 0.0)
+    vt = _pad_to(vt, 2, bk, 0.0)
+    # padded keys sit at the END: with right-alignment computed on the
+    # PADDED lengths they would become visible, so shift via window/causal:
+    out = _fa.flash_attention(qt, kt, vt, causal=causal,
+                              window=window, block_q=bq, block_k=bk,
+                              interpret=interpret)
+    out = out[:, :, :T]
+    return jnp.moveaxis(out, 1, 2)
+
+
+# ----------------------------------------------------------------- kmeans
+def kmeans_assign(x, cents, *, interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    N = x.shape[0]
+    bn = min(128, N) if N % 128 else 128
+    xp = _pad_to(x, 0, bn, 0.0)
+    a, d = _km.kmeans_assign(xp, cents, block_n=bn, interpret=interpret)
+    return a[:N], d[:N]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss_ref(student_logits, teacher_logits, labels, *, tau: float = 2.0,
+                alpha: float = 0.5):
+    """Per-token (1-a)*CE + a*tau^2*KL(p_T||p_S); labels<0 -> 0."""
+    s = student_logits.astype(jnp.float32)
+    t = teacher_logits.astype(jnp.float32)
+    log_ps = jax.nn.log_softmax(s / tau, axis=-1)
+    log_pt = jax.nn.log_softmax(t / tau, axis=-1)
+    kl = jnp.sum(jnp.exp(log_pt) * (log_pt - log_ps), axis=-1)
+    logz1 = jax.nn.logsumexp(s, axis=-1)
+    picked = jnp.take_along_axis(s, jnp.maximum(labels, 0)[:, None], -1)[:, 0]
+    ce = logz1 - picked
+    valid = (labels >= 0).astype(jnp.float32)
+    return ((1.0 - alpha) * ce + alpha * tau * tau * kl) * valid
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None,
+                        window: int = 0):
+    """q: (B,H,T,hd); k,v: (B,KVH,S,hd).  Plain masked softmax attention."""
+    B, H, T, hd = q.shape
+    KVH, S = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, KVH, G, T, hd)
+    scores = jnp.einsum("bkgth,bksh->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        tq = jnp.arange(T)[:, None] + (S - T)      # right-aligned
+        ts = jnp.arange(S)[None, :]
+        m = ts <= tq
+        if window:
+            m &= ts > tq - window
+        scores = jnp.where(m, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bksh->bkgth", w, v.astype(jnp.float32))
+    return out.reshape(B, H, T, hd).astype(q.dtype)
+
+
+def kmeans_assign_ref(x, cents):
+    """x: (N,F); cents: (K,F) -> (assignments (N,) int32, sq dists (N,))."""
+    x = x.astype(jnp.float32)
+    c = cents.astype(jnp.float32)
+    d = (jnp.sum(x * x, -1, keepdims=True) + jnp.sum(c * c, -1)[None]
+         - 2.0 * x @ c.T)
+    d = jnp.maximum(d, 0.0)
+    a = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    return a, jnp.take_along_axis(d, a[:, None], -1)[:, 0]

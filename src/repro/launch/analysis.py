@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Roofline analysis probes (see EXPERIMENTS.md §Roofline methodology).
+#
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+# so the scan-over-layers dry-run under-reports FLOPs/bytes/collectives by
+# ~L x.  We therefore lower UNROLLED reduced-depth probes (1 and 2 layers;
+# grad-accum 1) whose compiled cost is exact, fit the linear model
+#     X(L) = intercept + L * per_layer
+# and extrapolate to the full depth.  Hybrid fits group+mamba marginals from
+# three probes; enc-dec fits encoder+decoder marginals.
+#
+#   PYTHONPATH=src python -m repro.launch.analysis [--arch A] [--shape S]
+
+import argparse
+import dataclasses
+import json
+import traceback
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES
+from repro.launch.dryrun import LONG_OK, arch_config, lower_one, shape_skip_reason
+from repro.launch.mesh import make_production_mesh
+
+FIELDS = ("flops_per_device", "hbm_bytes_per_device",
+          "collective_bytes_per_device")
+
+
+def _probe(arch, shape, mesh, cfg):
+    r = lower_one(arch, shape, mesh, cfg=cfg, accum=1, verbose=False)
+    return {f: r["roofline"][f] for f in FIELDS}
+
+
+def _lin(x1, x2, l1, l2, L):
+    """intercept + L*slope through (l1,x1),(l2,x2).
+
+    SPMD partitioning can differ between depths (a replicated op at one depth
+    shards at another), which occasionally yields a NEGATIVE per-layer slope;
+    guard by falling back to the zero-intercept estimate X(l2)/l2 * L."""
+    out = {}
+    for f in FIELDS:
+        slope = (x2[f] - x1[f]) / (l2 - l1)
+        if slope <= 0:
+            out[f] = x2[f] / l2 * L
+        else:
+            out[f] = max(x1[f] + (L - l1) * slope, 0.0)
+    return out
+
+
+def extrapolate(arch: str, shape: str, mesh) -> dict:
+    base = arch_config(arch, shape)
+    if base.arch_type == "hybrid":
+        # X = a + G*attn + L*mamba.  Probes (L, attn_every):
+        #   pA=(2,2): a + attn + 2 mamba     pB=(3,3): a + attn + 3 mamba
+        #   pC=(4,2): a + 2 attn + 4 mamba
+        pA = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=2, attn_every=2, unroll=True))
+        pB = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=3, attn_every=3, unroll=True))
+        pC = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=4, attn_every=2, unroll=True))
+        G = base.num_layers // base.attn_every
+        out = {}
+        for f in FIELDS:
+            mamba = max(pB[f] - pA[f], 0.0)
+            attn = max(pC[f] - pA[f] - 2 * mamba, 0.0)
+            a = max(pA[f] - attn - 2 * mamba, 0.0)
+            out[f] = a + G * attn + base.num_layers * mamba
+        return out
+    if base.arch_type == "audio":
+        p22 = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=2, num_encoder_layers=2, unroll=True))
+        p32 = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=3, num_encoder_layers=2, unroll=True))
+        p23 = _probe(arch, shape, mesh, dataclasses.replace(
+            base, num_layers=2, num_encoder_layers=3, unroll=True))
+        out = {}
+        for f in FIELDS:
+            md = max(p32[f] - p22[f], 0.0)
+            me = max(p23[f] - p22[f], 0.0)
+            a = max(p22[f] - 2 * md - 2 * me, 0.0)
+            out[f] = (a + base.num_layers * md
+                      + base.num_encoder_layers * me)
+        return out
+    p1 = _probe(arch, shape, mesh, dataclasses.replace(
+        base, num_layers=2, unroll=True))
+    p2 = _probe(arch, shape, mesh, dataclasses.replace(
+        base, num_layers=3, unroll=True))
+    return _lin(p1, p2, 2, 3, base.num_layers)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline_probes.json")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    results = json.loads(out.read_text()) if out.exists() else []
+    done = {(r["arch"], r["shape"]) for r in results}
+    mesh = make_production_mesh()           # roofline table is single-pod
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            if (arch, shape) in done or shape_skip_reason(arch, shape):
+                continue
+            try:
+                with mesh:
+                    terms = extrapolate(arch, shape, mesh)
+                results.append({"arch": arch, "shape": shape, **terms})
+                print(f"  probe {arch} x {shape}: "
+                      f"flops={terms['flops_per_device']:.3e} "
+                      f"hbm={terms['hbm_bytes_per_device']:.3e} "
+                      f"coll={terms['collective_bytes_per_device']:.3e}",
+                      flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "error": str(e)[:1000]})
+            out.parent.mkdir(exist_ok=True)
+            out.write_text(json.dumps(results, indent=1))
+    print("analysis probes complete")
+
+
+if __name__ == "__main__":
+    main()

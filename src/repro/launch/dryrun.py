@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run: .lower().compile() every (architecture x input-shape)
+# on the production mesh; record memory/cost/roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k \
+#       --step fedsikd   # lower the paper-technique distillation step
+#
+# Results append incrementally to --out (safe to re-run; finished combos skip).
+# NOTE: the XLA_FLAGS assignment above MUST stay before any jax import —
+# device count locks on first jax init.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, ModelConfig, get_config
+from repro.launch import inputs as inp
+from repro.launch import roofline as rl
+from repro.launch import shardings as shd
+from repro.launch import steps as st
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+# grad-accumulation per arch for train_4k (keeps activations in HBM budget)
+TRAIN_ACCUM = {
+    "nemotron-4-340b": 16,
+    "arctic-480b": 8,
+    "deepseek-v2-236b": 8,
+    "glm4-9b": 2,
+    "minitron-8b": 2,
+    "seamless-m4t-large-v2": 2,
+}
+
+# long_500k policy (DESIGN.md §4): runs for sub-quadratic paths only
+LONG_OK = {"rwkv6-3b": None, "zamba2-1.2b": None,
+           "qwen2.5-3b": 4096, "glm4-9b": 4096}   # value = sliding window
+
+
+def shape_skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "full-attention arch: 500k decode needs sub-quadratic attention"
+    return None
+
+
+def arch_config(arch: str, shape: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape == "long_500k" and LONG_OK.get(arch):
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_OK[arch])
+    return cfg
+
+
+def _params_sds(cfg: ModelConfig):
+    init = ed.init_encdec if cfg.arch_type == "audio" else tf.init_lm
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+def lower_one(arch: str, shape: str, mesh, *, step_kind: str = "auto",
+              verbose: bool = True, cfg: ModelConfig | None = None,
+              accum: int | None = None, fedsikd_teacher_in_grad: bool = False,
+              fedsikd_vocab_chunk: int = 0):
+    """Lower + compile one combo; returns result dict.
+
+    ``cfg``/``accum`` overrides serve the roofline analysis probes
+    (launch/analysis.py): reduced unrolled layer counts, accum=1."""
+    cfg = cfg or arch_config(arch, shape)
+    spec = INPUT_SHAPES[shape]
+    kind = spec["kind"] if step_kind == "auto" else step_kind
+    dp = tuple(dp_axes(mesh))
+
+    params_sds = _params_sds(cfg)
+    pspecs = shd.param_specs(cfg, params_sds, mesh)
+    p_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.time()
+    if kind == "train":
+        accum = TRAIN_ACCUM.get(arch, 1) if accum is None else accum
+        step, opt = st.make_train_step(cfg, accum=accum)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        ospecs = shd.opt_specs(pspecs)
+        o_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), ospecs,
+            is_leaf=lambda x: isinstance(x, P))
+        batch_sds = inp.batch_specs_for(cfg, shape)
+        bspecs = shd.batch_specs(cfg, batch_sds, mesh)
+        b_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), bspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        jitted = jax.jit(step,
+                         in_shardings=(p_shardings, o_shardings, b_shardings),
+                         out_shardings=(p_shardings, o_shardings,
+                                        NamedSharding(mesh, P())))
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif kind == "fedsikd":
+        # the paper's technique: D student replicas on the dp axis, shared
+        # teacher, intra-cluster grouped gradient aggregation
+        D = len(dp) and int(jnp.prod(jnp.array([mesh.shape[a] for a in dp])))
+        import numpy as np
+        cluster_of = np.arange(D) // max(D // 4, 1)       # 4 clusters
+        dstep, sync, init_students, opt, s_cfg = st.make_fedsikd_distill_step(
+            cfg, cluster_of, teacher_in_grad=fedsikd_teacher_in_grad,
+            vocab_chunk=fedsikd_vocab_chunk)
+        students_sds = jax.eval_shape(
+            lambda: init_students(jax.random.PRNGKey(0)))
+        s_pspecs = shd.param_specs(s_cfg, _params_sds(s_cfg), mesh)
+        rep = lambda sp: P(*((dp,) + tuple(sp)))
+        s_specs = jax.tree_util.tree_map(rep, s_pspecs,
+                                         is_leaf=lambda x: isinstance(x, P))
+        s_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), s_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        opt_sds = jax.eval_shape(jax.vmap(opt.init), students_sds)
+        o_specs = shd.opt_specs(s_specs)
+        o_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P)
+            else NamedSharding(mesh, P(dp)), o_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        batch_sds = inp.batch_specs_for(cfg, "train_4k")
+        batch_sds = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(
+                (D, a.shape[0] // D) + a.shape[1:], a.dtype), batch_sds)
+        b_shardings = jax.tree_util.tree_map(
+            lambda a: NamedSharding(mesh, P(dp)), batch_sds)
+        jitted = jax.jit(dstep,
+                         in_shardings=(s_shardings, o_shardings, p_shardings,
+                                       b_shardings),
+                         out_shardings=(s_shardings, o_shardings,
+                                        NamedSharding(mesh, P())))
+        lowered = jitted.lower(students_sds, opt_sds, params_sds, batch_sds)
+    elif kind == "prefill":
+        step = st.make_prefill_step(cfg)
+        batch_sds = inp.batch_specs_for(cfg, shape)
+        bspecs = shd.batch_specs(cfg, batch_sds, mesh)
+        b_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), bspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        jitted = jax.jit(step, in_shardings=(p_shardings, b_shardings))
+        lowered = jitted.lower(params_sds, batch_sds)
+    else:  # decode
+        step = st.make_decode_step(cfg)
+        cache_sds = inp.cache_specs_for(cfg, shape)
+        cspecs = shd.cache_specs(cfg, cache_sds, mesh)
+        c_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), cspecs,
+            is_leaf=lambda x: isinstance(x, P))
+        B = INPUT_SHAPES[shape]["global_batch"]
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(dp if B % len(mesh.devices) == 0 or
+                                       B % 16 == 0 else None))
+        jitted = jax.jit(step, in_shardings=(
+            p_shardings, c_shardings, tok_sh, NamedSharding(mesh, P())))
+        lowered = jitted.lower(params_sds, cache_sds, tok_sds, pos_sds)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    roof = rl.analyze(compiled)
+    mem = rl.memory_summary(compiled)
+    n_chips = len(mesh.devices.flatten()) if hasattr(mesh.devices, "flatten") \
+        else len(jax.devices())
+    result = {
+        "arch": arch, "shape": shape, "step": kind,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "roofline": roof.as_dict(),
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"  {arch} x {shape} [{kind}] mesh={result['mesh']}: "
+              f"compile {t_compile:.0f}s, dominant={roof.dominant}, "
+              f"compute={roof.compute_s*1e3:.2f}ms "
+              f"mem={roof.memory_s*1e3:.2f}ms coll={roof.collective_s*1e3:.2f}ms",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--step", default="auto",
+                    help="auto|train|prefill|decode|fedsikd")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    results = json.loads(out.read_text()) if out.exists() else []
+    done = {(r["arch"], r["shape"], r["step"], r["mesh"]) for r in results}
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    combos = []
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            combos.append((a, s))
+
+    for mesh in meshes:
+        mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+        for arch, shape in combos:
+            reason = shape_skip_reason(arch, shape)
+            kind = INPUT_SHAPES[shape]["kind"] if args.step == "auto" else args.step
+            if (arch, shape, kind, mesh_name) in done:
+                continue
+            if reason:
+                print(f"  SKIP {arch} x {shape}: {reason}", flush=True)
+                results.append({"arch": arch, "shape": shape, "step": kind,
+                                "mesh": mesh_name, "skipped": reason})
+                out.write_text(json.dumps(results, indent=1))
+                continue
+            try:
+                with mesh:
+                    r = lower_one(arch, shape, mesh, step_kind=args.step)
+                results.append(r)
+            except Exception as e:
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape, "step": kind,
+                                "mesh": mesh_name, "error": str(e)[:2000]})
+            out.write_text(json.dumps(results, indent=1))
+    n_err = sum(1 for r in results if "error" in r)
+    print(f"dry-run complete: {len(results)} records, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

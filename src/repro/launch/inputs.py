@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input x input-shape — weak-type
+correct, shardable, never allocating (the dry-run's contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape_name: str) -> dict:
+    """Token/label/prefix SDS for train or prefill shapes."""
+    spec = INPUT_SHAPES[shape_name]
+    B, S = spec["global_batch"], spec["seq_len"]
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "audio":
+        F = S // cfg.frame_ratio
+        batch = {"frames": _sds((B, F, cfg.d_model), dt),
+                 "tokens": _sds((B, S), jnp.int32)}
+        if spec["kind"] == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return batch
+    if cfg.arch_type == "vlm":
+        P_ = cfg.prefix_len
+        batch = {"prefix": _sds((B, P_, cfg.d_model), dt),
+                 "tokens": _sds((B, S - P_), jnp.int32)}
+        if spec["kind"] == "train":
+            batch["labels"] = _sds((B, S - P_), jnp.int32)
+        return batch
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if spec["kind"] == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def cache_specs_for(cfg: ModelConfig, shape_name: str) -> dict:
+    """Decode-cache SDS via eval_shape over init_cache (no allocation)."""
+    spec = INPUT_SHAPES[shape_name]
+    B, S = spec["global_batch"], spec["seq_len"]
+    if cfg.arch_type == "audio":
+        F = S // cfg.frame_ratio
+        return jax.eval_shape(lambda: ed.init_cache(cfg, B, S, F))
+    return jax.eval_shape(lambda: tf.init_cache(cfg, B, S))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """All inputs for the step this shape lowers (see dryrun.py)."""
+    spec = INPUT_SHAPES[shape_name]
+    if spec["kind"] in ("train", "prefill"):
+        return {"batch": batch_specs_for(cfg, shape_name)}
+    B = spec["global_batch"]
+    return {
+        "cache": cache_specs_for(cfg, shape_name),
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }

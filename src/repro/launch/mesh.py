@@ -1,0 +1,29 @@
+"""Production mesh construction (TPU v5e pods; CPU placeholder devices for
+the dry-run).  A FUNCTION, not a module constant — importing this module must
+never touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                 # 256 chips
+MULTI_POD = (2, 16, 16)               # 2 pods x 256 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard batch/clients (and FSDP params)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def axis_size(mesh, names) -> int:
+    s = 1
+    for n in (names if isinstance(names, (tuple, list)) else (names,)):
+        s *= mesh.shape[n]
+    return s

@@ -1,0 +1,173 @@
+"""Path-based sharding rules mapping param/cache/batch pytrees to
+PartitionSpecs on the production mesh.
+
+Conventions (DESIGN.md §5):
+  - batch / clients  -> dp axes ("pod","data")
+  - tensor parallel  -> "model": attention heads (flattened H*hd), FFN hidden,
+    MoE experts, vocab
+  - FSDP (big archs) -> additionally shard a param dim over the dp axes
+Every candidate axis is divisibility-checked against the mesh; a
+non-divisible axis is dropped (replicated) rather than padded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, dp_axes
+
+# Params above this additionally shard over dp (ZeRO-style).  Raised from
+# 8e9 after §Perf hillclimb B: under scan-over-layers XLA hoists the FSDP
+# param all-gathers out of the loop (stacked-weight gather), so 8-10B models
+# that fit TP-only (glm4-9b: 1.2GB/chip params + 4.7GB Adam) pay -37%/-75%/
+# -81% compute/memory/collective for nothing.  236B+ models still need FSDP.
+FSDP_THRESHOLD = 30_000_000_000
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    if axes is None:
+        return True
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _spec(mesh, shape, axes_per_dim):
+    """Build a PartitionSpec, dropping any axis that doesn't divide."""
+    cleaned = []
+    for dim, ax in zip(shape, axes_per_dim):
+        cleaned.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*cleaned)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh, *,
+                fsdp: Optional[bool] = None):
+    """PartitionSpec pytree for LM params (shapes from jax.eval_shape)."""
+    if fsdp is None:
+        fsdp = cfg.param_count() > FSDP_THRESHOLD
+    dp = tuple(dp_axes(mesh))
+    F = dp if fsdp else None
+    M = "model"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        s = leaf.shape
+        n = len(s)
+        last = name.rsplit("/", 1)[-1]
+
+        if last in ("embed",):                       # (V, d)
+            return _spec(mesh, s, [M, F])
+        if last == "lm_head":                        # (d, V)
+            return _spec(mesh, s, [F, M])
+        if last in ("scale", "b", "bq", "bk", "bv", "w0", "dt_bias", "A_log",
+                    "D", "u", "mu_base", "mu", "cm_mu_k", "cm_mu_r",
+                    "conv_b"):
+            return P(*([None] * n))
+        # stacked layer params: leading L (or (G,E) for hybrid groups)
+        lead = [None] * (n - 2)
+        if last in ("wq", "wk", "wv", "w_gate", "w_up", "cm_k", "q_b", "k_b",
+                    "v_b", "in_proj", "wr", "wg"):
+            return _spec(mesh, s, lead + [F, M])
+        if last in ("wo", "w_down", "cm_v", "out_proj"):
+            return _spec(mesh, s, lead + [M, F])
+        if last in ("q_a", "kv_a", "w_lora_a", "mix_lora_a", "cm_r"):
+            return _spec(mesh, s, lead + [F, None])
+        if last in ("w_lora_b",):
+            return _spec(mesh, s, lead + [None, F])
+        if last == "router":                         # (L, d, E)
+            return _spec(mesh, s, lead + [None, M])
+        if last == "w_in" and n >= 4:                # (L, E, d, f)
+            return _spec(mesh, s, [None] * (n - 3) + [M, F, None])
+        if last == "w_out" and n >= 4:               # (L, E, f, d)
+            return _spec(mesh, s, [None] * (n - 3) + [M, None, F])
+        if last == "conv_w":                         # (L, K, conv_dim)
+            return _spec(mesh, s, lead + [None, M])
+        if last == "mix_lora_b":                     # (L, 5, R, d)
+            return P(*([None] * n))
+        return P(*([None] * n))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh):
+    """Batch inputs: shard the leading batch dim over dp axes."""
+    dp = tuple(dp_axes(mesh))
+
+    def rule(path, leaf):
+        dims = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and _fits(leaf.shape[0], mesh, dp):
+            dims[0] = dp
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh):
+    """Decode caches: batch on dp; heads/latent on model when divisible.
+
+    Layouts: attn k/v (L,B,S,KVH,hd); MLA c_kv (L,B,S,r) / k_rope (L,B,S,rd);
+    mamba conv (L,B,K-1,conv) / ssm (L,B,H,dk,dv); rwkv tm/cm_prev (L,B,1,d) /
+    state (L,B,H,dk,dv); hybrid attn (G,B,S,KVH,hd); encdec memory (B,F,d)."""
+    dp = tuple(dp_axes(mesh))
+
+    def rule(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        s = leaf.shape
+        n = len(s)
+        if name == "memory":                          # (B,F,d)
+            return _spec(mesh, s, [dp, None, "model"])
+        if n == 5:                                    # (L,B,S,KVH,hd) or states
+            if name in ("k", "v", "attn_k", "attn_v"):
+                kvh_ok = _fits(s[3], mesh, "model")
+                return _spec(mesh, s,
+                             [None, dp, None, "model" if kvh_ok else None,
+                              None if kvh_ok else "model"])
+            if name in ("ssm", "state"):              # (L,B,H,dk,dv)
+                return _spec(mesh, s, [None, dp, "model", None, None])
+        if n == 4:
+            if name == "c_kv":                        # (L,B,S,r)
+                return _spec(mesh, s, [None, dp, None, "model"])
+            if name == "k_rope":
+                return _spec(mesh, s, [None, dp, None, None])
+            if name in ("conv",):                     # (L,B,K-1,conv_dim)
+                return _spec(mesh, s, [None, dp, None, "model"])
+            if name in ("tm_prev", "cm_prev"):        # (L,B,1,d)
+                return _spec(mesh, s, [None, dp, None, "model"])
+        dims = [None] * n
+        if n >= 2 and _fits(s[1], mesh, dp):
+            dims[1] = dp
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def opt_specs(param_spec_tree):
+    """AdamState(mu, nu, count): moments mirror param specs, count replicated."""
+    from repro.optim.optimizers import AdamState
+
+    return AdamState(mu=param_spec_tree, nu=param_spec_tree, count=P())
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def check_divisible(shape_tree, spec_tree, mesh) -> list[str]:
+    """Sanity: every sharded dim divides; returns offending paths (empty=ok)."""
+    bad = []
+    shapes = jax.tree_util.tree_flatten_with_path(shape_tree)[0]
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(shapes, specs):
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is not None and dim % axis_size(mesh, ax) != 0:
+                bad.append(_path_str(path))
+    return bad

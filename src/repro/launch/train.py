@@ -1,0 +1,125 @@
+"""Training launcher.
+
+Two modes:
+  fl   — the paper's federated pipeline on the CNN models (default):
+         PYTHONPATH=src python -m repro.launch.train fl --dataset mnist \
+             --algorithm fedsikd --alpha 0.5 --rounds 5 --ckpt out/run
+  lm   — LM training loop on an assigned architecture (smoke or full cfg),
+         single-host data parallel, with checkpoint/resume:
+         PYTHONPATH=src python -m repro.launch.train lm --arch qwen2.5-3b \
+             --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data.pipeline import token_stream
+from repro.data.synthetic import load_dataset
+from repro.fed.rounds import FedConfig, run_federated
+from repro.launch import steps as st
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+
+def run_fl(args):
+    ds = load_dataset(args.dataset, small=args.small)
+    cfg = FedConfig(algorithm=args.algorithm, num_clients=args.clients,
+                    alpha=args.alpha, rounds=args.rounds,
+                    local_epochs=args.local_epochs, seed=args.seed,
+                    num_clusters=args.clusters)
+    h = run_federated(ds, cfg, progress=True)
+    print(f"final: acc={h['acc'][-1]:.4f} loss={h['loss'][-1]:.4f}")
+    if args.ckpt:
+        Path(args.ckpt).mkdir(parents=True, exist_ok=True)
+        import json
+        (Path(args.ckpt) / "history.json").write_text(json.dumps(h))
+    return h
+
+
+def run_lm(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+    step, opt = st.make_train_step(cfg, lr=args.lr)
+    init = ed.init_encdec if cfg.arch_type == "audio" else tf.init_lm
+    key = jax.random.PRNGKey(args.seed)
+    params = init(key, cfg)
+    opt_state = opt.init(params)
+    start = 0
+    ck = Path(args.ckpt) / "lm.npz" if args.ckpt else None
+    if ck and ck.exists():
+        like = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        params = ckpt.restore(ck, like)
+        start = ckpt.load_meta(ck)["step"]
+        print(f"resumed from step {start}")
+    jstep = jax.jit(step)
+    t0 = time.time()
+    for i, b in enumerate(token_stream(cfg.vocab_size, args.batch, args.seq,
+                                       seed=args.seed + start,
+                                       num_batches=args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.arch_type == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, max(args.seq // 4, 4), cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        if cfg.prefix_len:
+            batch["prefix"] = jnp.zeros(
+                (args.batch, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))
+            batch["tokens"] = batch["tokens"][:, :-cfg.prefix_len]
+            batch["labels"] = batch["labels"][:, :-cfg.prefix_len]
+        params, opt_state, loss = jstep(params, opt_state, batch)
+        if (i + 1) % args.log_every == 0:
+            print(f"step {start+i+1}: loss={float(loss):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if ck:
+        ck.parent.mkdir(parents=True, exist_ok=True)
+        ckpt.save(ck, params, step=start + args.steps)
+        print(f"checkpointed at step {start + args.steps}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    fl = sub.add_parser("fl")
+    fl.add_argument("--dataset", default="mnist")
+    fl.add_argument("--algorithm", default="fedsikd")
+    fl.add_argument("--alpha", type=float, default=0.5)
+    fl.add_argument("--rounds", type=int, default=5)
+    fl.add_argument("--clients", type=int, default=16)
+    fl.add_argument("--local-epochs", type=int, default=2)
+    fl.add_argument("--clusters", type=int, default=None)
+    fl.add_argument("--small", action="store_true")
+    fl.add_argument("--seed", type=int, default=0)
+    fl.add_argument("--ckpt", default=None)
+
+    lm = sub.add_parser("lm")
+    lm.add_argument("--arch", required=True)
+    lm.add_argument("--smoke", action="store_true")
+    lm.add_argument("--layers", type=int, default=None)
+    lm.add_argument("--steps", type=int, default=20)
+    lm.add_argument("--batch", type=int, default=4)
+    lm.add_argument("--seq", type=int, default=128)
+    lm.add_argument("--lr", type=float, default=1e-3)
+    lm.add_argument("--seed", type=int, default=0)
+    lm.add_argument("--log-every", type=int, default=5)
+    lm.add_argument("--ckpt", default=None)
+
+    args = ap.parse_args()
+    if args.mode == "fl":
+        run_fl(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

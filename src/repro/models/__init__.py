@@ -1,0 +1,3 @@
+from repro.models import chunked_scan, cnn, encdec, layers, rwkv, ssm, transformer
+
+__all__ = ["chunked_scan", "cnn", "encdec", "layers", "rwkv", "ssm", "transformer"]

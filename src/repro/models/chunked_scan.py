@@ -1,0 +1,147 @@
+"""Chunk-parallel decayed linear-attention scan — the shared compute core of
+Mamba2 (SSD) and RWKV6 (Finch).
+
+Recurrence (per batch, head):
+    S_t = diag(a_t) S_{t-1} + k_t (x) v_t          S in R^{dk x dv}
+    y_t = q_t . S_t                                (mamba convention), or
+    y_t = q_t . (S_{t-1} + diag(u) k_t (x) v_t)    (rwkv bonus convention)
+
+TPU adaptation (DESIGN.md §3): instead of a length-T sequential scan we use
+the chunked form — intra-chunk terms become two (c x c) masked matmuls on the
+MXU, inter-chunk state flows through a lax.scan over T/c chunks.  The decay
+enters separably: score_ij = (q_i * e^{L_i}) . (k_j * e^{-L_j}) with L the
+inclusive cumulative log-decay.  To keep e^{-L_j} inside f32 range we clamp
+the per-step log-decay at LOG_DECAY_FLOOR; the SAME clamp is applied in the
+single-step decode recurrence, so chunked and sequential paths agree exactly
+(contributions below e^{LOG_DECAY_FLOOR*chunk} are sub-denormal anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_FLOOR = -2.0
+DEFAULT_CHUNK = 32
+
+
+def clamp_log_decay(log_a: jax.Array) -> jax.Array:
+    return jnp.clip(log_a, LOG_DECAY_FLOOR, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bonus_mode"))
+def chunked_decay_scan(
+    q: jax.Array,        # (B,H,T,dk)
+    k: jax.Array,        # (B,H,T,dk)
+    v: jax.Array,        # (B,H,T,dv)
+    log_a: jax.Array,    # (B,H,T,dk) or (B,H,T,1) — log decay in [-inf, 0]
+    *,
+    u: jax.Array | None = None,   # (H,dk) rwkv bonus; required if bonus_mode
+    init_state: jax.Array | None = None,  # (B,H,dk,dv)
+    chunk: int = DEFAULT_CHUNK,
+    bonus_mode: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,H,T,dv), final_state (B,H,dk,dv)).  T % chunk == 0."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    orig_T = T
+    if T % chunk:
+        # zero-pad to a chunk multiple: padded k/v contribute nothing to the
+        # state (k=0) and padded y rows are sliced off; log_a pads with 0
+        # (decay 1) so the final state is untouched.
+        pad = chunk - T % chunk
+        pc = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, pc) for t in (q, k, v))
+        log_a = jnp.pad(log_a, pc)
+        T += pad
+    n = T // chunk
+    la = clamp_log_decay(log_a.astype(jnp.float32))
+    if la.shape[-1] == 1:
+        la = jnp.broadcast_to(la, (B, H, T, dk))
+
+    qf = q.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    vf = v.astype(jnp.float32).reshape(B, H, n, chunk, dv)
+    laf = la.reshape(B, H, n, chunk, dk)
+    L = jnp.cumsum(laf, axis=-2)                       # inclusive cum log-decay
+
+    # move chunk axis first for scan: (n, B, H, c, *)
+    qf, kf, vf, L = (jnp.moveaxis(t, 2, 0) for t in (qf, kf, vf, L))
+    if bonus_mode:
+        assert u is not None
+        # exclusive decay for S0 / past terms
+        q_dec = qf * jnp.exp(L - jnp.moveaxis(laf, 2, 0))    # q_i * e^{L'_i}
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict past
+    else:
+        q_dec = qf * jnp.exp(L)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))        # include current
+    k_dec = kf * jnp.exp(-L)                                   # k_j * e^{-L_j}
+    k_rem = kf * jnp.exp(L[:, :, :, -1:, :] - L)               # decay to chunk end
+
+    def body(S, ch):
+        qd, kd, kr, vv, qq, kk, ll = ch
+        # inter-chunk: contribution of carried state
+        y = jnp.einsum("bhck,bhkv->bhcv", qd, S)
+        # intra-chunk: masked (c,c) attention with relative decay
+        scores = jnp.einsum("bhik,bhjk->bhij", qd, kd)
+        scores = jnp.where(tri, scores, 0.0)
+        y = y + jnp.einsum("bhij,bhjv->bhiv", scores, vv)
+        if bonus_mode:
+            # current-token bonus: y_i += (q_i . (u * k_i)) v_i
+            bonus = jnp.einsum("bhck,bhck->bhc",
+                               qq * u[None, :, None, :].astype(jnp.float32), kk)
+            y = y + bonus[..., None] * vv
+        # state update: decay-to-end of S plus decayed outer products
+        S_new = S * jnp.exp(ll[:, :, -1, :])[..., None] \
+            + jnp.einsum("bhck,bhcv->bhkv", kr, vv)
+        return S_new, y
+
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    Sf, ys = jax.lax.scan(body, S0, (q_dec, k_dec, k_rem, vf, qf, kf, L))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, dv)[:, :, :orig_T]
+    return y.astype(v.dtype), Sf
+
+
+def decay_scan_step(
+    q: jax.Array,        # (B,H,dk)
+    k: jax.Array,        # (B,H,dk)
+    v: jax.Array,        # (B,H,dv)
+    log_a: jax.Array,    # (B,H,dk) or (B,H,1)
+    state: jax.Array,    # (B,H,dk,dv)
+    *,
+    u: jax.Array | None = None,
+    bonus_mode: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence for decode; exact match of the chunked path."""
+    a = jnp.exp(clamp_log_decay(log_a.astype(jnp.float32)))
+    if a.shape[-1] == 1:
+        a = jnp.broadcast_to(a, q.shape)
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    sf = state.astype(jnp.float32)
+    if bonus_mode:
+        eff = sf + u[None, :, :, None].astype(jnp.float32) * kv
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), eff)
+        new = a[..., None] * sf + kv
+    else:
+        new = a[..., None] * sf + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new)
+    return y.astype(v.dtype), new.astype(state.dtype)
+
+
+def reference_scan(q, k, v, log_a, *, u=None, init_state=None, bonus_mode=False):
+    """O(T) sequential oracle used by tests (and by nothing else)."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    S = (jnp.zeros((B, H, dk, dv), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    la = clamp_log_decay(log_a.astype(jnp.float32))
+    if la.shape[-1] == 1:
+        la = jnp.broadcast_to(la, q.shape)
+    ys = []
+    for t in range(T):
+        y, S = decay_scan_step(q[:, :, t], k[:, :, t], v[:, :, t], la[:, :, t],
+                               S, u=u, bonus_mode=bonus_mode)
+        ys.append(y)
+    return jnp.stack(ys, axis=2).astype(v.dtype), S

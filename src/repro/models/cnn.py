@@ -1,0 +1,119 @@
+"""The paper's CNN teacher/student models (Tables III and IV).
+
+MNIST (Table III):
+  Teacher: Conv2D 32-64-64-64, all 3x3 stride 2 'same', Flatten, Dense 10.
+  Student: Conv2D 32-16-16-64 (same geometry), Flatten, Dense 10.
+HAR (Table IV):
+  Teacher: Conv1D 128 k3 s2 'same' + LeakyReLU(0.2) + MaxPool1D(2, s1 'same')
+           + Dropout 0.25, Conv1D 256 k3 s2 'same', Flatten, Dense 128 relu,
+           Dense 6.
+  Student: first Conv1D has 64 filters instead of 128; rest identical.
+
+Dropout is disabled at evaluation (pass ``train=False``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, shape):  # HWIO / WIO
+    fan_in = 1
+    for s in shape[:-1]:
+        fan_in *= s
+    return (jnp.sqrt(2.0 / fan_in)
+            * jax.random.normal(key, shape, jnp.float32))
+
+
+def _dense_init(key, shape):
+    return (jnp.sqrt(2.0 / shape[0])
+            * jax.random.normal(key, shape, jnp.float32))
+
+
+def _conv2d(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _conv1d(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return y + b
+
+
+def _maxpool1d_same(x, pool=2, stride=1):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, pool, 1), (1, stride, 1), "SAME")
+
+
+# ------------------------------------------------------------------- MNIST
+def init_mnist_cnn(key, *, student: bool, num_classes: int = 10,
+                   input_hw: tuple[int, int] = (28, 28)):
+    filters = [32, 16, 16, 64] if student else [32, 64, 64, 64]
+    ks = jax.random.split(key, len(filters) + 1)
+    p = {"conv": [], "head": None}
+    cin = 1
+    hw = input_hw[0]
+    for i, f in enumerate(filters):
+        p["conv"].append({"w": _conv_init(ks[i], (3, 3, cin, f)),
+                          "b": jnp.zeros((f,))})
+        cin = f
+        hw = (hw + 1) // 2                           # stride-2 'same'
+    flat = hw * hw * filters[-1]
+    p["head"] = {"w": _dense_init(ks[-1], (flat, num_classes)),
+                 "b": jnp.zeros((num_classes,))}
+    return p
+
+
+def mnist_cnn_fwd(p, x, *, train: bool = False, key=None):
+    del train, key                                   # no dropout in Table III
+    h = x.astype(jnp.float32)
+    for c in p["conv"]:
+        h = jax.nn.relu(_conv2d(h, c["w"], c["b"], 2))
+    h = h.reshape(h.shape[0], -1)
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+# --------------------------------------------------------------------- HAR
+def init_har_cnn(key, *, student: bool, num_classes: int = 6,
+                 input_len: int = 561):
+    f1 = 64 if student else 128
+    ks = jax.random.split(key, 4)
+    l1 = (input_len + 1) // 2
+    l2 = (l1 + 1) // 2
+    return {
+        "conv1": {"w": _conv_init(ks[0], (3, 1, f1)), "b": jnp.zeros((f1,))},
+        "conv2": {"w": _conv_init(ks[1], (3, f1, 256)), "b": jnp.zeros((256,))},
+        "fc1": {"w": _dense_init(ks[2], (l2 * 256, 128)), "b": jnp.zeros((128,))},
+        "fc2": {"w": _dense_init(ks[3], (128, num_classes)),
+                "b": jnp.zeros((num_classes,))},
+    }
+
+
+def har_cnn_fwd(p, x, *, train: bool = False, key=None):
+    h = x.astype(jnp.float32)                        # (B, 561, 1)
+    h = _conv1d(h, p["conv1"]["w"], p["conv1"]["b"], 2)
+    h = jax.nn.leaky_relu(h, 0.2)
+    h = _maxpool1d_same(h, 2, 1)
+    if train and key is not None:                    # Dropout 0.25
+        keep = jax.random.bernoulli(key, 0.75, h.shape)
+        h = jnp.where(keep, h / 0.75, 0.0)
+    h = _conv1d(h, p["conv2"]["w"], p["conv2"]["b"], 2)
+    h = jax.nn.relu(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1"]["w"] + p["fc1"]["b"])
+    return h @ p["fc2"]["w"] + p["fc2"]["b"]
+
+
+def make_model(dataset: str, *, student: bool):
+    """(init_fn(key), fwd_fn(params, x, train, key)) for the paper's models."""
+    if dataset == "mnist":
+        return (lambda k: init_mnist_cnn(k, student=student),
+                mnist_cnn_fwd)
+    if dataset == "har":
+        return (lambda k: init_har_cnn(k, student=student),
+                har_cnn_fwd)
+    raise ValueError(dataset)

@@ -1,0 +1,151 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear attention (time-mix) +
+squared-ReLU channel-mix, with token-shift data-dependent LoRA interpolation.
+
+Time-mix recurrence per head (dk = dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)        (bonus convention)
+with w_t = exp(-exp(w0 + lora_w(x-shift))) — data-dependent decay.  Uses the
+shared chunk-parallel scan (bonus_mode=True).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import chunked_scan as cs
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+_MIX_RANK = 32
+_DECAY_RANK = 64
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+def _heads(cfg: ModelConfig):
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "ln1": init_rmsnorm(d, dt),
+        "ln2": init_rmsnorm(d, dt),
+        # --- time mix ---
+        "mu_base": jnp.zeros((d,), dt),
+        "mix_lora_a": dense_init(next(ks), (d, _MIX_RANK * 5), dt),
+        "mix_lora_b": dense_init(next(ks), (5, _MIX_RANK, d), dt, scale=0.01),
+        "mu": jnp.zeros((5, d), dt),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(next(ks), (d, _DECAY_RANK), dt),
+        "w_lora_b": dense_init(next(ks), (_DECAY_RANK, d), dt, scale=0.01),
+        "wr": dense_init(next(ks), (d, d), dt),
+        "wk": dense_init(next(ks), (d, d), dt),
+        "wv": dense_init(next(ks), (d, d), dt),
+        "wg": dense_init(next(ks), (d, d), dt),
+        "wo": dense_init(next(ks), (d, d), dt),
+        "u": 0.5 * jnp.ones((H, hd), jnp.float32),           # bonus
+        "ln_x": init_rmsnorm(d, dt),                         # per-head group norm
+        # --- channel mix ---
+        "cm_mu_k": jnp.zeros((d,), dt),
+        "cm_mu_r": jnp.zeros((d,), dt),
+        "cm_k": dense_init(next(ks), (d, cfg.d_ff), dt),
+        "cm_v": dense_init(next(ks), (cfg.d_ff, d), dt),
+        "cm_r": dense_init(next(ks), (d, d), dt),
+    }
+    return p
+
+
+def _token_shift(x, prev):
+    """x_{t-1} stream; ``prev`` (B,1,d) is the carry from the previous chunk."""
+    return jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Finch data-dependent interpolation for the 5 streams r,k,v,w,g."""
+    diff = xs - x
+    base = x + diff * p["mu_base"]
+    lora = jnp.tanh(base @ p["mix_lora_a"])                     # (B,T,5R)
+    B_, T = x.shape[:2]
+    lora = lora.reshape(B_, T, 5, _MIX_RANK)
+    adj = jnp.einsum("btfr,frd->btfd", lora, p["mix_lora_b"])   # (B,T,5,d)
+    mixed = x[:, :, None, :] + diff[:, :, None, :] * (p["mu"] + adj)
+    return {k: mixed[:, :, i, :] for i, k in enumerate(_MIX_KEYS)}
+
+
+def _time_mix_qkvw(p, cfg, x, xs):
+    H, hd = _heads(cfg)
+    B_, T, d = x.shape
+    m = _ddlerp(p, x, xs)
+    r = (m["r"] @ p["wr"]).reshape(B_, T, H, hd)
+    k = (m["k"] @ p["wk"]).reshape(B_, T, H, hd)
+    v = (m["v"] @ p["wv"]).reshape(B_, T, H, hd)
+    g = jax.nn.silu(m["g"] @ p["wg"])
+    w_raw = p["w0"] + jnp.tanh(m["w"] @ p["w_lora_a"]) @ p["w_lora_b"]
+    log_a = (-jnp.exp(w_raw.astype(jnp.float32))).reshape(B_, T, H, hd)
+    to_bh = lambda t: jnp.moveaxis(t, 2, 1)
+    return to_bh(r), to_bh(k), to_bh(v), to_bh(log_a), g
+
+
+def _out(p, cfg, y_bhtd, g):
+    """(B,H,T,hd) -> per-head norm -> gate -> (B,T,d) projection."""
+    H, hd = _heads(cfg)
+    B_, _, T, _ = y_bhtd.shape
+    y = jnp.moveaxis(y_bhtd, 1, 2).reshape(B_, T, H * hd)
+    y = rmsnorm(p["ln_x"], y, cfg.rms_eps)
+    return (y * g) @ p["wo"]
+
+
+def time_mix_fwd(p, cfg: ModelConfig, x, prev, *, state=None,
+                 chunk: int = cs.DEFAULT_CHUNK):
+    r, k, v, log_a, g = _time_mix_qkvw(p, cfg, x, _token_shift(x, prev))
+    y, S = cs.chunked_decay_scan(r, k, v, log_a, u=p["u"], init_state=state,
+                                 chunk=chunk, bonus_mode=True)
+    return _out(p, cfg, y, g), S
+
+
+def channel_mix_fwd(p, cfg: ModelConfig, x, prev):
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["cm_mu_k"]
+    xr = x + (xs - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+
+
+def rwkv6_block_fwd(p, cfg: ModelConfig, x, *, tm_prev, cm_prev, state=None,
+                    chunk: int = cs.DEFAULT_CHUNK):
+    """Full pre-LN block:  x += TM(LN1(x));  x += CM(LN2(x)).
+    Token-shift carries hold the LAST NORMED token so decode matches exactly."""
+    xn = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    tm, S = time_mix_fwd(p, cfg, xn, tm_prev, state=state, chunk=chunk)
+    h = x + tm
+    hn = rmsnorm(p["ln2"], h, cfg.rms_eps)
+    cm = channel_mix_fwd(p, cfg, hn, cm_prev)
+    carries = {"tm_prev": xn[:, -1:, :], "cm_prev": hn[:, -1:, :], "state": S}
+    return h + cm, carries
+
+
+def init_rwkv6_cache(cfg: ModelConfig, batch: int, dtype):
+    H, hd = _heads(cfg)
+    return {
+        "tm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def rwkv6_block_decode(p, cfg: ModelConfig, x, cache):
+    """One-token step: identical math via decay_scan_step."""
+    xn = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    r, k, v, log_a, g = _time_mix_qkvw(p, cfg, xn, cache["tm_prev"])
+    y, S = cs.decay_scan_step(r[:, :, 0], k[:, :, 0], v[:, :, 0], log_a[:, :, 0],
+                              cache["state"], u=p["u"], bonus_mode=True)
+    tm = _out(p, cfg, y[:, :, None, :], g)
+    h = x + tm
+    hn = rmsnorm(p["ln2"], h, cfg.rms_eps)
+    cm = channel_mix_fwd(p, cfg, hn, cache["cm_prev"])
+    new = {"tm_prev": xn, "cm_prev": hn, "state": S}
+    return h + cm, new

@@ -1,0 +1,116 @@
+"""Mamba2 (SSD) block — used by zamba2 (hybrid) and available standalone.
+
+State-space recurrence per head:  h_t = exp(A*dt_t) h_{t-1} + dt_t B_t (x) x_t,
+y_t = C_t . h_t + D x_t — computed with the chunk-parallel scan in
+``chunked_scan.py`` (q=C, k=B, v=dt*x, scalar per-head log-decay).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import chunked_scan as cs
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or max(1, d_in // 64)
+    head_p = d_in // heads
+    return d_in, heads, head_p, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, heads, head_p, state = _dims(cfg)
+    conv_dim = d_in + 2 * state
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * state + heads), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "A_log": jnp.zeros((heads,), jnp.float32),           # A = -exp(A_log)
+        "D": jnp.ones((heads,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dt),
+        "out_proj": dense_init(ks[4], (d_in, d), dt),
+    }
+
+
+def _split(p, cfg, x):
+    d_in, heads, head_p, state = _dims(cfg)
+    z, xbc, dt = jnp.split(x @ p["in_proj"], [d_in, 2 * d_in + 2 * state], -1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, cfg, xbc):
+    """Depthwise causal conv, kernel K: y_t = sum_k w_k * x_{t-K+1+k}."""
+    K = cfg.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + xbc.shape[1], :] * p["conv_w"][k] for k in range(K))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _ssd_inputs(p, cfg, xbc_conv, dt_raw):
+    d_in, heads, head_p, state = _dims(cfg)
+    B_, T = xbc_conv.shape[0], xbc_conv.shape[1]
+    xs, Bmat, Cmat = jnp.split(xbc_conv, [d_in, d_in + state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,T,H)
+    log_a = (-dt * jnp.exp(p["A_log"]))[..., None]                       # (B,T,H,1)
+    xh = xs.reshape(B_, T, heads, head_p)
+    v = (xh.astype(jnp.float32) * dt[..., None]).astype(xs.dtype)
+    # B/C shared across heads (ngroups=1)
+    k = jnp.broadcast_to(Bmat[:, :, None, :], (B_, T, heads, state))
+    q = jnp.broadcast_to(Cmat[:, :, None, :], (B_, T, heads, state))
+    to_bh = lambda t: jnp.moveaxis(t, 2, 1)                              # (B,H,T,*)
+    return to_bh(q), to_bh(k), to_bh(v), to_bh(log_a), xh
+
+
+def mamba2_fwd(p, cfg: ModelConfig, x, *, chunk: int = cs.DEFAULT_CHUNK):
+    """x: (B,T,d) -> (B,T,d).  Returns (out, cache) with cache matching
+    ``init_mamba2_cache`` layout (prefill -> decode handoff)."""
+    d_in, heads, head_p, state = _dims(cfg)
+    K = cfg.conv_kernel
+    z, xbc_raw, dt_raw = _split(p, cfg, x)
+    xbc = _causal_conv(p, cfg, xbc_raw)
+    q, k, v, log_a, xh = _ssd_inputs(p, cfg, xbc, dt_raw)
+    y, S = cs.chunked_decay_scan(q, k, v, log_a, chunk=chunk)
+    y = jnp.moveaxis(y, 1, 2)                                            # (B,T,H,hp)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+    # conv tail: last K-1 raw xbc inputs (left-padded with zeros if T < K-1)
+    pad = max(K - 1 - xbc_raw.shape[1], 0)
+    tail = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(K - 1):]
+    cache = {"conv": tail, "ssm": S}
+    return y @ p["out_proj"], cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, heads, head_p, state = _dims(cfg)
+    conv_dim = d_in + 2 * state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, heads, state, head_p), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, cache):
+    """One-token step. x: (B,1,d).  Returns (out (B,1,d), new cache)."""
+    d_in, heads, head_p, state = _dims(cfg)
+    z, xbc, dt_raw = _split(p, cfg, x)
+    # rolling conv buffer
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)            # (B,K,conv)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    q, k, v, log_a, xh = _ssd_inputs(p, cfg, xbc1, dt_raw)
+    y, S = cs.decay_scan_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                              log_a[:, :, 0], cache["ssm"])       # (B,H,hp)
+    y = y[:, None, :, :]                                          # (B,1,H,hp)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+    new_cache = {"conv": hist[:, 1:, :], "ssm": S}
+    return y @ p["out_proj"], new_cache

@@ -1,0 +1,331 @@
+"""Decoder-only language model covering the dense / MoE / SSM / hybrid / VLM
+/ audio-prefix families, with scan-over-layers (small HLO, layer-count
+agnostic), optional remat, a prefill path producing KV caches and a
+one-token decode path.
+
+Layer params are stacked on a leading L axis; ``jax.lax.scan`` consumes them.
+Hybrid (zamba2) uses a group-scan: L = G * attn_every mamba layers with a
+SHARED attention block (one set of weights, per-application KV cache) applied
+after each group.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ly
+from repro.models import rwkv as rk
+from repro.models import ssm as sm
+
+
+# --------------------------------------------------------------------- init
+def _stack_init(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _init_block(key, cfg: ModelConfig):
+    """One decoder block of the arch's family (dense/moe attention blocks)."""
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: dict[str, Any] = {
+        "ln1": ly.init_rmsnorm(cfg.d_model, dt),
+        "ln2": ly.init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.use_mla:
+        p["attn"] = ly.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = ly.init_attention(ks[0], cfg)
+    if cfg.num_experts:
+        p["moe"] = ly.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = ly.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p: dict[str, Any] = {
+        "embed": ly.dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "ln_f": ly.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ly.dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.arch_type == "ssm":          # rwkv6
+        p["layers"] = _stack_init(ks[2], cfg.num_layers,
+                                  lambda k: rk.init_rwkv6(k, cfg))
+    elif cfg.arch_type == "hybrid":     # zamba2: mamba stack + shared attn block
+        assert cfg.attn_every and cfg.num_layers % cfg.attn_every == 0
+        p["layers"] = _stack_init(ks[2], cfg.num_layers,
+                                  lambda k: sm.init_mamba2(k, cfg))
+        p["shared_attn"] = {
+            "ln1": ly.init_rmsnorm(cfg.d_model, dt),
+            "attn": ly.init_attention(ks[3], cfg),
+            "ln2": ly.init_rmsnorm(cfg.d_model, dt),
+            "mlp": ly.init_mlp(ks[4], cfg),
+        }
+    else:                               # dense / moe / vlm / audio-decoder
+        p["layers"] = _stack_init(ks[2], cfg.num_layers,
+                                  lambda k: _init_block(k, cfg))
+    return p
+
+
+# ------------------------------------------------------------------ embed/IO
+def _embed(p, cfg: ModelConfig, batch: dict) -> jax.Array:
+    x = p["embed"][batch["tokens"]]
+    if cfg.prefix_len:
+        prefix = batch["prefix"].astype(x.dtype)        # (B,P,d) stub frontend
+        x = jnp.concatenate([prefix, x], axis=1)
+    return x
+
+
+def _logits(p, cfg: ModelConfig, x) -> jax.Array:
+    x = ly.rmsnorm(p["ln_f"], x, cfg.rms_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ w
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ------------------------------------------------------------------ forward
+def forward(p, cfg: ModelConfig, batch: dict, *, window: int | None = None,
+            return_cache: bool = False, return_hidden: bool = False):
+    """Training/eval/prefill forward.  Returns (logits, aux) or, with
+    ``return_cache``, (logits, cache) where cache matches ``init_cache``
+    layout (sliding-window caches keep the last ``window`` positions, slot
+    order aligned with the rotating decode buffer when T % window == 0)."""
+    x = _embed(p, cfg, batch)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    win = cfg.sliding_window if window is None else window
+
+    def _out(x):
+        """final norm (+ lm head unless return_hidden)."""
+        if return_hidden:
+            return ly.rmsnorm(p["ln_f"], x, cfg.rms_eps)
+        return _logits(p, cfg, x)
+
+    def trim(kv):  # kv: (B, T, KVH, hd) — seq axis 1
+        """Sliding-window caches are ALWAYS window-sized rotating buffers:
+        keep the last `win` keys (slot-aligned when T % win == 0) or pad at
+        the end when T < win (slot p%win == p while p < win)."""
+        if not win:
+            return kv
+        if kv.shape[1] >= win:
+            return kv[:, -win:]
+        pad = [(0, 0)] * kv.ndim
+        pad[1] = (0, win - kv.shape[1])
+        return jnp.pad(kv, pad)
+
+    if cfg.arch_type == "ssm":
+        zero_prev = jnp.zeros((B, 1, cfg.d_model), x.dtype)
+
+        def body(x, lp):
+            out, carries = rk.rwkv6_block_fwd(lp, cfg, x, tm_prev=zero_prev,
+                                              cm_prev=zero_prev)
+            return out, (carries if return_cache else 0.0)
+        x, ys = jax.lax.scan(_maybe_remat(cfg, body), x, p["layers"], unroll=cfg.unroll)
+        if return_cache:
+            return _out(x), ys
+        return _out(x), jnp.float32(0.0)
+
+    if cfg.arch_type == "hybrid":
+        G = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), p["layers"])
+        shared = p["shared_attn"]
+
+        def group(x, gp):
+            def inner(x, lp):
+                out, st = sm.mamba2_fwd(lp, cfg, x)
+                if return_cache:
+                    # final conv window of this layer's input stream is not
+                    # tracked through fwd; recompute cheaply from x tail is
+                    # not exact — prefill instead recomputes the conv tail.
+                    return x + out, st
+                return x + out, 0.0
+            x, sts = jax.lax.scan(inner, x, gp)
+            a, (k, v) = ly.attention_fwd(shared["attn"], cfg,
+                                         ly.rmsnorm(shared["ln1"], x, cfg.rms_eps),
+                                         positions, window=win)
+            x = x + a
+            x = x + ly.mlp_fwd(shared["mlp"], cfg,
+                               ly.rmsnorm(shared["ln2"], x, cfg.rms_eps))
+            ys = (sts, trim(k), trim(v)) if return_cache else 0.0
+            return x, ys
+        x, ys = jax.lax.scan(_maybe_remat(cfg, group), x, stacked, unroll=cfg.unroll)
+        if return_cache:
+            return _out(x), ys
+        return _out(x), jnp.float32(0.0)
+
+    # dense / moe / vlm / audio-decoder
+    def body(x, lp):
+        h = ly.rmsnorm(lp["ln1"], x, cfg.rms_eps)
+        if cfg.use_mla:
+            a, kv = ly.mla_fwd(lp["attn"], cfg, h, positions)
+        else:
+            a, kv = ly.attention_fwd(lp["attn"], cfg, h, positions, window=win)
+        x = x + a
+        h = ly.rmsnorm(lp["ln2"], x, cfg.rms_eps)
+        if cfg.num_experts:
+            m, aux = ly.moe_fwd(lp["moe"], cfg, h)
+        else:
+            m, aux = ly.mlp_fwd(lp["mlp"], cfg, h), jnp.float32(0.0)
+        if return_cache:
+            if cfg.use_mla:
+                aux = {"c_kv": kv[0], "k_rope": kv[1]}
+            else:
+                aux = {"k": trim(kv[0]), "v": trim(kv[1])}
+        return x + m, aux
+
+    x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x, p["layers"], unroll=cfg.unroll)
+    if return_cache:
+        return _out(x), auxs
+    return _out(x), jnp.sum(auxs)
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Decode cache pytree (allocation-free under jax.eval_shape)."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+    if cfg.arch_type == "ssm":
+        one = rk.init_rwkv6_cache(cfg, batch, dt)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), one)
+    if cfg.arch_type == "hybrid":
+        G = cfg.num_layers // cfg.attn_every
+        win = cfg.sliding_window or cache_len
+        S = min(win, cache_len)
+        mam = rk_tree = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(),
+            sm.init_mamba2_cache(cfg, batch, dt))
+        del rk_tree
+        kvh, hd = cfg.num_kv_heads, cfg.hd
+        return {
+            "mamba": mam,
+            "attn_k": jnp.zeros((G, batch, S, kvh, hd), dt),
+            "attn_v": jnp.zeros((G, batch, S, kvh, hd), dt),
+        }
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    S = min(cfg.sliding_window or cache_len, cache_len)
+    if cfg.use_mla:
+        return {
+            "c_kv": jnp.zeros((L, batch, cache_len, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((L, batch, cache_len, cfg.qk_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((L, batch, S, kvh, hd), dt),
+        "v": jnp.zeros((L, batch, S, kvh, hd), dt),
+    }
+
+
+# ------------------------------------------------------------------- decode
+def decode_step(p, cfg: ModelConfig, cache, tokens, pos):
+    """One-token decode.  tokens: (B,1) int32; pos: scalar int32 (current
+    position, == number of tokens already in cache).  Returns (logits, cache)."""
+    x = p["embed"][tokens]
+    B = x.shape[0]
+    win = cfg.sliding_window
+
+    if cfg.arch_type == "ssm":
+        def body(x, sc):
+            lp, c = sc
+            out, nc = rk.rwkv6_block_decode(lp, cfg, x, c)
+            return out, nc
+        x, new = jax.lax.scan(body, x, (p["layers"], cache), unroll=cfg.unroll)
+        return _logits(p, cfg, x), new
+
+    if cfg.arch_type == "hybrid":
+        G = cfg.num_layers // cfg.attn_every
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), p["layers"])
+        mam_stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), cache["mamba"])
+        shared = p["shared_attn"]
+
+        def group(x, sc):
+            gp, mc, ck, cv = sc
+
+            def inner(x, sc2):
+                lp, c = sc2
+                out, nc = sm.mamba2_decode(lp, cfg, x, c)
+                return x + out, nc
+            x, nmc = jax.lax.scan(inner, x, (gp, mc))
+            a, (nk, nv) = ly.attention_decode(
+                shared["attn"], cfg, ly.rmsnorm(shared["ln1"], x, cfg.rms_eps),
+                ck, cv, pos, window=win)
+            x = x + a
+            x = x + ly.mlp_fwd(shared["mlp"], cfg,
+                               ly.rmsnorm(shared["ln2"], x, cfg.rms_eps))
+            return x, (nmc, nk, nv)
+
+        x, (nm, nk, nv) = jax.lax.scan(
+            group, x, (stacked, mam_stacked, cache["attn_k"], cache["attn_v"]))
+        new = {
+            "mamba": jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), nm),
+            "attn_k": nk, "attn_v": nv,
+        }
+        return _logits(p, cfg, x), new
+
+    # dense / moe / vlm
+    def body(x, sc):
+        lp, c = sc
+        h = ly.rmsnorm(lp["ln1"], x, cfg.rms_eps)
+        if cfg.use_mla:
+            a, (nc, nkr) = ly.mla_decode(lp["attn"], cfg, h, c["c_kv"],
+                                         c["k_rope"], pos)
+            newc = {"c_kv": nc, "k_rope": nkr}
+        else:
+            a, (nk, nv) = ly.attention_decode(lp["attn"], cfg, h, c["k"], c["v"],
+                                              pos, window=win)
+            newc = {"k": nk, "v": nv}
+        x = x + a
+        h = ly.rmsnorm(lp["ln2"], x, cfg.rms_eps)
+        if cfg.num_experts:
+            m, _ = ly.moe_fwd(lp["moe"], cfg, h, capacity=h.shape[0])
+        else:
+            m = ly.mlp_fwd(lp["mlp"], cfg, h)
+        return x + m, newc
+
+    x, new = jax.lax.scan(body, x, (p["layers"], cache), unroll=cfg.unroll)
+    return _logits(p, cfg, x), new
+
+
+def prefill(p, cfg: ModelConfig, batch: dict):
+    """Serving prefill: returns (last-token logits (B,V), decode cache).
+
+    The cache layout matches ``init_cache`` so ``decode_step`` continues
+    from it directly."""
+    logits, cache = forward(p, cfg, batch, return_cache=True)
+    if cfg.arch_type == "hybrid":
+        sts, k, v = cache
+        L = cfg.num_layers
+        cache = {
+            "mamba": jax.tree_util.tree_map(
+                lambda a: a.reshape((L,) + a.shape[2:]), sts),
+            "attn_k": k, "attn_v": v,
+        }
+    return logits[:, -1, :], cache
+
+
+# -------------------------------------------------------------------- loss
+def lm_loss(p, cfg: ModelConfig, batch: dict):
+    """Next-token CE (+ MoE aux).  Labels -1 = ignore; prefix positions are
+    automatically ignored (labels only cover the token region)."""
+    logits, aux = forward(p, cfg, batch)
+    if cfg.prefix_len:
+        logits = logits[:, cfg.prefix_len:, :]
+    labels = batch["labels"]
+    logf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logf, axis=-1)
+    picked = jnp.take_along_axis(logf, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - picked) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    cosine_schedule,
+    fedprox_penalty,
+    sgd,
+)
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "sgd", "cosine_schedule", "fedprox_penalty"]

@@ -1,0 +1,157 @@
+"""Core FedSiKD library: stats, clustering, aggregation, distillation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import distill, hierarchical, kmeans, stats
+
+
+# ------------------------------------------------------------------- stats
+def test_stats_match_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(2.0, 3.0, size=(500, 7)).astype(np.float32)
+    s = stats.compute_stats(x)
+    np.testing.assert_allclose(s.mean, x.mean(0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s.std, x.std(0), rtol=1e-4, atol=1e-4)
+    ref_skew = ((x - x.mean(0)) ** 3).mean(0) / (x.std(0) ** 3)
+    np.testing.assert_allclose(s.skewness, ref_skew, rtol=1e-3, atol=1e-3)
+
+
+def test_stats_multi_axis_images():
+    x = np.random.default_rng(1).normal(size=(50, 8, 8)).astype(np.float32)
+    s = stats.compute_stats(x)          # feature axis = last
+    assert s.mean.shape == (8,)
+    np.testing.assert_allclose(s.mean, x.mean((0, 1)), rtol=1e-5, atol=1e-5)
+
+
+def test_privatize_noise_and_identity():
+    s = stats.compute_stats(np.ones((10, 4), np.float32))
+    same = stats.privatize(s, noise_multiplier=0.0)
+    assert same is s
+    noisy = stats.privatize(s, noise_multiplier=0.5, key=jax.random.PRNGKey(0))
+    assert not np.allclose(noisy.mean, s.mean)
+    with pytest.raises(ValueError):
+        stats.privatize(s, noise_multiplier=0.5)
+
+
+def test_label_histogram():
+    h = stats.label_histogram(jnp.array([0, 0, 1, 3]), 4)
+    np.testing.assert_allclose(h, [0.5, 0.25, 0.0, 0.25])
+
+
+# ------------------------------------------------------------------ kmeans
+def test_kmeans_separates_blobs():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.3, (30, 5))
+    b = rng.normal(5, 0.3, (30, 5))
+    x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    res = kmeans.kmeans(jax.random.PRNGKey(0), x, 2)
+    la, lb = set(np.asarray(res.assignments[:30])), set(np.asarray(res.assignments[30:]))
+    assert la.isdisjoint(lb) and len(la) == 1 and len(lb) == 1
+
+
+def test_quality_metrics_prefer_true_k():
+    rng = np.random.default_rng(1)
+    blobs = [rng.normal(4 * i, 0.25, (20, 4)) for i in range(3)]
+    x = jnp.asarray(np.concatenate(blobs), jnp.float32)
+    k, table = kmeans.select_k(jax.random.PRNGKey(0), x, 2, 6)
+    assert k == 3, table
+    assert table[3]["silhouette"] > table[5]["silhouette"]
+    assert table[3]["davies_bouldin"] < table[5]["davies_bouldin"]
+
+
+def test_silhouette_bounds():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(24, 3)), jnp.float32)
+    res = kmeans.kmeans(jax.random.PRNGKey(1), x, 4)
+    s = float(kmeans.silhouette_score(x, res.assignments, 4))
+    assert -1.0 <= s <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_kmeans_permutation_invariant_inertia(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(20, 4)).astype(np.float32)
+    perm = rng.permutation(20)
+    r1 = kmeans.kmeans(jax.random.PRNGKey(0), jnp.asarray(x), 3, iters=30)
+    # same points, permuted: k-means++ seeding differs, but inertia of a
+    # CONVERGED solution on identical data should be close
+    r2 = kmeans.kmeans(jax.random.PRNGKey(0), jnp.asarray(x[perm]), 3, iters=30)
+    assert abs(float(r1.inertia) - float(r2.inertia)) / (float(r1.inertia) + 1e-6) < 0.35
+
+
+# ------------------------------------------------------- FL+HC hierarchical
+def test_agglomerative_two_blobs():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([rng.normal(0, 0.1, (10, 3)), rng.normal(9, 0.1, (12, 3))])
+    labels = hierarchical.agglomerative(x, n_clusters=2)
+    assert len(set(labels[:10])) == 1 and len(set(labels[10:])) == 1
+    assert labels[0] != labels[-1]
+
+
+def test_agglomerative_distance_threshold():
+    x = np.array([[0.0], [0.1], [5.0], [5.1]])
+    labels = hierarchical.agglomerative(x, distance_threshold=1.0)
+    assert labels[0] == labels[1] and labels[2] == labels[3]
+    assert labels[0] != labels[2]
+
+
+def test_agglomerative_arg_validation():
+    with pytest.raises(ValueError):
+        hierarchical.agglomerative(np.zeros((3, 2)))
+
+
+# -------------------------------------------------------------- aggregation
+def _tree(v):
+    return {"a": jnp.full((3,), v), "b": [jnp.full((2, 2), 2 * v)]}
+
+
+def test_fedavg_weighted():
+    out = agg.fedavg([_tree(1.0), _tree(3.0)], [1, 3])
+    np.testing.assert_allclose(out["a"], 2.5)      # (1*1 + 3*3)/4
+    np.testing.assert_allclose(out["b"][0], 5.0)
+
+
+def test_hierarchical_average_uniform_vs_size():
+    params = [_tree(0.0), _tree(0.0), _tree(0.0), _tree(4.0)]
+    labels = [0, 0, 0, 1]
+    u = agg.hierarchical_average(params, labels, weighting="uniform")
+    np.testing.assert_allclose(u["a"], 2.0)        # (0 + 4)/2
+    s = agg.hierarchical_average(params, labels, weighting="size")
+    np.testing.assert_allclose(s["a"], 1.0)        # (3*0 + 1*4)/4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=6))
+def test_uniform_average_is_mean(vals):
+    out = agg.uniform_average([_tree(v) for v in vals])
+    np.testing.assert_allclose(out["a"], np.mean(vals), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- distillation
+def test_kl_zero_when_equal():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 9)), jnp.float32)
+    kl = distill.kl_teacher_student(logits, logits, temperature=3.0)
+    assert abs(float(kl)) < 1e-5
+
+
+def test_ce_ignores_padding():
+    logits = jnp.asarray(np.random.default_rng(1).normal(size=(4, 5)), jnp.float32)
+    y = jnp.array([1, 2, -1, -1])
+    ce = distill.softmax_cross_entropy(logits, y)
+    ce2 = distill.softmax_cross_entropy(logits[:2], y[:2])
+    np.testing.assert_allclose(float(ce), float(ce2), rtol=1e-6)
+
+
+def test_distillation_loss_convex_combination():
+    rng = np.random.default_rng(2)
+    s = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    t = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    y = jnp.arange(6) % 8
+    l0, _ = distill.distillation_loss(s, t, y, alpha=0.0)
+    l1, _ = distill.distillation_loss(s, t, y, alpha=1.0)
+    lh, _ = distill.distillation_loss(s, t, y, alpha=0.5)
+    np.testing.assert_allclose(float(lh), 0.5 * (float(l0) + float(l1)), rtol=1e-5)

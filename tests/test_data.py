@@ -1,0 +1,81 @@
+"""Data pipeline: Dirichlet partitioner properties, synthetic twins, batching."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dirichlet import dirichlet_partition, heterogeneity
+from repro.data.pipeline import ClientShard, make_client_shards, token_stream
+from repro.data.synthetic import load_dataset, make_har_twin, make_mnist_twin
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([0.1, 0.5, 2.0]),
+       st.integers(4, 12))
+def test_dirichlet_partition_is_a_partition(seed, alpha, n_clients):
+    labels = np.random.default_rng(seed).integers(0, 10, 800)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=seed,
+                                min_per_client=1)
+    all_idx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(all_idx, np.arange(len(labels)))
+
+
+def test_dirichlet_heterogeneity_monotone_in_alpha():
+    labels = np.random.default_rng(0).integers(0, 10, 5000)
+    h = {}
+    for alpha in (0.1, 1.0, 10.0):
+        parts = dirichlet_partition(labels, 20, alpha, seed=1)
+        h[alpha] = heterogeneity(parts, labels, 10)
+    assert h[0.1] > h[1.0] > h[10.0]
+
+
+def test_min_per_client_respected():
+    labels = np.random.default_rng(2).integers(0, 10, 2000)
+    parts = dirichlet_partition(labels, 10, 0.1, seed=3, min_per_client=8)
+    assert min(len(p) for p in parts) >= 8
+
+
+def test_twins_shapes_and_determinism():
+    a = make_mnist_twin(n_train=200, n_test=50, seed=7)
+    b = make_mnist_twin(n_train=200, n_test=50, seed=7)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    assert a.x_train.shape == (200, 28, 28, 1) and a.num_classes == 10
+    h = make_har_twin(n_train=100, n_test=20, seed=1)
+    assert h.x_train.shape == (100, 561, 1) and h.num_classes == 6
+
+
+def test_load_dataset_small():
+    ds = load_dataset("mnist", small=True)
+    assert len(ds.y_train) == 1500
+    with pytest.raises(ValueError):
+        load_dataset("nope")
+
+
+def test_batches_pad_with_ignore_label():
+    sh = ClientShard(0, np.zeros((10, 3), np.float32), np.arange(10, dtype=np.int32))
+    batches = list(sh.batches(4, epoch=0))
+    assert len(batches) == 3
+    x, y = batches[-1]
+    assert x.shape == (4, 3) and (y == -1).sum() == 2
+
+
+def test_batches_epoch_reshuffles():
+    sh = ClientShard(1, np.arange(20, dtype=np.float32)[:, None], np.arange(20, dtype=np.int32))
+    y0 = np.concatenate([y for _, y in sh.batches(5, epoch=0)])
+    y1 = np.concatenate([y for _, y in sh.batches(5, epoch=1)])
+    assert set(y0) == set(y1) == set(range(20))
+    assert not np.array_equal(y0, y1)
+
+
+def test_make_client_shards_sizes():
+    ds = load_dataset("mnist", small=True)
+    shards = make_client_shards(ds, 8, 0.5, seed=0)
+    assert len(shards) == 8
+    assert sum(s.num_examples for s in shards) == len(ds.y_train)
+
+
+def test_token_stream():
+    bs = list(token_stream(100, 4, 16, num_batches=3))
+    assert len(bs) == 3
+    assert bs[0]["tokens"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(bs[0]["tokens"][:, 1:], bs[0]["labels"][:, :-1])

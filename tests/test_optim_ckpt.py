@@ -1,0 +1,75 @@
+"""Optimizers, schedules, FedProx penalty, checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.optim import adamw, apply_updates, cosine_schedule, fedprox_penalty, sgd
+
+
+def test_sgd_momentum_matches_manual():
+    opt = sgd(0.1, momentum=0.9)
+    p = {"w": jnp.array([1.0, 2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0, 1.0])}
+    u1, s = opt.update(g, s)
+    p = apply_updates(p, u1)
+    np.testing.assert_allclose(p["w"], [0.9, 1.9], rtol=1e-6)
+    u2, s = opt.update(g, s)          # momentum: m = 0.9*1 + 1 = 1.9
+    p = apply_updates(p, u2)
+    np.testing.assert_allclose(p["w"], [0.9 - 0.19, 1.9 - 0.19], rtol=1e-6)
+
+
+def test_adamw_converges_on_quadratic():
+    opt = adamw(0.1)
+    p = {"w": jnp.array([5.0, -3.0])}
+    s = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_adamw_bf16_state_dtype():
+    opt = adamw(1e-3, state_dtype=jnp.bfloat16)
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    s = opt.init(p)
+    assert s.mu["w"].dtype == jnp.bfloat16
+    u, s2 = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, s, p)
+    assert u["w"].dtype == jnp.bfloat16
+    assert int(s2.count) == 1
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.array(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.array(10))), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(jnp.array(100))), 0.1, rtol=1e-4)
+    assert float(lr(jnp.array(55))) < 1.0
+
+
+def test_fedprox_penalty():
+    p = {"w": jnp.array([1.0, 1.0])}
+    g = {"w": jnp.array([0.0, 0.0])}
+    pen = fedprox_penalty(p, g, mu=2.0)
+    np.testing.assert_allclose(float(pen), 2.0)    # 0.5*2*(1+1)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                   "c": [jnp.array(3, jnp.int32)]},
+    }
+    path = tmp_path / "ck.npz"
+    ckpt.save(path, tree, step=7, extra={"note": "x"})
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out = ckpt.restore(path, like)
+    assert out["nested"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_allclose(np.asarray(out["nested"]["b"], np.float32),
+                               np.asarray(tree["nested"]["b"], np.float32))
+    meta = ckpt.load_meta(path)
+    assert meta["step"] == 7 and meta["note"] == "x"

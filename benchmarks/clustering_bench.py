@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from repro.core import kmeans, stats
+from repro.data.dirichlet import heterogeneity
 from repro.data.pipeline import make_client_shards
 from repro.data.synthetic import load_dataset
 
@@ -29,17 +30,22 @@ def main(quick: bool = True):
     for alpha in (0.1, 0.5, 2.0):
         t0 = time.time()
         shards = make_client_shards(ds, 24, alpha, seed=0)
+        ys = np.concatenate([s.y for s in shards])
+        offs = np.cumsum([0] + [s.num_examples for s in shards])
+        het = heterogeneity([np.arange(offs[i], offs[i + 1])
+                             for i in range(len(shards))], ys,
+                            ds.num_classes)
         feats = stats.standardize(stats.stack_stats(
             [stats.compute_stats(s.x.reshape(s.num_examples, -1))
              for s in shards]))
         k, table = kmeans.select_k(key, feats, 2, 6)
         res = kmeans.kmeans(key, feats, k)
-        truth = np.array([np.bincount(s.y, minlength=10).argmax()
+        truth = np.array([np.bincount(s.y, minlength=ds.num_classes).argmax()
                           for s in shards])
         p = purity(np.asarray(res.assignments), truth)
         sil = table[k]["silhouette"]
-        print(f"clustering,alpha={alpha},K={k},silhouette={sil:.3f},"
-              f"purity={p:.3f},{time.time()-t0:.1f}s")
+        print(f"clustering,alpha={alpha},K={k},heterogeneity={het:.3f},"
+              f"silhouette={sil:.3f},purity={p:.3f},{time.time()-t0:.1f}s")
 
 
 if __name__ == "__main__":

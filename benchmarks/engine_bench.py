@@ -1,0 +1,68 @@
+"""Loop vs sharded FedSiKD round-engine benchmark (8 host devices).
+
+Runs the SAME FedSiKD configuration (Alg. 1: teacher warm-up, per-round
+teacher refresh, KD local steps, hierarchical aggregation) through both
+round engines and reports wall-clock per round plus final accuracy:
+
+  loop    — sequential per-client Python loop (reference engine)
+  sharded — one client per device; fused Pallas KD steps inside lax.scan,
+            grouped all-reduce aggregation (fed/sharded.py)
+
+On CPU the sharded engine pays the Pallas-interpreter tax inside every
+student step, so the CPU wall-clock favours the loop engine — the number
+that matters for the scalable path is rounds/sec AT fixed per-device work
+as the client count grows (the loop engine is O(clients) per round, the
+sharded engine O(1) in clients given enough devices).  The benchmark prints
+both the end-to-end time and the post-compile per-round time to separate
+tracing cost from steady-state cost.
+
+  PYTHONPATH=src python benchmarks/engine_bench.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import time
+
+from repro.data.synthetic import load_dataset
+from repro.fed.rounds import FedConfig, run_federated
+
+
+def bench_engine(ds, engine: str, *, kd_impl: str = "fused",
+                 rounds: int = 3) -> dict:
+    cfg = FedConfig(algorithm="fedsikd", engine=engine, kd_impl=kd_impl,
+                    num_clients=8, alpha=1.0, rounds=rounds, local_epochs=1,
+                    teacher_warmup_epochs=1, batch_size=32, num_clusters=3,
+                    seed=0)
+    t0 = time.perf_counter()
+    h = run_federated(ds, cfg)
+    total = time.perf_counter() - t0
+    # second invocation reuses jit caches -> steady-state per-round time
+    t0 = time.perf_counter()
+    h2 = run_federated(ds, cfg)
+    warm = time.perf_counter() - t0
+    return {"engine": engine, "kd_impl": kd_impl, "total_s": total,
+            "warm_s_per_round": warm / rounds, "final_acc": h2["acc"][-1],
+            "acc_curve": h["acc"]}
+
+
+def main():
+    ds = load_dataset("mnist", small=True)
+    rows = [
+        bench_engine(ds, "loop"),
+        bench_engine(ds, "sharded", kd_impl="fused"),
+        bench_engine(ds, "sharded", kd_impl="reference"),
+    ]
+    print(f"{'engine':10s} {'kd_impl':10s} {'cold total':>11s} "
+          f"{'warm s/round':>13s} {'final acc':>10s}")
+    for r in rows:
+        print(f"{r['engine']:10s} {r['kd_impl']:10s} {r['total_s']:10.1f}s "
+              f"{r['warm_s_per_round']:12.2f}s {r['final_acc']:10.3f}")
+    accs = [r["final_acc"] for r in rows]
+    print(f"engine agreement: max final-acc spread "
+          f"{max(accs) - min(accs):.4f}")
+
+
+if __name__ == "__main__":
+    main()

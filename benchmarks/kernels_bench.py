@@ -38,6 +38,24 @@ def bench_kd(T=2048, V=8192):
           f"{bytes_ref/1e6:.0f}MB ({bytes_ref/bytes_fused:.1f}x read amp)")
 
 
+def bench_kd_batched(C=8, B=4, T=64, V=4096):
+    """The sharded engine's per-device KD call: batched-leading-dim entry
+    (ops.kd_distillation_loss_batched) on a (B, T, V) logit block, reference
+    path timed on CPU + the per-ROUND HBM model for a C-client mesh."""
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (B, T, V), jnp.float32)
+    t = jax.random.normal(jax.random.fold_in(key, 1), (B, T, V), jnp.float32)
+    y = jax.random.randint(jax.random.fold_in(key, 2), (B, T), 0, V)
+    f_ref = jax.jit(lambda s, t, y: ref.kd_loss_ref(
+        s.reshape(-1, V), t.reshape(-1, V), y.reshape(-1)).mean())
+    us = _time(f_ref, s, t, y)
+    per_dev_fused = 2 * B * T * V * 4
+    per_dev_ref = 4 * B * T * V * 4
+    print(f"kd_loss_batched,{us:.0f},ref-jnp B={B} T={T} V={V}; sharded "
+          f"round on {C} devices: fused {C * per_dev_fused / 1e6:.0f}MB vs "
+          f"ref {C * per_dev_ref / 1e6:.0f}MB logit traffic per step")
+
+
 def bench_flash(B=1, H=8, T=1024, hd=64):
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (B, H, T, hd))
@@ -76,6 +94,7 @@ def bench_chunked_scan(B=1, H=8, T=2048, dk=64):
 
 def main():
     bench_kd()
+    bench_kd_batched()
     bench_flash()
     bench_kmeans()
     bench_chunked_scan()

@@ -1,12 +1,16 @@
-"""FedSiKD aggregation as TPU collectives (DESIGN.md §3): 8 placeholder
-devices host 8 clients; intra-cluster aggregation is a grouped all-reduce
-(psum + axis_index_groups) inside shard_map, the global model a two-level
-mean.  This is the communication pattern the multi-pod dry-run scales up.
+"""FedSiKD on a device mesh (DESIGN.md §3): 8 placeholder devices host 8
+clients.  Part 1 shows the raw collective pattern — intra-cluster grouped
+all-reduce + two-level global mean on plain-CE local steps.  Part 2 runs the
+FULL FedSiKD algorithm (Alg. 1) on the mesh: per-cluster teacher replicas,
+KD-establishment warm-up, fused Pallas distillation steps inside lax.scan,
+grouped student aggregation.  This is the communication pattern the
+multi-pod dry-run scales up.
 
   PYTHONPATH=src python examples/sharded_collectives.py
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 
@@ -34,18 +38,36 @@ def main():
     print("cluster assignment:", cluster_of)
 
     mesh = sh.make_client_mesh(8)
+
+    # ---- part 1: plain-CE grouped-collective round (no distillation)
     init, fwd = make_model("mnist", student=True)
     opt = adamw(3e-3)
     params, losses = sh.run_sharded_fedsikd(
         mesh, shards, init, fwd, opt, cluster_of,
         rounds=3, steps_per_round=5, batch_size=32)
-    print("round losses:", ["%.3f" % l for l in losses])
-
-    # all replicas hold the aggregated model after the final grouped psum
+    print("plain-CE round losses:", ["%.3f" % l for l in losses])
     one = jax.tree_util.tree_map(lambda a: a[0], params)
     steps = make_steps(fwd, opt)
     acc, loss = evaluate(steps["eval"], one, ds.x_test, ds.y_test)
-    print(f"global model: acc={acc:.3f} loss={loss:.3f}")
+    print(f"plain-CE global model: acc={acc:.3f} loss={loss:.3f}")
+
+    # ---- part 2: the full Alg. 1 on the mesh (teachers + fused Pallas KD)
+    t_model = make_model("mnist", student=False)
+    s_model = make_model("mnist", student=True)
+    s_steps = make_steps(s_model[1], adamw(3e-3))
+
+    def eval_fn(p):
+        return evaluate(s_steps["eval"], p, ds.x_test, ds.y_test)
+
+    print("sharded FedSiKD (teacher replicas + fused KD steps):")
+    _, hist = sh.run_sharded_fedsikd_kd(
+        mesh, shards, cluster_of,
+        t_model=t_model, s_model=s_model,
+        t_opt=adamw(1e-3), s_opt=adamw(3e-3),
+        rounds=3, local_epochs=1, warmup_epochs=2, batch_size=32,
+        kd_temperature=3.0, kd_alpha=0.5, kd_impl="fused",
+        eval_fn=eval_fn, progress=True)
+    print("accuracy curve:", ["%.3f" % a for a in hist["acc"]])
 
 
 if __name__ == "__main__":

@@ -56,6 +56,9 @@ def hierarchical_average(params: Sequence, cluster_of: Sequence[int],
         sizes.append(len(members))
     if weighting == "uniform":
         return uniform_average(cluster_means)
+    if weighting != "size":
+        raise ValueError(
+            f"weighting must be 'uniform' or 'size', got {weighting!r}")
     return weighted_average(cluster_means, [float(s) for s in sizes])
 
 

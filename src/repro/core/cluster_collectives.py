@@ -70,10 +70,45 @@ def intra_cluster_mean(tree, axis_name: str, groups: list[list[int]]):
     return _weighted_gather(tree, axis_name, _intra_matrix(groups))
 
 
-def fedsikd_global_mean(tree, axis_name: str, groups: list[list[int]]):
+def fedsikd_global_mean(tree, axis_name: str, groups: list[list[int]],
+                        *, weighting: str = "uniform"):
     """Two-level FedSiKD mean: (1/K) sum_k (1/|C_k|) sum_{i in C_k} w_i
-    (Alg. 1 line 18) — every device ends with the same global model."""
+    (Alg. 1 line 18) — every device ends with the same global model.
+
+    ``weighting="size"`` applies §IV-C.5's |C_k|/N cluster weights instead of
+    the literal 1/K; algebraically that collapses to the flat mean over all
+    clients (matching ``aggregation.hierarchical_average(weighting="size")``).
+    """
+    if weighting == "size":
+        D = sum(len(g) for g in groups)
+        return _weighted_gather(tree, axis_name, np.full((D,), 1.0 / D,
+                                                         np.float32))
+    if weighting != "uniform":
+        raise ValueError(
+            f"weighting must be 'uniform' or 'size', got {weighting!r}")
     return _weighted_gather(tree, axis_name, _global_row(groups))
+
+
+def teacher_sync(tree, axis_name: str, groups: list[list[int]]):
+    """Intra-cluster teacher-replica sync (Alg. 1 line 12, mesh-mapped).
+
+    In the sharded KD engine every member device of a cluster carries its own
+    copy of the cluster teacher.  After a block of local teacher steps the
+    copies are reconciled to their cluster mean: with ``teacher_data="leader"``
+    all members stepped on identical leader batches, so this is a numerical
+    no-op that only pins replicas together; with ``teacher_data="cluster"``
+    members stepped on their OWN shards and the mean implements data-parallel
+    teacher training over the union of cluster data (DESIGN.md §7).
+
+    Integer leaves (e.g. the Adam step count) are kept per-device rather
+    than averaged: a float mean truncated back to int corrupts the count —
+    and with it Adam's bias correction — whenever cluster members ran
+    unequal step budgets; each device's own count is exact for the steps it
+    actually took."""
+    synced = intra_cluster_mean(tree, axis_name, groups)
+    return jax.tree_util.tree_map(
+        lambda orig, new: new if jnp.issubdtype(orig.dtype, jnp.floating)
+        else orig, tree, synced)
 
 
 def fedavg_mean(tree, axis_name: str, num_examples: jax.Array):

@@ -30,14 +30,19 @@ def kl_teacher_student(
     student_logits: jax.Array,
     *,
     temperature: float = 2.0,
+    mask: jax.Array | None = None,
 ) -> jax.Array:
-    """tau^2 * KL(p_T || p_S) with temperature-softened distributions, mean
-    over all leading axes."""
+    """tau^2 * KL(p_T || p_S) with temperature-softened distributions.
+
+    Mean over all leading axes; with ``mask`` (True = keep), a masked mean
+    over the kept positions only."""
     t = teacher_logits / temperature
     s = student_logits / temperature
     p_t = jax.nn.softmax(t, axis=-1)
     kl = jnp.sum(p_t * (jax.nn.log_softmax(t, -1) - jax.nn.log_softmax(s, -1)), -1)
-    return (temperature**2) * kl.mean()
+    if mask is None:
+        return (temperature**2) * kl.mean()
+    return (temperature**2) * masked_mean(kl, mask)
 
 
 def distillation_loss(
@@ -48,9 +53,16 @@ def distillation_loss(
     temperature: float = 2.0,
     alpha: float = 0.5,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """Combined student loss of §IV-C.4.  Returns (loss, aux dict)."""
+    """Combined student loss of §IV-C.4.  Returns (loss, aux dict).
+
+    Positions with label < 0 are padding and contribute to NEITHER term
+    (both means divide by the valid count) — the same contract as the fused
+    Pallas kernel (``kernels.ops.kd_distillation_loss``) and its oracle
+    (``kernels.ref.kd_loss_ref``), so fused and reference paths optimize the
+    identical objective on padded batches."""
     ce = softmax_cross_entropy(student_logits, labels)
-    kl = kl_teacher_student(teacher_logits, student_logits, temperature=temperature)
+    kl = kl_teacher_student(teacher_logits, student_logits,
+                            temperature=temperature, mask=labels >= 0)
     loss = (1.0 - alpha) * ce + alpha * kl
     return loss, {"ce": ce, "kl": kl}
 

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.distill import distillation_loss, softmax_cross_entropy
+from repro.kernels import ops
 from repro.optim import Optimizer, apply_updates, fedprox_penalty
 
 
@@ -37,8 +38,13 @@ def make_steps(fwd: Callable, opt: Optimizer, *, kd_temperature: float = 2.0,
         updates, opt_state = opt.update(grads, opt_state, params)
         return apply_updates(params, updates), opt_state, loss
 
-    def make_distill_step(teacher_fwd: Callable):
-        """Student step with a (possibly different-architecture) teacher."""
+    def make_distill_step(teacher_fwd: Callable, *, fused: bool = False):
+        """Student step with a (possibly different-architecture) teacher.
+
+        ``fused=True`` swaps the pure-jnp reference loss for the Pallas
+        ``kernels.ops.kd_distillation_loss`` kernel (identical objective and
+        gradient; one streaming pass over the logits — the hot path the
+        sharded engine uses)."""
 
         @jax.jit
         def distill_step(params, opt_state, batch, key, teacher_params):
@@ -47,12 +53,16 @@ def make_steps(fwd: Callable, opt: Optimizer, *, kd_temperature: float = 2.0,
 
             def loss_fn(p):
                 s_logits = fwd(p, batch["x"], train=True, key=key)
-                loss, aux = distillation_loss(
+                if fused:
+                    return ops.kd_distillation_loss(
+                        s_logits, t_logits, batch["y"],
+                        kd_temperature, kd_alpha, None)
+                loss, _ = distillation_loss(
                     s_logits, t_logits, batch["y"],
                     temperature=kd_temperature, alpha=kd_alpha)
-                return loss, aux
+                return loss
 
-            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
             updates, opt_state = opt.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss
 

@@ -29,6 +29,16 @@ from repro.optim import adamw
 @dataclasses.dataclass
 class FedConfig:
     algorithm: str = "fedsikd"        # fedsikd | fedavg | flhc | random | fedprox
+    # Round engine for the clustered-KD algorithms (fedsikd | random):
+    #   loop    — sequential per-client Python loop (reference implementation)
+    #   sharded — one device per client on a mesh; teachers replicated per
+    #             cluster member, fused Pallas KD steps inside lax.scan,
+    #             grouped all-reduce aggregation (fed/sharded.py, DESIGN.md §3)
+    engine: str = "loop"
+    # KD loss used by the sharded engine's student steps:
+    #   fused     — Pallas kd_distillation_loss kernel (one pass over logits)
+    #   reference — pure-jnp core.distill.distillation_loss
+    kd_impl: str = "fused"
     num_clients: int = 40
     alpha: float = 0.5                # Dirichlet skew
     rounds: int = 5
@@ -74,11 +84,17 @@ def _cluster_epochs(members: list[ClientShard], params, opt_state, key, cfg,
     The cluster data is POOLED and shuffled globally — visiting member shards
     sequentially causes catastrophic interference under label skew (each
     shard's classes overwrite the previous one's; measured in EXPERIMENTS.md
-    calibration: loss diverges 2.5 -> 2.9)."""
-    pooled = ClientShard(
-        client_id=-1,
-        x=np.concatenate([sh.x for sh in members]),
-        y=np.concatenate([sh.y for sh in members]))
+    calibration: loss diverges 2.5 -> 2.9).  A single-member "union"
+    (teacher_data="leader") is the member itself — keeping its client_id
+    keeps the batch shuffle identical to the sharded engine's teacher feed,
+    which is what makes loop/sharded parity tight."""
+    if len(members) == 1:
+        pooled = members[0]
+    else:
+        pooled = ClientShard(
+            client_id=-1,
+            x=np.concatenate([sh.x for sh in members]),
+            y=np.concatenate([sh.y for sh in members]))
     for epoch in range(epochs):
         for x, y in pooled.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
             key, sub = jax.random.split(key)
@@ -108,6 +124,12 @@ def _cluster_by_stats(shards: list[ClientShard], cfg: FedConfig) -> np.ndarray:
 
 def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dict:
     """Runs ``cfg.rounds`` federated rounds; returns per-round test metrics."""
+    if cfg.engine not in ("loop", "sharded"):
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    if cfg.engine == "sharded" and cfg.algorithm not in ("fedsikd", "random"):
+        raise ValueError(
+            f"engine='sharded' implements the clustered-KD algorithms "
+            f"(fedsikd | random); use engine='loop' for {cfg.algorithm!r}")
     shards = make_client_shards(ds, cfg.num_clients, cfg.alpha, seed=cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     opt = adamw(cfg.lr)
@@ -143,6 +165,32 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
                    for c in clusters]
         history["num_clusters"] = len(clusters)
+
+        if cfg.engine == "sharded":
+            # Scalable path: same Alg. 1 phases, mapped onto a device mesh
+            # (one client per device; see fed/sharded.py and DESIGN.md §3).
+            from repro.fed import sharded as sh
+            mesh = sh.make_client_mesh(cfg.num_clients)
+
+            def eval_fn(p):
+                return evaluate(student_steps["eval"], p, ds.x_test, ds.y_test)
+
+            _, hist = sh.run_sharded_fedsikd_kd(
+                mesh, shards, labels,
+                t_model=(t_init, t_fwd), s_model=(s_init, s_fwd),
+                t_opt=opt, s_opt=s_opt, rounds=cfg.rounds,
+                local_epochs=cfg.local_epochs,
+                warmup_epochs=cfg.teacher_warmup_epochs,
+                batch_size=cfg.batch_size,
+                kd_temperature=cfg.kd_temperature, kd_alpha=cfg.kd_alpha,
+                teacher_data=cfg.teacher_data,
+                cluster_weighting=cfg.cluster_weighting,
+                kd_impl=cfg.kd_impl, leaders=leaders, seed=cfg.seed,
+                eval_fn=eval_fn, progress=progress)
+            history.update({k: hist[k] for k in
+                            ("acc", "loss", "round", "engine",
+                             "teacher_loss", "student_loss")})
+            return history
 
         global_student = s_init(key)
         teachers = [t_init(jax.random.fold_in(key, 100 + k))

@@ -1,40 +1,92 @@
-"""Client-parallel federated runtime on a device mesh.
+"""Client-parallel federated runtime on a device mesh — now KD-complete.
 
-One device (mesh axis "clients") hosts one client: local SGD steps run
-data-parallel across clients inside ``jax.shard_map``; FedSiKD's hierarchical
-aggregation is a GROUPED ALL-REDUCE (``psum`` with ``axis_index_groups`` from
-the stats clustering) followed by the two-level global mean — the paper's
-server loop mapped onto the ICI torus (DESIGN.md §3).
+One device (mesh axis "clients") hosts one client: local steps run
+data-parallel across clients inside ``shard_map``; FedSiKD's hierarchical
+aggregation is a GROUPED ALL-REDUCE (weighted all-gather contraction with
+``axis_index_groups`` semantics derived from the stats clustering) followed
+by the two-level global mean — the paper's server loop mapped onto the ICI
+torus (DESIGN.md §3).
+
+Two round engines live here:
+
+- ``make_sharded_round``     — plain CE local steps + grouped aggregation
+  (the original runtime; FedAvg / cluster-only variants).
+- ``make_sharded_kd_round``  — the full FedSiKD round (Alg. 1): per-cluster
+  TEACHER REPLICAS stacked on the client axis (one copy per member device),
+  teacher CE steps, intra-cluster teacher sync
+  (``cluster_collectives.teacher_sync``), then student DISTILLATION steps
+  that call the fused Pallas ``kd_distillation_loss`` kernel inside the
+  ``jax.lax.scan`` step loop, and finally the grouped student aggregation.
+  ``make_teacher_phase`` provides Alg. 1's pre-round KD-establishment
+  (teacher warm-up) as a separate jitted collective program.
+
+Per-client step masking: every client is padded to the same static number of
+scan steps (shorter clients' extra steps are frozen via ``jnp.where``), so
+the sharded engine performs exactly the same number of REAL updates per
+client as the sequential loop engine in ``rounds.py`` — that is what makes
+loop/sharded parity tight (tests/test_sharded_kd.py).
 
 This runtime drives the paper's CNNs (or any pure fwd fn) and is exercised
-by tests/examples with ``--xla_force_host_platform_device_count``.
+by tests/examples with ``--xla_force_host_platform_device_count``.  jax API
+drift (``jax.shard_map`` vs ``jax.experimental.shard_map``, mesh axis types)
+is absorbed by the small compat shims at the top.
 """
 from __future__ import annotations
 
-import functools
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cluster_collectives as cc
-from repro.core.distill import softmax_cross_entropy
+from repro.core.distill import distillation_loss, softmax_cross_entropy
+from repro.kernels import ops
 from repro.optim import Optimizer, apply_updates
 
 AXIS = "clients"
 
 
-def make_client_mesh(n_clients: int):
-    return jax.make_mesh((n_clients,), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+# ------------------------------------------------------------ jax compat
+def shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions, with replication checking disabled
+    (the Pallas ``pallas_call`` primitive has no replication rule, so the
+    fused KD kernel requires ``check_rep=False`` / ``check_vma=False``)."""
+    try:                                     # jax >= 0.6: public API
+        sm = jax.shard_map
+    except AttributeError:                   # jax 0.4.x
+        from jax.experimental.shard_map import shard_map as sm_old
+        return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    except TypeError:                        # older keyword spelling
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
 
 
+def make_client_mesh(n_clients: int) -> Mesh:
+    """1-D mesh with one device per client (first ``n_clients`` devices)."""
+    devs = jax.devices()
+    if len(devs) < n_clients:
+        raise ValueError(
+            f"need {n_clients} devices for {n_clients} clients, have "
+            f"{len(devs)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_clients} "
+            f"before importing jax")
+    return Mesh(np.asarray(devs[:n_clients]), (AXIS,))
+
+
+# ------------------------------------------------------------ data staging
 def stack_client_data(shards, steps_per_round: int, batch_size: int, *,
                       seed: int = 0):
     """(C, steps, B, ...) arrays — every client padded to the same number of
-    steps per round (shorter clients repeat batches cyclically)."""
+    steps per round (shorter clients repeat batches cyclically; pair with
+    ``client_step_counts`` to mask the repeats out)."""
     xs, ys = [], []
     for sh in shards:
         bx, by = [], []
@@ -51,6 +103,67 @@ def stack_client_data(shards, steps_per_round: int, batch_size: int, *,
     return np.stack(xs), np.stack(ys)
 
 
+def client_step_counts(shards, batch_size: int, epochs: int) -> np.ndarray:
+    """Number of REAL optimizer steps per client for ``epochs`` local epochs
+    (matches the loop engine's per-client batch count)."""
+    return np.asarray([math.ceil(sh.num_examples / batch_size) * epochs
+                       for sh in shards], np.int32)
+
+
+def replicate_params(params, n_clients: int):
+    """Stack identical replicas on a leading client axis."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape).copy(), params)
+
+
+def _squeeze(tree):
+    """Strip the local size-1 client axis shard_map leaves on entry."""
+    return jax.tree_util.tree_map(lambda a: a[0], tree)
+
+
+def _unsqueeze(tree):
+    return jax.tree_util.tree_map(lambda a: a[None], tree)
+
+
+def _masked_scan_steps(step_fn, carry, xs, ys, n_steps):
+    """Run ``step_fn(carry, (x, y, step_index))`` over (xs, ys) freezing the
+    carry once the per-device step budget ``n_steps`` is spent (shorter
+    clients stop early, exactly as in the sequential loop engine)."""
+    idx = jnp.arange(xs.shape[0])
+
+    def step(carry, batch):
+        x, y, i = batch
+        new_carry, loss = step_fn(carry, (x, y, i))
+        live = i < n_steps
+        carry = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(live, new, old), new_carry, carry)
+        return carry, jnp.where(live, loss, 0.0)
+
+    carry, losses = jax.lax.scan(step, carry, (xs, ys, idx))
+    mean_loss = jnp.sum(losses) / jnp.maximum(n_steps.astype(jnp.float32), 1.0)
+    return carry, mean_loss
+
+
+def _make_teacher_step(t_fwd: Callable, t_opt: Optimizer, rng):
+    """One masked-scan teacher CE step (Alg. 1 line 12), shared by the
+    warm-up phase and the in-round teacher refresh."""
+
+    def t_step(carry, batch):
+        p, s = carry
+        x, y, i = batch
+        k = jax.random.fold_in(rng, i)
+
+        def loss_fn(p):
+            return softmax_cross_entropy(t_fwd(p, x, train=True, key=k), y)
+
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        u, s = t_opt.update(g, s, p)
+        return (apply_updates(p, u), s), loss
+
+    return t_step
+
+
+# -------------------------------------------------- plain-CE round engine
 def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
                        cluster_groups: list[list[int]],
                        *, algorithm: str = "fedsikd"):
@@ -64,11 +177,8 @@ def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
     """
 
     def local_round(params, opt_state, xs, ys, n_examples):
-        # shard_map keeps the sharded client axis with local size 1 — strip
-        # it on entry and restore it on exit.
-        squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
-        params, opt_state = squeeze(params), squeeze(opt_state)
-        xs, ys = squeeze(xs), squeeze(ys)
+        params, opt_state = _squeeze(params), _squeeze(opt_state)
+        xs, ys = _squeeze(xs), _squeeze(ys)
         n_examples = n_examples[0]
 
         def step(carry, batch):
@@ -92,29 +202,133 @@ def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
             params = cc.intra_cluster_mean(params, AXIS, cluster_groups)
         else:
             raise ValueError(algorithm)
-        unsq = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
-        return unsq(params), unsq(opt_state), jax.lax.pmean(
-            losses.mean(), AXIS)
+        return (_unsqueeze(params), _unsqueeze(opt_state),
+                jax.lax.pmean(losses.mean(), AXIS))
 
-    shard = jax.shard_map(
-        local_round, mesh=mesh,
+    shard = shard_map(
+        local_round, mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
         out_specs=(P(AXIS), P(AXIS), P()),
     )
     return jax.jit(shard)
 
 
-def replicate_params(params, n_clients: int):
-    """Stack identical replicas on a leading client axis."""
-    return jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape).copy(), params)
+# ------------------------------------------------ FedSiKD KD round engine
+def make_teacher_phase(mesh, t_fwd: Callable, t_opt: Optimizer,
+                       cluster_groups: list[list[int]]):
+    """Jitted teacher-only collective program: CE steps on every device's
+    teacher feed, then intra-cluster teacher sync.  Used for Alg. 1's
+    KD-establishment warm-up AND for the per-round teacher refresh.
+
+    ``rng`` is one PRNG key per device (training mode is on, so dropout
+    models get a fresh per-step key, as in the loop engine).  With
+    ``teacher_data="leader"`` the driver hands all members of a cluster the
+    SAME key, keeping teacher replicas bitwise in sync (see
+    ``run_sharded_fedsikd_kd``)."""
+
+    def phase(tp, ts, xs, ys, n_steps, rng):
+        tp, ts = _squeeze(tp), _squeeze(ts)
+        xs, ys = _squeeze(xs), _squeeze(ys)
+        n_steps, rng = n_steps[0], rng[0]
+
+        step = _make_teacher_step(t_fwd, t_opt, rng)
+        (tp, ts), loss = _masked_scan_steps(step, (tp, ts), xs, ys, n_steps)
+        tp = cc.teacher_sync(tp, AXIS, cluster_groups)
+        ts = cc.teacher_sync(ts, AXIS, cluster_groups)
+        return _unsqueeze(tp), _unsqueeze(ts), jax.lax.pmean(loss, AXIS)
+
+    return jax.jit(shard_map(
+        phase, mesh,
+        in_specs=(P(AXIS),) * 6,
+        out_specs=(P(AXIS), P(AXIS), P()),
+    ))
 
 
+def make_sharded_kd_round(mesh, t_fwd: Callable, s_fwd: Callable,
+                          t_opt: Optimizer, s_opt: Optimizer,
+                          cluster_groups: list[list[int]], *,
+                          kd_temperature: float = 2.0, kd_alpha: float = 0.5,
+                          kd_impl: str = "fused",
+                          cluster_weighting: str = "size"):
+    """The full FedSiKD round (Alg. 1 lines 10-18) as ONE jitted collective
+    program over the client mesh:
+
+      1. teacher CE steps on each device's teacher feed        (line 12)
+      2. intra-cluster teacher sync (grouped all-reduce)       (tentpole)
+      3. student distillation steps vs the synced teacher — the loss is the
+         fused Pallas ``kd_distillation_loss`` kernel (``kd_impl="fused"``)
+         or the pure-jnp reference (``kd_impl="reference"``)   (line 13-14)
+      4. grouped student aggregation: cluster mean + two-level
+         global mean                                           (lines 16-18)
+
+    Returns round_fn(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng,
+    s_rng) -> (tp, ts, sp, ss, teacher_loss, student_loss); all
+    params/opt-state pytrees carry a leading (C,) client axis.  ``t_rng`` /
+    ``s_rng`` are one PRNG key per device (training mode is on: dropout
+    models draw per-step keys).  They are separate inputs because their
+    sharing patterns differ: student keys are always per-device, while with
+    ``teacher_data="leader"`` the driver hands all members of a cluster the
+    SAME teacher key so that replicas stepping on identical leader batches
+    stay bitwise in sync (dropout masks included)."""
+    if kd_impl not in ("fused", "reference"):
+        raise ValueError(
+            f"kd_impl must be 'fused' or 'reference', got {kd_impl!r}")
+
+    def kd_round(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng, s_rng):
+        tp, ts, sp, ss = (_squeeze(t) for t in (tp, ts, sp, ss))
+        tx, ty, sx, sy = (_squeeze(t) for t in (tx, ty, sx, sy))
+        t_n, s_n = t_n[0], s_n[0]
+        t_rng, s_rng = t_rng[0], s_rng[0]
+
+        # ---- 1-2: teacher refresh + sync
+        t_step = _make_teacher_step(t_fwd, t_opt, t_rng)
+        (tp, ts), t_loss = _masked_scan_steps(t_step, (tp, ts), tx, ty, t_n)
+        tp = cc.teacher_sync(tp, AXIS, cluster_groups)
+        ts = cc.teacher_sync(ts, AXIS, cluster_groups)
+
+        # ---- 3: student distillation against the synced cluster teacher
+        def s_step(carry, batch):
+            p, s = carry
+            x, y, i = batch
+            k = jax.random.fold_in(s_rng, i)
+            t_logits = t_fwd(tp, x, train=False, key=None)
+
+            def loss_fn(p):
+                s_logits = s_fwd(p, x, train=True, key=k)
+                if kd_impl == "fused":
+                    return ops.kd_distillation_loss_batched(
+                        s_logits, t_logits, y,
+                        tau=kd_temperature, alpha=kd_alpha)
+                return distillation_loss(s_logits, t_logits, y,
+                                         temperature=kd_temperature,
+                                         alpha=kd_alpha)[0]
+
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            u, s = s_opt.update(g, s, p)
+            return (apply_updates(p, u), s), loss
+
+        (sp, ss), s_loss = _masked_scan_steps(s_step, (sp, ss), sx, sy, s_n)
+
+        # ---- 4: grouped aggregation (cluster mean -> two-level global mean)
+        sp = cc.fedsikd_global_mean(sp, AXIS, cluster_groups,
+                                    weighting=cluster_weighting)
+        return (_unsqueeze(tp), _unsqueeze(ts), _unsqueeze(sp), _unsqueeze(ss),
+                jax.lax.pmean(t_loss, AXIS), jax.lax.pmean(s_loss, AXIS))
+
+    return jax.jit(shard_map(
+        kd_round, mesh,
+        in_specs=(P(AXIS),) * 12,
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), P()),
+    ))
+
+
+# ------------------------------------------------------------------ drivers
 def run_sharded_fedsikd(mesh, shards, init_fn, fwd, opt, cluster_of,
                         *, rounds: int, steps_per_round: int,
                         batch_size: int, algorithm: str = "fedsikd",
                         seed: int = 0):
-    """Convenience driver: returns final (per-client) params after ``rounds``."""
+    """Plain-CE convenience driver (no distillation): returns final
+    (per-client) params after ``rounds``."""
     n = len(shards)
     groups = cc.cluster_groups(cluster_of)
     params = replicate_params(init_fn(jax.random.PRNGKey(seed)), n)
@@ -129,3 +343,126 @@ def run_sharded_fedsikd(mesh, shards, init_fn, fwd, opt, cluster_of,
                                            jnp.asarray(x), jnp.asarray(y), sizes)
         losses.append(float(loss))
     return params, losses
+
+
+def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
+                           t_model, s_model, t_opt: Optimizer,
+                           s_opt: Optimizer, rounds: int,
+                           local_epochs: int = 1, warmup_epochs: int = 0,
+                           batch_size: int = 64, kd_temperature: float = 2.0,
+                           kd_alpha: float = 0.5,
+                           teacher_data: str = "leader",
+                           cluster_weighting: str = "size",
+                           kd_impl: str = "fused", leaders=None,
+                           seed: int = 0, eval_fn=None, progress: bool = False):
+    """Full FedSiKD (Alg. 1) on the device mesh; the scalable twin of the
+    ``rounds.py`` loop engine's ``fedsikd`` branch.
+
+    ``t_model``/``s_model`` are (init_fn, fwd_fn) pairs; ``leaders`` is one
+    client index per cluster (defaults to the most-data member, DESIGN.md
+    §7).  ``eval_fn(params) -> (acc, loss)``, if given, is called on the
+    aggregated student after every round.  Returns (global_student_params,
+    history) with history matching the loop engine's schema."""
+    n = len(shards)
+    groups = cc.cluster_groups(cluster_of)
+    labels = np.asarray(cluster_of)
+    uniq = np.unique(labels).tolist()
+    # the ONE device -> cluster-index mapping everything below derives from
+    cluster_idx = [uniq.index(labels[i]) for i in range(n)]
+    if leaders is None:
+        leaders = [max(g, key=lambda i: shards[i].num_examples)
+                   for g in groups]
+    # per-device teacher feed (DESIGN.md §7): "leader" streams the cluster
+    # leader's shard to every member (identical batches -> replicas stay in
+    # sync between collectives); "cluster" streams each device's OWN shard,
+    # which teacher_sync turns into data-parallel training over the union
+    if teacher_data == "leader":
+        t_src = [shards[leaders[cluster_idx[i]]] for i in range(n)]
+    elif teacher_data == "cluster":
+        t_src = list(shards)
+    else:
+        raise ValueError(
+            f"teacher_data must be 'leader' or 'cluster', got {teacher_data!r}")
+
+    t_init, t_fwd = t_model
+    s_init, s_fwd = s_model
+    key = jax.random.PRNGKey(seed)
+
+    # one teacher copy per member device; cluster ci's members share init
+    single_teachers = [t_init(jax.random.fold_in(key, 100 + k))
+                       for k in range(len(groups))]
+    tp = jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([leaves[cluster_idx[i]] for i in range(n)]),
+        *single_teachers)
+    ts = jax.vmap(t_opt.init)(tp)
+    sp = replicate_params(s_init(key), n)
+
+    # static per-device step budgets (mirror the loop engine's batch counts)
+    t_steps = client_step_counts(t_src, batch_size, local_epochs)
+    s_steps = client_step_counts(shards, batch_size, local_epochs)
+    w_steps = (t_steps // max(local_epochs, 1)) * warmup_epochs
+
+    tx, ty = stack_client_data(t_src, int(t_steps.max()), batch_size,
+                               seed=seed)
+    sx, sy = stack_client_data(shards, int(s_steps.max()), batch_size,
+                               seed=seed)
+    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
+    sx, sy = jnp.asarray(sx), jnp.asarray(sy)
+    t_steps, s_steps = jnp.asarray(t_steps), jnp.asarray(s_steps)
+
+    history = {"acc": [], "loss": [], "round": [],
+               "teacher_loss": [], "student_loss": [],
+               "num_clusters": len(groups), "engine": "sharded"}
+
+    def device_keys(salt: int):
+        """One training-mode PRNG key per client device (student steps)."""
+        return jnp.stack([jax.random.fold_in(jax.random.fold_in(key, salt), i)
+                          for i in range(n)])
+
+    def teacher_keys(salt: int):
+        """Teacher-step keys.  Leader mode: members of a cluster share one
+        key (identical batches + identical dropout masks -> replicas stay
+        bitwise in sync between ``teacher_sync`` calls).  Cluster mode:
+        per-device keys (each device steps on its own shard anyway)."""
+        base = jax.random.fold_in(key, salt)
+        if teacher_data == "leader":
+            return jnp.stack([jax.random.fold_in(base, cluster_idx[i])
+                              for i in range(n)])
+        return jnp.stack([jax.random.fold_in(base, 10_000 + i)
+                          for i in range(n)])
+
+    # ---- Alg. 1 KD-establishment: teacher warm-up before round 1
+    if warmup_epochs > 0:
+        warm = make_teacher_phase(mesh, t_fwd, t_opt, groups)
+        wx, wy = stack_client_data(t_src, int(np.asarray(w_steps).max()),
+                                   batch_size, seed=seed)
+        tp, ts, wloss = warm(tp, ts, jnp.asarray(wx), jnp.asarray(wy),
+                             jnp.asarray(w_steps), teacher_keys(9001))
+        if progress:
+            print(f"  warmup  teacher_loss={float(wloss):.4f}")
+
+    round_fn = make_sharded_kd_round(
+        mesh, t_fwd, s_fwd, t_opt, s_opt, groups,
+        kd_temperature=kd_temperature, kd_alpha=kd_alpha, kd_impl=kd_impl,
+        cluster_weighting=cluster_weighting)
+
+    for rnd in range(1, rounds + 1):
+        ss = jax.vmap(s_opt.init)(sp)      # fresh student opt (as loop engine)
+        # disjoint even/odd salts keep teacher and student PRNG streams
+        # from colliding on devices whose index equals their cluster index
+        tp, ts, sp, ss, t_loss, s_loss = round_fn(
+            tp, ts, sp, ss, tx, ty, t_steps, sx, sy, s_steps,
+            teacher_keys(2 * rnd), device_keys(2 * rnd + 1))
+        history["teacher_loss"].append(float(t_loss))
+        history["student_loss"].append(float(s_loss))
+        history["round"].append(rnd)
+        global_student = _squeeze(sp)      # replicas agree post-aggregation
+        if eval_fn is not None:
+            acc, loss = eval_fn(global_student)
+            history["acc"].append(acc)
+            history["loss"].append(loss)
+            if progress:
+                print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}")
+        elif progress:
+            print(f"  round {rnd:3d}  student_loss={float(s_loss):.4f}")
+    return _squeeze(sp), history

@@ -1,8 +1,31 @@
-"""Public jit'd wrappers around the Pallas kernels: shape padding, batch-dim
-flattening, custom_vjp wiring, and automatic interpret-mode on CPU.
+"""Public jit'd wrappers around the Pallas kernels.
 
-On this container (CPU) kernels always run in interpret mode; on TPU pass
-``interpret=False`` (the default resolves via backend detection).
+These are the entry points the rest of the repo (and external callers)
+should use; the raw kernels in ``kd_softmax_kl.py`` / ``flash_attention.py``
+/ ``kmeans_assign.py`` have strict divisibility requirements that the
+wrappers hide.  Every wrapper provides:
+
+- **Shape padding** — inputs are padded up to the kernel block sizes and
+  outputs cropped back, so callers can pass arbitrary T/V/N.  Logit padding
+  uses a large negative fill (``NEG``) so padded vocab columns carry zero
+  softmax mass; padded tokens get label ``-1`` which the kernels treat as
+  "ignore" (contributes 0 loss and 0 gradient).
+- **Batch-dim flattening** — leading batch axes are folded into the row
+  axis where the kernel is 2-D (see ``kd_distillation_loss``).
+- **custom_vjp wiring** — ``kd_distillation_loss`` pairs the forward kernel
+  with the analytic blockwise backward kernel instead of differentiating
+  through the online-softmax recurrence.
+- **Interpret-mode fallback** — ``interpret=None`` (the default) resolves
+  via backend detection: TPU runs the compiled Pallas kernel, any other
+  backend (this CPU container included) runs the kernel in Pallas interpret
+  mode, which is numerically identical but is a correctness harness, not a
+  performance path (benchmarks/kernels_bench.py measures the jnp reference
+  on CPU for that reason).
+
+All wrappers are safe under ``jit``, ``grad``, ``vmap``, ``lax.scan`` and
+``shard_map`` — note that ``shard_map`` callers must disable replication
+checking (``check_rep=False`` / ``check_vma=False``): ``pallas_call`` has no
+replication rule (``repro.fed.sharded.shard_map`` does this for you).
 """
 from __future__ import annotations
 
@@ -37,12 +60,61 @@ def _pad_to(x, axis, mult, value):
 def kd_distillation_loss(student_logits, teacher_logits, labels,
                          tau: float = 2.0, alpha: float = 0.5,
                          interpret: bool | None = None):
-    """Mean fused distillation loss over all tokens with label >= 0.
+    """Fused FedSiKD distillation loss (mean over tokens with label >= 0).
 
-    student/teacher logits: (..., V); labels: (...)."""
+        loss = (1-alpha) * CE(student, y)
+             + alpha * tau^2 * KL(softmax(teacher/tau) || softmax(student/tau))
+
+    Contract:
+      student_logits, teacher_logits : (..., V) float32/bfloat16, identical
+                                       shapes; any number of leading axes
+                                       (they are flattened into the token
+                                       axis internally).
+      labels                         : (...) int32/int64 matching the leading
+                                       axes; ``-1`` marks padding tokens,
+                                       which contribute neither loss nor
+                                       gradient (the mean divides by the
+                                       count of valid tokens only).
+      tau, alpha, interpret          : POSITIONAL static args (custom_vjp
+                                       nondiff); pass them positionally.
+      returns                        : () float32 scalar.
+
+    Differentiable in ``student_logits`` only (teacher gradient is defined
+    as zero — the teacher is a constant target, as in Alg. 1).  T and V are
+    padded to the (128, 512-or-V) kernel blocks internally; see module
+    docstring for padding and interpret-mode semantics.  Matches
+    ``core.distill.distillation_loss`` / ``kernels.ref.kd_loss_ref`` to
+    float32 tolerance while reading the logits exactly once on TPU.
+    """
     loss, _ = _kd_fwd_impl(student_logits, teacher_logits, labels, tau, alpha,
                            interpret)
     return loss
+
+
+def kd_distillation_loss_batched(student_logits, teacher_logits, labels,
+                                 *, tau: float = 2.0, alpha: float = 0.5,
+                                 interpret: bool | None = None):
+    """Batched-leading-dim alias of ``kd_distillation_loss`` for per-device
+    use under ``shard_map`` (keyword-friendly; not a custom_vjp itself, so
+    ``tau``/``alpha`` can be passed by name).
+
+    Contract: student/teacher logits (B, T, V) — or any (..., V) — plus
+    labels (B, T); returns the scalar mean loss over valid tokens of the
+    whole batch.  Inside ``shard_map`` each device computes the loss of its
+    local (B, T, V) block; combine across devices with ``lax.pmean`` if a
+    global mean is wanted.  This is the entry point the sharded FedSiKD
+    engine calls inside its ``lax.scan`` student step (fed/sharded.py).
+    """
+    if student_logits.shape != teacher_logits.shape:
+        raise ValueError(
+            f"student/teacher logit shapes differ: "
+            f"{student_logits.shape} vs {teacher_logits.shape}")
+    if labels.shape != student_logits.shape[:-1]:
+        raise ValueError(
+            f"labels shape {labels.shape} != logit leading axes "
+            f"{student_logits.shape[:-1]}")
+    return kd_distillation_loss(student_logits, teacher_logits, labels,
+                                tau, alpha, interpret)
 
 
 def _blocks(V):
@@ -97,11 +169,28 @@ kd_distillation_loss.defvjp(_kd_vjp_fwd, _kd_vjp_bwd)
 # --------------------------------------------------------- flash attention
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     interpret: bool | None = None):
-    """q: (B,T,H,hd); k,v: (B,S,KVH,hd) -> (B,T,H,hd)  (layer-layout order).
+    """Streaming (flash-style) attention.
 
-    Pads T/S to block multiples; padded keys are masked out by the
-    right-aligned causal mask only when causal=True (non-causal callers must
-    pad themselves)."""
+    Contract:
+      q       : (B, T, H, hd)   — layer layout, heads on axis 2.
+      k, v    : (B, S, KVH, hd) — KVH must divide H (grouped-query
+                attention: each KV head serves H/KVH query heads).
+      returns : (B, T, H, hd), same dtype as ``q``.
+
+    ``causal=True`` applies a RIGHT-ALIGNED causal mask (query i attends to
+    keys up to S - T + i), so cross-length decode shapes (T < S) work;
+    ``window > 0`` additionally limits attention to the last ``window``
+    keys.  T and S are padded to block multiples internally.  The kernel's
+    right-aligned mask is computed on the PADDED lengths, which matches the
+    true mask only when T and S pad by the SAME amount — for causal calls
+    with unequal pad amounts (e.g. T=64, S=200: padded keys would become
+    visible and absorb softmax mass) this wrapper raises rather than
+    returning silently-wrong attention; use lengths that are 128-multiples
+    (or both under 128 with T == S, or equal-pad pairs).  NON-causal
+    callers must pad/mask S themselves.  dtype: float32 or bfloat16
+    (accumulation is float32 either way).  ``interpret=None`` resolves by
+    backend (see module docstring).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     qt = jnp.moveaxis(q, 2, 1)                       # (B,H,T,hd)
     kt = jnp.moveaxis(k, 2, 1)
@@ -109,11 +198,18 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     T, S = qt.shape[2], kt.shape[2]
     bq = min(128, T) if T % 128 else 128
     bk = min(128, S) if S % 128 else 128
+    pad_t, pad_s = (-T) % bq, (-S) % bk
+    if causal and pad_t != pad_s:
+        raise ValueError(
+            f"causal flash_attention with T={T}, S={S} pads queries by "
+            f"{pad_t} but keys by {pad_s}; the right-aligned causal mask is "
+            f"computed on padded lengths and would mis-mask {abs(pad_s - pad_t)} "
+            f"keys.  Use T/S that pad equally (e.g. 128-multiples).")
     qt = _pad_to(qt, 2, bq, 0.0)
     kt = _pad_to(kt, 2, bk, 0.0)
     vt = _pad_to(vt, 2, bk, 0.0)
-    # padded keys sit at the END: with right-alignment computed on the
-    # PADDED lengths they would become visible, so shift via window/causal:
+    # equal pads + right alignment => padded keys sit past every query's
+    # visible range, so the causal mask hides them automatically
     out = _fa.flash_attention(qt, kt, vt, causal=causal,
                               window=window, block_q=bq, block_k=bk,
                               interpret=interpret)
@@ -123,6 +219,20 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 # ----------------------------------------------------------------- kmeans
 def kmeans_assign(x, cents, *, interpret: bool | None = None):
+    """Nearest-centroid assignment (the k-means E-step).
+
+    Contract:
+      x       : (N, F) float32 points.
+      cents   : (K, F) float32 centroids (K is small; the kernel streams
+                points in 128-row blocks against the full centroid table).
+      returns : (assignments (N,) int32, sq_distance-to-assigned (N,)
+                float32).
+
+    N is padded to a 128-multiple internally and cropped on return; ties
+    resolve to the lowest centroid index (argmin semantics, matching
+    ``kernels.ref.kmeans_assign_ref``).  ``interpret=None`` resolves by
+    backend (see module docstring).
+    """
     interpret = _interpret_default() if interpret is None else interpret
     N = x.shape[0]
     bn = min(128, N) if N % 128 else 128

@@ -216,7 +216,7 @@ def make_fedsikd_distill_step(cfg: ModelConfig, cluster_of, *,
         mask = (labels >= 0).astype(jnp.float32)
         ce = jnp.sum((logz - picked) * mask) / jnp.maximum(mask.sum(), 1.0)
         kl = kl_teacher_student(jax.lax.stop_gradient(t_logits), s_logits,
-                                temperature=kd_tau)
+                                temperature=kd_tau, mask=labels >= 0)
         return (1.0 - kd_alpha) * ce + kd_alpha * kl
 
     def _student_logits(student, batch):

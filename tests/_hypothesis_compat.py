@@ -1,0 +1,80 @@
+"""Import-or-degrade shim for hypothesis.
+
+The tier-1 suite must collect (and ideally run) on containers where
+``hypothesis`` is not installed.  When the real package is present we
+re-export it untouched; otherwise we substitute a tiny deterministic
+fallback that runs each property test on a fixed number of seeded pseudo-
+random examples (no shrinking, no database — strictly weaker than
+hypothesis, but far better than skipping the tests outright).
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                        # fallback mode
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def _lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    class _StrategiesNamespace:
+        integers = staticmethod(_integers)
+        floats = staticmethod(_floats)
+        booleans = staticmethod(_booleans)
+        sampled_from = staticmethod(_sampled_from)
+        lists = staticmethod(_lists)
+
+    st = _StrategiesNamespace()
+
+    def given(*strategies):
+        def deco(f):
+            # No functools.wraps: pytest would follow __wrapped__ and treat
+            # the strategy-filled parameters as fixtures.  The wrapper must
+            # present a ZERO-argument signature.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(1234)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    f(*drawn)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco

@@ -1,7 +1,7 @@
 """Data pipeline: Dirichlet partitioner properties, synthetic twins, batching."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.dirichlet import dirichlet_partition, heterogeneity
 from repro.data.pipeline import ClientShard, make_client_shards, token_stream

@@ -59,7 +59,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
 
     # grouped mean correctness
     x = jnp.arange(8.0)
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(sh.shard_map(
         lambda v: cc.intra_cluster_mean(v, "clients", groups),
         mesh=mesh, in_specs=P("clients"), out_specs=P("clients")))
     out = np.asarray(f(x))
@@ -67,21 +67,21 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     np.testing.assert_allclose(out, want)
 
     # two-level mean: (1/3)(1 + 3.5 + 6) everywhere
-    g = jax.jit(jax.shard_map(
+    g = jax.jit(sh.shard_map(
         lambda v: cc.fedsikd_global_mean(v, "clients", groups),
         mesh=mesh, in_specs=P("clients"), out_specs=P("clients")))
     np.testing.assert_allclose(np.asarray(g(x)), np.full(8, 3.5), rtol=1e-6)
 
     # fedavg weighted mean
     sizes = jnp.array([1., 1., 1., 1., 1., 1., 1., 9.])
-    h = jax.jit(jax.shard_map(
+    h = jax.jit(sh.shard_map(
         lambda v, n: cc.fedavg_mean(v, "clients", n),
         mesh=mesh, in_specs=(P("clients"), P("clients")), out_specs=P("clients")))
     want = float((np.arange(8) * np.array([1,1,1,1,1,1,1,9])).sum() / 16)
     np.testing.assert_allclose(np.asarray(h(x, sizes)), np.full(8, want), rtol=1e-6)
 
     # leader broadcast per cluster
-    b = jax.jit(jax.shard_map(
+    b = jax.jit(sh.shard_map(
         lambda v: cc.broadcast_from(v, "clients", 0, groups),
         mesh=mesh, in_specs=P("clients"), out_specs=P("clients")))
     np.testing.assert_allclose(np.asarray(b(x)), [0,0,0,3,3,5,5,5])
@@ -113,5 +113,5 @@ def test_sharded_cluster_collectives_8dev():
     r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert "SHARDED-OK" in r.stdout, r.stdout + r.stderr

@@ -1,10 +1,12 @@
-"""FedSiKD on a device mesh (DESIGN.md §3): 8 placeholder devices host 8
-clients.  Part 1 shows the raw collective pattern — intra-cluster grouped
-all-reduce + two-level global mean on plain-CE local steps.  Part 2 runs the
-FULL FedSiKD algorithm (Alg. 1) on the mesh: per-cluster teacher replicas,
+"""FedSiKD on a device mesh (DESIGN.md §3, §8): 8 placeholder devices.
+Part 1 shows the raw collective pattern — intra-cluster grouped all-reduce
++ two-level global mean on plain-CE local steps.  Part 2 runs the FULL
+FedSiKD algorithm (Alg. 1) on the mesh: per-cluster teacher replicas,
 KD-establishment warm-up, fused Pallas distillation steps inside lax.scan,
-grouped student aggregation.  This is the communication pattern the
-multi-pod dry-run scales up.
+grouped student aggregation.  Part 3 breaks the clients==devices coupling:
+24 clients packed 3-per-device with stratified partial participation
+(12 sampled clients per round) through the same jitted program.  This is
+the communication pattern the multi-pod dry-run scales up.
 
   PYTHONPATH=src python examples/sharded_collectives.py
 """
@@ -68,6 +70,21 @@ def main():
         kd_temperature=3.0, kd_alpha=0.5, kd_impl="fused",
         eval_fn=eval_fn, progress=True)
     print("accuracy curve:", ["%.3f" % a for a in hist["acc"]])
+
+    # ---- part 3: C >> devices — client packing + partial participation
+    # (fed/schedule.py: the scheduler assigns sampled clients to mesh slots
+    # and the packed round program is reused across rounds, DESIGN.md §8)
+    from repro.fed.rounds import FedConfig, run_federated
+
+    print("packed FedSiKD: 24 clients on 8 devices (pack=3), "
+          "12 sampled per round:")
+    hist3 = run_federated(ds, FedConfig(
+        algorithm="fedsikd", engine="sharded", num_clients=24, pack=3,
+        participation="stratified", clients_per_round=12,
+        alpha=0.5, rounds=3, local_epochs=1, teacher_warmup_epochs=2,
+        batch_size=32, num_clusters=3, seed=0), progress=True)
+    print("accuracy curve:", ["%.3f" % a for a in hist3["acc"]],
+          "participants/round:", hist3["participants"])
 
 
 if __name__ == "__main__":

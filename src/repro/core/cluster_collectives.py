@@ -11,7 +11,10 @@ no point-to-point RPC; this is the hardware-adapted form of Alg. 1 lines
 16-18 (DESIGN.md §3).
 
 All helpers are meant to be called INSIDE a shard_map'd function where
-``axis_name`` is bound.
+``axis_name`` is bound.  The ``packed_*`` variants additionally handle a
+local ``pack`` lane axis (several clients per device) and take their
+grouped-mean operators as RUNTIME arrays, so per-round participation
+changes never trigger a recompile (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -109,6 +112,57 @@ def teacher_sync(tree, axis_name: str, groups: list[list[int]]):
     return jax.tree_util.tree_map(
         lambda orig, new: new if jnp.issubdtype(orig.dtype, jnp.floating)
         else orig, tree, synced)
+
+
+# -------------------------------------------------- client-packed variants
+#
+# The packed mesh engine hosts a (pack,) block of clients per device: leaves
+# carry a leading local ``pack`` axis inside shard_map, and the global slot
+# id of lane l on device d is d * pack + l.  Cluster groups therefore span
+# (device, lane) PAIRS, and — because partial participation re-draws the
+# groups every round — the grouped-mean operators are RUNTIME arguments
+# (jnp arrays built from the RoundPlan, see fed/schedule.py) rather than
+# baked-in constants: the jitted round program is reused across rounds with
+# different participant subsets at zero recompile cost.
+
+def packed_weighted_gather(tree, axis_name: str, table, *, pack: int):
+    """Packed form of ``_weighted_gather``: leaves are (pack, ...) local
+    blocks; ``table`` is a traced (S,) row or (S, S) matrix over GLOBAL slot
+    ids (S = axis_size * pack).  Each lane contracts its own table row
+    against the all-gathered slot stack."""
+    table = jnp.asarray(table, jnp.float32)
+
+    def leaf(x):
+        g = jax.lax.all_gather(x.astype(jnp.float32), axis_name)   # (D,pack,..)
+        g = g.reshape((-1,) + x.shape[1:])                         # (S, ...)
+        if table.ndim == 2:
+            base = jax.lax.axis_index(axis_name) * pack
+            w = jax.lax.dynamic_slice_in_dim(table, base, pack, 0)  # (pack,S)
+        else:
+            w = jnp.broadcast_to(table[None, :], (pack, table.shape[0]))
+        return jnp.tensordot(w, g, axes=1).astype(x.dtype)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def packed_teacher_sync(tree, axis_name: str, sync_matrix, *, pack: int):
+    """``teacher_sync`` over (device, lane) slots with a runtime
+    row-stochastic (S, S) operator (``RoundPlan.sync_matrix()``: cluster
+    members average over the cluster's active slots, idle slots keep an
+    identity row).  Integer leaves (Adam step counts) stay per-slot, exactly
+    as in the unpacked ``teacher_sync``."""
+    synced = packed_weighted_gather(tree, axis_name, sync_matrix, pack=pack)
+    return jax.tree_util.tree_map(
+        lambda orig, new: new if jnp.issubdtype(orig.dtype, jnp.floating)
+        else orig, tree, synced)
+
+
+def packed_weighted_mean(tree, axis_name: str, weights, *, pack: int):
+    """Global weighted mean over slots with a runtime (S,) weight row
+    (``RoundPlan.agg_row()``; weights sum to 1, idle slots weigh 0).  Every
+    slot — idle ones included — ends holding the same aggregate, which is
+    how the packed engine broadcasts the new global student."""
+    return packed_weighted_gather(tree, axis_name, weights, pack=pack)
 
 
 def fedavg_mean(tree, axis_name: str, num_examples: jax.Array):

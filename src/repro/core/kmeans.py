@@ -92,7 +92,13 @@ def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
     mean_to = sums / jnp.maximum(counts[None, :], 1.0)
     other = jnp.where(jax.nn.one_hot(assign, k, dtype=bool), jnp.inf, mean_to)
     b = jnp.where(counts[None, :] > 0, other, jnp.inf).min(axis=1)
-    s = jnp.where(own > 1, (b - a) / jnp.maximum(jnp.maximum(a, b), _EPS), 0.0)
+    # Empty-cluster guard: when every OTHER cluster is empty (all points in
+    # one cluster, or k larger than the number of occupied clusters), ``b``
+    # stays +inf and (b - a)/max(a, b) is inf/NaN — which would corrupt
+    # select_k's metric vote.  Such points get the 0 convention (same as
+    # singleton clusters), keeping the score finite in [-1, 1].
+    s = jnp.where((own > 1) & jnp.isfinite(b),
+                  (b - a) / jnp.maximum(jnp.maximum(a, b), _EPS), 0.0)
     del n
     return s.mean()
 

@@ -67,6 +67,12 @@ def privatize(
     Each statistic is clipped to [-clip, clip] (bounding sensitivity) and
     perturbed with N(0, (noise_multiplier*clip)^2) noise.  ``noise_multiplier=0``
     returns the stats unchanged.
+
+    Post-conditions: ``mean`` and ``skewness`` are unconstrained reals;
+    ``std`` is clamped to >= 0 AFTER noising — Gaussian noise can drive a
+    small true std negative, and a negative std poisons the standardized
+    k-means features (and any downstream ``sqrt``/scale use).  Clamping is
+    post-processing of the DP release, so it costs no privacy budget.
     """
     if noise_multiplier <= 0.0:
         return stats
@@ -80,7 +86,7 @@ def privatize(
 
     return ClientStats(
         mean=noisy(stats.mean, ks[0]),
-        std=noisy(stats.std, ks[1]),
+        std=jnp.maximum(noisy(stats.std, ks[1]), 0.0),
         skewness=noisy(stats.skewness, ks[2]),
     )
 

@@ -1,3 +1,4 @@
 from repro.fed.rounds import FedConfig, run_federated
+from repro.fed.schedule import RoundPlan, RoundScheduler
 
-__all__ = ["FedConfig", "run_federated"]
+__all__ = ["FedConfig", "run_federated", "RoundPlan", "RoundScheduler"]

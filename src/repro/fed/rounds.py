@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import hierarchical, kmeans, stats
+from repro.fed import schedule
 from repro.data.pipeline import ClientShard, make_client_shards
 from repro.data.synthetic import Dataset
 from repro.fed.client import evaluate, make_steps
@@ -39,6 +40,18 @@ class FedConfig:
     #   fused     — Pallas kd_distillation_loss kernel (one pass over logits)
     #   reference — pure-jnp core.distill.distillation_loss
     kd_impl: str = "fused"
+    # Per-round participation policy (fed/schedule.py, DESIGN.md §8):
+    #   full       — every client, every round (the original behaviour)
+    #   uniform    — clients_per_round sampled uniformly w/o replacement
+    #   stratified — per-cluster proportional sampling, >= 1 per cluster
+    #                (every cluster keeps teacher coverage)
+    # Both engines consume the same deterministic RoundPlan, so loop/sharded
+    # parity extends to sampled rounds.
+    participation: str = "full"
+    clients_per_round: Optional[int] = None
+    # Client lanes per device in the sharded engine: C = devices x pack
+    # clients run in one jitted program (ignored by the loop engine).
+    pack: int = 1
     num_clients: int = 40
     alpha: float = 0.5                # Dirichlet skew
     rounds: int = 5
@@ -64,6 +77,28 @@ class FedConfig:
     cluster_weighting: str = "size"      # size (§IV-C.5 text) | uniform (Alg.1)
     dp_noise: float = 0.0                # DP noise multiplier on shared stats
     seed: int = 0
+
+    def __post_init__(self):
+        # knob-level validation; the RoundScheduler re-validates against the
+        # actual cluster structure (e.g. stratified needs >= K participants)
+        if self.participation not in schedule.PARTICIPATION_MODES:
+            raise ValueError(
+                f"participation must be one of {schedule.PARTICIPATION_MODES},"
+                f" got {self.participation!r}")
+        if self.participation == "full":
+            if self.clients_per_round not in (None, self.num_clients):
+                raise ValueError(
+                    "clients_per_round only applies with participation="
+                    "'uniform' or 'stratified'")
+        elif self.clients_per_round is None:
+            raise ValueError(
+                f"participation={self.participation!r} needs clients_per_round")
+        elif not 1 <= self.clients_per_round <= self.num_clients:
+            raise ValueError(
+                f"clients_per_round must be in [1, {self.num_clients}], got "
+                f"{self.clients_per_round}")
+        if self.pack < 1:
+            raise ValueError(f"pack must be >= 1, got {self.pack}")
 
 
 def _local_epochs(shard: ClientShard, steps, params, opt_state, key, cfg,
@@ -130,6 +165,10 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         raise ValueError(
             f"engine='sharded' implements the clustered-KD algorithms "
             f"(fedsikd | random); use engine='loop' for {cfg.algorithm!r}")
+    if cfg.participation != "full" and cfg.algorithm == "flhc":
+        raise ValueError(
+            "FL+HC clusters on a full pre-round of local updates; partial "
+            "participation is not defined for it (use participation='full')")
     shards = make_client_shards(ds, cfg.num_clients, cfg.alpha, seed=cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     opt = adamw(cfg.lr)
@@ -165,18 +204,26 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
                    for c in clusters]
         history["num_clusters"] = len(clusters)
+        # the ONE participation policy both engines consume (DESIGN.md §8)
+        scheduler = schedule.RoundScheduler(
+            labels, participation=cfg.participation,
+            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
+            weighting=cfg.cluster_weighting, seed=cfg.seed)
 
         if cfg.engine == "sharded":
-            # Scalable path: same Alg. 1 phases, mapped onto a device mesh
-            # (one client per device; see fed/sharded.py and DESIGN.md §3).
+            # Scalable path: same Alg. 1 phases, mapped onto a packed device
+            # mesh (pack clients per device; fed/sharded.py, DESIGN.md §3/§8).
             from repro.fed import sharded as sh
-            mesh = sh.make_client_mesh(cfg.num_clients)
+            from repro.launch.mesh import make_fed_client_mesh
+            mesh = make_fed_client_mesh(scheduler.max_participants,
+                                        pack=cfg.pack,
+                                        n_devices=scheduler.n_devices)
 
             def eval_fn(p):
                 return evaluate(student_steps["eval"], p, ds.x_test, ds.y_test)
 
             _, hist = sh.run_sharded_fedsikd_kd(
-                mesh, shards, labels,
+                mesh, shards, labels, scheduler=scheduler,
                 t_model=(t_init, t_fwd), s_model=(s_init, s_fwd),
                 t_opt=opt, s_opt=s_opt, rounds=cfg.rounds,
                 local_epochs=cfg.local_epochs,
@@ -189,16 +236,22 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                 eval_fn=eval_fn, progress=progress)
             history.update({k: hist[k] for k in
                             ("acc", "loss", "round", "engine",
-                             "teacher_loss", "student_loss")})
+                             "teacher_loss", "student_loss",
+                             "pack", "participation", "participants")})
             return history
 
         global_student = s_init(key)
         teachers = [t_init(jax.random.fold_in(key, 100 + k))
                     for k in range(len(clusters))]
         t_opts = [opt.init(t) for t in teachers]
-        def teacher_shards(ci):
+        def teacher_shards(ci, members=None):
+            # "cluster" mode pools the round's SAMPLED members only (None =
+            # all, for warm-up): the packed engine trains teacher replicas
+            # on participating slots' shards, and non-participants' raw data
+            # must not reach the teacher in a round they sat out
             if cfg.teacher_data == "cluster":
-                return [shards[i] for i in clusters[ci]]
+                return [shards[i]
+                        for i in (clusters[ci] if members is None else members)]
             return [shards[leaders[ci]]]
 
         # KD establishment phase (pre-round teacher warm-up)
@@ -209,15 +262,23 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                     jax.random.fold_in(key, 9000 + ci), cfg,
                     step_fn=teacher_steps["ce"],
                     epochs=cfg.teacher_warmup_epochs)
+        history["participation"] = cfg.participation
+        history["participants"] = []
         for rnd in range(1, cfg.rounds + 1):
-            new_params, cluster_of = [], []
+            plan = scheduler.plan(rnd)
+            part = set(int(i) for i in plan.participants)
+            weight_of = plan.weight_of()
+            new_params, weights = [], []
             for ci, members in enumerate(clusters):
-                # Alg.1 line 12: teacher trains on cluster data
+                sel = [i for i in members if int(i) in part]
+                if not sel:
+                    continue           # no sampled member: teacher untouched
+                # Alg.1 line 12: teacher trains on (sampled) cluster data
                 teachers[ci], t_opts[ci] = _cluster_epochs(
-                    teacher_shards(ci), teachers[ci], t_opts[ci],
+                    teacher_shards(ci, sel), teachers[ci], t_opts[ci],
                     jax.random.fold_in(key, rnd * 1000 + ci), cfg,
                     step_fn=teacher_steps["ce"], epochs=cfg.local_epochs)
-                for i in members:
+                for i in sel:
                     sp = jax.tree_util.tree_map(jnp.copy, global_student)
                     so = s_opt.init(sp)
                     sp, _ = _local_epochs(
@@ -225,9 +286,11 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                         jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
                         step_fn=distill_step, extra=(teachers[ci],))
                     new_params.append(sp)
-                    cluster_of.append(ci)
-            global_student = agg.hierarchical_average(new_params, cluster_of,
-                                                       weighting=cfg.cluster_weighting)
+                    weights.append(weight_of[int(i)])
+            # the plan's weights ARE the two-level FedSiKD mean, extended
+            # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
+            global_student = agg.weighted_average(new_params, weights)
+            history["participants"].append(len(new_params))
             record(global_student, student_steps["eval"], rnd)
         return history
 
@@ -283,10 +346,19 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         return history
 
     # ------------------------------------------------- fedavg / fedprox
+    # no cluster structure: one pseudo-cluster, so uniform == stratified and
+    # the plan is just "which clients train this round"
+    scheduler = schedule.RoundScheduler(
+        np.zeros(cfg.num_clients, np.int32), participation=cfg.participation,
+        clients_per_round=cfg.clients_per_round, seed=cfg.seed)
+    history["participation"] = cfg.participation
+    history["participants"] = []
     global_params = t_init(key)
     for rnd in range(1, cfg.rounds + 1):
+        part = scheduler.plan(rnd).participants
+        history["participants"].append(len(part))
         locals_, sizes = [], []
-        for i, sh in enumerate(shards):
+        for i, sh in ((int(i), shards[int(i)]) for i in part):
             p = jax.tree_util.tree_map(jnp.copy, global_params)
             o = opt.init(p)
             if cfg.algorithm == "fedprox":

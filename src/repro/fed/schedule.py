@@ -1,0 +1,279 @@
+"""Round scheduler: WHO trains each round, and WHERE on the mesh.
+
+Real FL deployments sample a fraction of a huge client population per round
+(partial participation is the default regime in the non-i.i.d. FL
+literature), and the paper's clustered-KD structure adds a constraint of its
+own: every cluster must keep teacher coverage, or its teacher goes stale.
+This module turns participation into a first-class, engine-agnostic
+quantity:
+
+- ``RoundScheduler`` owns the participation policy (``full`` | ``uniform``
+  | ``stratified``) and the packed mesh layout (``n_devices`` devices x
+  ``pack`` client lanes per device = ``n_slots`` slots).
+- ``RoundScheduler.plan(r)`` returns a ``RoundPlan``: the participating
+  client subset for round ``r``, their slot assignment, their aggregation
+  weights, and the slot-indexed collective operators (intra-cluster sync
+  matrix, global aggregation row) the mesh engine contracts with.
+
+Both round engines consume the same plan (``fed/rounds.py`` loop,
+``fed/sharded.py`` packed mesh), so loop/sharded parity extends to sampled
+rounds: the engines train the SAME clients with the SAME step budgets and
+aggregate with the SAME weights.
+
+Unbiased aggregation under sampling (DESIGN.md §8): the plan weights
+combine the FULL-population cluster weight W_k (``uniform`` -> 1/K,
+``size`` -> |C_k|/N, per Alg. 1 / §IV-C.5) with the per-round sampled
+member count m_k: a slot hosting a member of cluster k aggregates with
+weight W_k / m_k.  Since the within-cluster sample mean is an unbiased
+estimator of the cluster mean, the expected aggregate equals the
+full-participation aggregate whenever every cluster is represented —
+which ``stratified`` sampling guarantees (>= 1 member per cluster, so no
+cluster is ever teacher-less).  Under ``uniform`` sampling a cluster can
+drop out of a round entirely; its weight is then renormalised over the
+clusters present (documented bias, bounded by the dropout probability).
+
+With ``participation="full"`` the plan collapses to today's semantics
+exactly: slot i hosts client i, weights reproduce
+``aggregation.hierarchical_average`` (``size`` -> flat 1/N, ``uniform`` ->
+1/(K*|C_k|)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.launch.mesh import fed_mesh_layout
+
+PARTICIPATION_MODES = ("full", "uniform", "stratified")
+WEIGHTINGS = ("uniform", "size")
+
+
+# --------------------------------------------------------------- round plan
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One round's participation + mesh-slot assignment.
+
+    Slot arrays all have length ``n_slots = n_devices * pack``; slot ``s``
+    lives on device ``s // pack``, lane ``s % pack``.  Idle slots (padding
+    when fewer participants than slots) carry ``client == -1``, train for 0
+    steps, and aggregate with weight 0.
+    """
+
+    round_index: int
+    pack: int
+    slot_client: np.ndarray    # (S,) int32 client id per slot; -1 = idle
+    slot_cluster: np.ndarray   # (S,) int32 cluster INDEX per slot; -1 = idle
+    slot_weight: np.ndarray    # (S,) float32 aggregation weight; sums to 1
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slot_client)
+
+    @property
+    def active(self) -> np.ndarray:
+        """(S,) bool — slots that host a participating client."""
+        return self.slot_client >= 0
+
+    @property
+    def participants(self) -> np.ndarray:
+        """Participating client ids, in slot order (cluster-contiguous)."""
+        return self.slot_client[self.active]
+
+    def weight_of(self) -> dict[int, float]:
+        """client id -> aggregation weight (participants only)."""
+        return {int(c): float(w) for c, w in
+                zip(self.slot_client, self.slot_weight) if c >= 0}
+
+    def sync_matrix(self) -> np.ndarray:
+        """(S, S) row-stochastic intra-cluster mean operator over slots.
+
+        Row s of the matrix is slot s's post-sync mixture: active slots
+        average over their cluster's ACTIVE slots (the mesh form of Alg. 1's
+        teacher sync, now spanning (device, lane) pairs); idle slots get an
+        identity row so whatever they carry passes through untouched.
+        """
+        S = self.n_slots
+        w = np.eye(S, dtype=np.float32)
+        for k in np.unique(self.slot_cluster[self.active]):
+            members = np.flatnonzero(self.active & (self.slot_cluster == k))
+            w[np.ix_(members, members)] = 1.0 / len(members)
+        return w
+
+    def agg_row(self) -> np.ndarray:
+        """(S,) global aggregation weights (the two-level FedSiKD mean
+        collapsed into one contraction row; idle slots weigh 0)."""
+        return self.slot_weight.astype(np.float32)
+
+    def steps_for(self, per_client_steps: np.ndarray) -> np.ndarray:
+        """(S,) int32 per-slot step budgets: the hosted client's budget for
+        active slots, 0 for idle slots (their scan carry stays frozen)."""
+        per_client_steps = np.asarray(per_client_steps)
+        safe = np.where(self.active, self.slot_client, 0)
+        return np.where(self.active, per_client_steps[safe], 0).astype(np.int32)
+
+
+# ---------------------------------------------------------------- scheduler
+class RoundScheduler:
+    """Deterministic per-round participation + slot-assignment policy.
+
+    Parameters
+    ----------
+    cluster_of : (C,) cluster label per client (any hashable labels).
+    participation : ``full`` (everyone, every round), ``uniform``
+        (``clients_per_round`` sampled uniformly without replacement), or
+        ``stratified`` (per-cluster proportional allocation with a floor of
+        one member per cluster, so no cluster is ever teacher-less).
+    clients_per_round : sample size; required for non-``full`` modes.
+    pack : client lanes per device in the mesh engine (>= 1).
+    n_devices : mesh size; defaults to ``ceil(max_participants / pack)``.
+    weighting : full-population cluster weight, ``size`` (|C_k|/N,
+        §IV-C.5) or ``uniform`` (1/K, Alg. 1 literal).
+    seed : plans are a pure function of (seed, round_index).
+    """
+
+    def __init__(self, cluster_of: Sequence[int], *,
+                 participation: str = "full",
+                 clients_per_round: Optional[int] = None,
+                 pack: int = 1, n_devices: Optional[int] = None,
+                 weighting: str = "size", seed: int = 0):
+        labels = np.asarray(cluster_of)
+        self.n_clients = len(labels)
+        uniq = np.unique(labels)
+        # cluster INDEX (0..K-1) per client — the one id space plans use
+        self.cluster_idx = np.searchsorted(uniq, labels).astype(np.int32)
+        self.groups = [np.flatnonzero(self.cluster_idx == k)
+                       for k in range(len(uniq))]
+        self.n_clusters = len(self.groups)
+        if participation not in PARTICIPATION_MODES:
+            raise ValueError(f"participation must be one of "
+                             f"{PARTICIPATION_MODES}, got {participation!r}")
+        if weighting not in WEIGHTINGS:
+            raise ValueError(f"weighting must be one of {WEIGHTINGS}, "
+                             f"got {weighting!r}")
+        if participation == "full":
+            if clients_per_round not in (None, self.n_clients):
+                raise ValueError(
+                    f"participation='full' runs all {self.n_clients} clients "
+                    f"every round; clients_per_round={clients_per_round} "
+                    f"conflicts (use participation='uniform'/'stratified')")
+            clients_per_round = self.n_clients
+        else:
+            if clients_per_round is None:
+                raise ValueError(
+                    f"participation={participation!r} needs clients_per_round")
+            if not 1 <= clients_per_round <= self.n_clients:
+                raise ValueError(
+                    f"clients_per_round must be in [1, {self.n_clients}], "
+                    f"got {clients_per_round}")
+            if (participation == "stratified"
+                    and clients_per_round < self.n_clusters):
+                raise ValueError(
+                    f"stratified sampling needs clients_per_round >= "
+                    f"n_clusters ({self.n_clusters}) to keep every cluster's "
+                    f"teacher covered, got {clients_per_round}")
+        self.participation = participation
+        self.clients_per_round = clients_per_round
+        self.weighting = weighting
+        self.pack = pack
+        self.max_participants = clients_per_round
+        # the ONE slot-layout rule, shared with the mesh builder
+        self.n_devices, self.n_slots = fed_mesh_layout(
+            self.max_participants, pack=pack, n_devices=n_devices)
+        self.seed = seed
+
+    # ------------------------------------------------------------- sampling
+    def _rng(self, round_index: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed & 0x7FFFFFFF, round_index + 1]))
+
+    def _stratified_counts(self, total: int, caps: np.ndarray) -> np.ndarray:
+        """Largest-remainder apportionment of ``total`` over clusters,
+        proportional to cluster size, floored at 1 and capped at |C_k|."""
+        sizes = caps.astype(np.float64)
+        quota = total * sizes / sizes.sum()
+        m = np.clip(np.floor(quota).astype(np.int64), 1, caps)
+        # distribute the remainder to the largest fractional parts (ties ->
+        # lower cluster index), respecting the caps
+        order = np.argsort(-(quota - np.floor(quota)), kind="stable")
+        for k in np.concatenate([order, np.arange(len(caps))]):
+            if m.sum() >= total:
+                break
+            if m[k] < caps[k]:
+                m[k] += 1
+        while m.sum() > total:         # floors can overshoot a tiny total
+            k = int(np.argmax(m - 1))  # shrink the largest above its floor
+            if m[k] <= 1:
+                break
+            m[k] -= 1
+        return m.astype(np.int64)
+
+    def _sample(self, round_index: int) -> list[np.ndarray]:
+        """Participating client ids per cluster (ascending within cluster)."""
+        if self.participation == "full":
+            return [g.copy() for g in self.groups]
+        rng = self._rng(round_index)
+        if self.participation == "uniform":
+            chosen = rng.choice(self.n_clients, self.clients_per_round,
+                                replace=False)
+            return [np.sort(chosen[np.isin(chosen, g)]) for g in self.groups]
+        caps = np.asarray([len(g) for g in self.groups])
+        counts = self._stratified_counts(self.clients_per_round, caps)
+        return [np.sort(rng.choice(g, int(m), replace=False))
+                for g, m in zip(self.groups, counts)]
+
+    # ----------------------------------------------------------------- plan
+    def _build_plan(self, round_index: int,
+                    per_cluster: list[np.ndarray]) -> RoundPlan:
+        S = self.n_slots
+        slot_client = np.full(S, -1, np.int32)
+        slot_cluster = np.full(S, -1, np.int32)
+        slot_weight = np.zeros(S, np.float32)
+
+        present = [k for k, sel in enumerate(per_cluster) if len(sel)]
+        if self.weighting == "size":
+            W = {k: len(self.groups[k]) / self.n_clients for k in present}
+        else:
+            W = {k: 1.0 / self.n_clusters for k in present}
+        norm = sum(W.values())          # renormalise over present clusters
+
+        s = 0                           # clusters are slot-contiguous
+        for k in present:
+            sel = per_cluster[k]
+            w = W[k] / (norm * len(sel))
+            for i in sel:
+                slot_client[s] = i
+                slot_cluster[s] = k
+                slot_weight[s] = w
+                s += 1
+        return RoundPlan(round_index=round_index, pack=self.pack,
+                         slot_client=slot_client, slot_cluster=slot_cluster,
+                         slot_weight=slot_weight)
+
+    def plan(self, round_index: int) -> RoundPlan:
+        """The participation plan for round ``round_index`` (1-based by
+        convention; any int is valid and deterministic)."""
+        return self._build_plan(round_index, self._sample(round_index))
+
+    def warmup_plan(self) -> RoundPlan:
+        """Teacher-coverage plan for the pre-round KD-establishment phase:
+        all clients when they fit the mesh, otherwise a stratified slice of
+        ``n_slots`` clients (still >= 1 per cluster) so every cluster's
+        teacher warms up even when C >> slots.  With ``teacher_data="leader"``
+        the member choice is immaterial (every slot of a cluster streams the
+        same leader feed); with ``"cluster"`` this caps the warm-up's
+        data-parallel width at the mesh size."""
+        if self.n_clients <= self.n_slots:
+            return self._build_plan(0, [g.copy() for g in self.groups])
+        if self.n_clusters > self.n_slots:
+            raise ValueError(
+                f"teacher warm-up needs at least one mesh slot per cluster: "
+                f"{self.n_clusters} clusters > {self.n_slots} slots "
+                f"(raise pack or n_devices)")
+        caps = np.asarray([len(g) for g in self.groups])
+        counts = self._stratified_counts(self.n_slots, caps)
+        rng = self._rng(0)
+        sel = [np.sort(rng.choice(g, int(m), replace=False))
+               for g, m in zip(self.groups, counts)]
+        return self._build_plan(0, sel)

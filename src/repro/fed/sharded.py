@@ -1,30 +1,43 @@
-"""Client-parallel federated runtime on a device mesh — now KD-complete.
+"""Client-packed federated runtime on a device mesh — KD-complete, with
+scheduled partial participation.
 
-One device (mesh axis "clients") hosts one client: local steps run
-data-parallel across clients inside ``shard_map``; FedSiKD's hierarchical
-aggregation is a GROUPED ALL-REDUCE (weighted all-gather contraction with
-``axis_index_groups`` semantics derived from the stats clustering) followed
-by the two-level global mean — the paper's server loop mapped onto the ICI
-torus (DESIGN.md §3).
+Each device on the 1-D ``"clients"`` mesh axis hosts a ``(pack,)`` block of
+client lanes, so ``C = devices x pack`` clients run in ONE jitted program —
+the clients==devices coupling of the original runtime is gone.  Local steps
+are ``vmap``-ed over the lane axis inside ``shard_map``; FedSiKD's
+hierarchical aggregation is a grouped weighted-gather contraction whose
+cluster groups span (device, lane) pairs — and whose operators are RUNTIME
+arrays built from a per-round ``RoundPlan`` (fed/schedule.py), so partial
+participation (sampled client subsets) re-uses the compiled program across
+rounds (DESIGN.md §3, §8).
 
-Two round engines live here:
+Engines in this module:
 
-- ``make_sharded_round``     — plain CE local steps + grouped aggregation
-  (the original runtime; FedAvg / cluster-only variants).
-- ``make_sharded_kd_round``  — the full FedSiKD round (Alg. 1): per-cluster
-  TEACHER REPLICAS stacked on the client axis (one copy per member device),
+- ``make_sharded_round``       — plain CE local steps + grouped aggregation
+  (one client per device; FedAvg / cluster-only variants).
+- ``make_packed_kd_round``     — the full FedSiKD round (Alg. 1) on the
+  packed mesh: per-cluster TEACHER REPLICAS on every participating slot,
   teacher CE steps, intra-cluster teacher sync
-  (``cluster_collectives.teacher_sync``), then student DISTILLATION steps
+  (``cluster_collectives.packed_teacher_sync``), student DISTILLATION steps
   that call the fused Pallas ``kd_distillation_loss`` kernel inside the
-  ``jax.lax.scan`` step loop, and finally the grouped student aggregation.
-  ``make_teacher_phase`` provides Alg. 1's pre-round KD-establishment
+  ``jax.lax.scan`` step loop, and the grouped student aggregation — all
+  masked per slot by the plan's step budgets (idle slots freeze).
+  ``make_packed_teacher_phase`` is Alg. 1's pre-round KD-establishment
   (teacher warm-up) as a separate jitted collective program.
 
-Per-client step masking: every client is padded to the same static number of
-scan steps (shorter clients' extra steps are frozen via ``jnp.where``), so
-the sharded engine performs exactly the same number of REAL updates per
-client as the sequential loop engine in ``rounds.py`` — that is what makes
-loop/sharded parity tight (tests/test_sharded_kd.py).
+Per-slot step masking: every slot is padded to the same static number of
+scan steps (shorter clients' extra steps are frozen via ``jnp.where``, idle
+slots run zero), so the packed engine performs exactly the same number of
+REAL updates per participating client as the sequential loop engine in
+``rounds.py`` — that is what makes loop/packed parity tight, on full AND
+sampled rounds (tests/test_sharded_kd.py, tests/test_schedule.py).
+
+Canonical state lives per CLUSTER between rounds (teachers: a (K, ...)
+stacked pytree; student: one global pytree): each round the driver gathers
+it onto the plan's slots, runs the collective program, and scatters the
+refreshed teachers back from each cluster's first active slot.  Clusters
+with no sampled member this round keep their teacher untouched — exactly
+like the loop engine skipping them.
 
 This runtime drives the paper's CNNs (or any pure fwd fn) and is exercised
 by tests/examples with ``--xla_force_host_platform_device_count``.  jax API
@@ -34,20 +47,22 @@ is absorbed by the small compat shims at the top.
 from __future__ import annotations
 
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cluster_collectives as cc
 from repro.core.distill import distillation_loss, softmax_cross_entropy
+from repro.fed.schedule import RoundPlan, RoundScheduler
 from repro.kernels import ops
+from repro.launch.mesh import CLIENT_AXIS, make_fed_client_mesh
+from repro.launch.shardings import client_stack_specs, named
 from repro.optim import Optimizer, apply_updates
 
-AXIS = "clients"
+AXIS = CLIENT_AXIS
 
 
 # ------------------------------------------------------------ jax compat
@@ -69,16 +84,10 @@ def shard_map(f, mesh, in_specs, out_specs):
                   check_rep=False)
 
 
-def make_client_mesh(n_clients: int) -> Mesh:
-    """1-D mesh with one device per client (first ``n_clients`` devices)."""
-    devs = jax.devices()
-    if len(devs) < n_clients:
-        raise ValueError(
-            f"need {n_clients} devices for {n_clients} clients, have "
-            f"{len(devs)}; on CPU set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_clients} "
-            f"before importing jax")
-    return Mesh(np.asarray(devs[:n_clients]), (AXIS,))
+def make_client_mesh(n_devices: int):
+    """1-D client mesh over the first ``n_devices`` devices (pack=1 layout;
+    the packed engine sizes its mesh via ``launch.mesh.make_fed_client_mesh``)."""
+    return make_fed_client_mesh(n_devices, pack=1)
 
 
 # ------------------------------------------------------------ data staging
@@ -86,7 +95,9 @@ def stack_client_data(shards, steps_per_round: int, batch_size: int, *,
                       seed: int = 0):
     """(C, steps, B, ...) arrays — every client padded to the same number of
     steps per round (shorter clients repeat batches cyclically; pair with
-    ``client_step_counts`` to mask the repeats out)."""
+    ``client_step_counts`` to mask the repeats out).  The packed engine
+    stages ALL clients once and row-gathers each round's participants onto
+    mesh slots (``RoundPlan.slot_client``)."""
     xs, ys = [], []
     for sh in shards:
         bx, by = [], []
@@ -110,10 +121,10 @@ def client_step_counts(shards, batch_size: int, epochs: int) -> np.ndarray:
                        for sh in shards], np.int32)
 
 
-def replicate_params(params, n_clients: int):
-    """Stack identical replicas on a leading client axis."""
+def replicate_params(params, n: int):
+    """Stack identical replicas on a leading slot axis."""
     return jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a, (n_clients,) + a.shape).copy(), params)
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), params)
 
 
 def _squeeze(tree):
@@ -127,8 +138,9 @@ def _unsqueeze(tree):
 
 def _masked_scan_steps(step_fn, carry, xs, ys, n_steps):
     """Run ``step_fn(carry, (x, y, step_index))`` over (xs, ys) freezing the
-    carry once the per-device step budget ``n_steps`` is spent (shorter
-    clients stop early, exactly as in the sequential loop engine)."""
+    carry once the per-slot step budget ``n_steps`` is spent (shorter
+    clients stop early, idle slots — ``n_steps == 0`` — never move, exactly
+    as in the sequential loop engine)."""
     idx = jnp.arange(xs.shape[0])
 
     def step(carry, batch):
@@ -163,6 +175,13 @@ def _make_teacher_step(t_fwd: Callable, t_opt: Optimizer, rng):
     return t_step
 
 
+def _active_mean(loss, n_steps, axis_name):
+    """Mean of per-lane losses over the ACTIVE slots of the whole mesh."""
+    num = jax.lax.psum(jnp.sum(jnp.where(n_steps > 0, loss, 0.0)), axis_name)
+    den = jax.lax.psum(jnp.sum((n_steps > 0).astype(jnp.float32)), axis_name)
+    return num / jnp.maximum(den, 1.0)
+
+
 # -------------------------------------------------- plain-CE round engine
 def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
                        cluster_groups: list[list[int]],
@@ -170,7 +189,8 @@ def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
     """Returns jitted round_fn(params_stacked, opt_stacked, x, y, sizes).
 
     params_stacked leaves: (C, ...) — one replica per client, sharded on the
-    client axis.  One call = local steps on every client + aggregation:
+    client axis (pack=1 layout).  One call = local steps on every client +
+    aggregation:
       fedsikd -> grouped psum (cluster mean) then two-level global mean
       fedavg  -> example-weighted global all-reduce
     After the call every client's replica holds the aggregated weights.
@@ -213,112 +233,115 @@ def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
     return jax.jit(shard)
 
 
-# ------------------------------------------------ FedSiKD KD round engine
-def make_teacher_phase(mesh, t_fwd: Callable, t_opt: Optimizer,
-                       cluster_groups: list[list[int]]):
-    """Jitted teacher-only collective program: CE steps on every device's
-    teacher feed, then intra-cluster teacher sync.  Used for Alg. 1's
-    KD-establishment warm-up AND for the per-round teacher refresh.
+# ----------------------------------------- FedSiKD packed KD round engine
+def make_packed_teacher_phase(mesh, pack: int, t_fwd: Callable,
+                              t_opt: Optimizer):
+    """Jitted teacher-only collective program on the packed mesh: CE steps
+    on every slot's teacher feed (vmap over the ``pack`` lane axis), then
+    intra-cluster teacher sync with the plan's runtime (S, S) operator.
+    Used for Alg. 1's KD-establishment warm-up AND for the per-round teacher
+    refresh.
 
-    ``rng`` is one PRNG key per device (training mode is on, so dropout
-    models get a fresh per-step key, as in the loop engine).  With
-    ``teacher_data="leader"`` the driver hands all members of a cluster the
+    ``rng`` is one PRNG key per slot (training mode is on, so dropout models
+    get a fresh per-step key, as in the loop engine).  With
+    ``teacher_data="leader"`` the driver hands all slots of a cluster the
     SAME key, keeping teacher replicas bitwise in sync (see
     ``run_sharded_fedsikd_kd``)."""
 
-    def phase(tp, ts, xs, ys, n_steps, rng):
-        tp, ts = _squeeze(tp), _squeeze(ts)
-        xs, ys = _squeeze(xs), _squeeze(ys)
-        n_steps, rng = n_steps[0], rng[0]
+    def phase(tp, ts, xs, ys, n_steps, rng, sync_mat):
+        def lane(tp, ts, xs, ys, n, rng):
+            step = _make_teacher_step(t_fwd, t_opt, rng)
+            return _masked_scan_steps(step, (tp, ts), xs, ys, n)
 
-        step = _make_teacher_step(t_fwd, t_opt, rng)
-        (tp, ts), loss = _masked_scan_steps(step, (tp, ts), xs, ys, n_steps)
-        tp = cc.teacher_sync(tp, AXIS, cluster_groups)
-        ts = cc.teacher_sync(ts, AXIS, cluster_groups)
-        return _unsqueeze(tp), _unsqueeze(ts), jax.lax.pmean(loss, AXIS)
+        (tp, ts), loss = jax.vmap(lane)(tp, ts, xs, ys, n_steps, rng)
+        tp = cc.packed_teacher_sync(tp, AXIS, sync_mat, pack=pack)
+        ts = cc.packed_teacher_sync(ts, AXIS, sync_mat, pack=pack)
+        return tp, ts, _active_mean(loss, n_steps, AXIS)
 
     return jax.jit(shard_map(
         phase, mesh,
-        in_specs=(P(AXIS),) * 6,
+        in_specs=(P(AXIS),) * 6 + (P(),),
         out_specs=(P(AXIS), P(AXIS), P()),
     ))
 
 
-def make_sharded_kd_round(mesh, t_fwd: Callable, s_fwd: Callable,
-                          t_opt: Optimizer, s_opt: Optimizer,
-                          cluster_groups: list[list[int]], *,
-                          kd_temperature: float = 2.0, kd_alpha: float = 0.5,
-                          kd_impl: str = "fused",
-                          cluster_weighting: str = "size"):
+def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
+                         t_opt: Optimizer, s_opt: Optimizer, *,
+                         kd_temperature: float = 2.0, kd_alpha: float = 0.5,
+                         kd_impl: str = "fused"):
     """The full FedSiKD round (Alg. 1 lines 10-18) as ONE jitted collective
-    program over the client mesh:
+    program over the packed client mesh:
 
-      1. teacher CE steps on each device's teacher feed        (line 12)
-      2. intra-cluster teacher sync (grouped all-reduce)       (tentpole)
+      1. teacher CE steps on each slot's teacher feed             (line 12)
+      2. intra-cluster teacher sync (grouped all-reduce over
+         (device, lane) slots, runtime operator)                  (tentpole)
       3. student distillation steps vs the synced teacher — the loss is the
          fused Pallas ``kd_distillation_loss`` kernel (``kd_impl="fused"``)
-         or the pure-jnp reference (``kd_impl="reference"``)   (line 13-14)
-      4. grouped student aggregation: cluster mean + two-level
-         global mean                                           (lines 16-18)
+         or the pure-jnp reference (``kd_impl="reference"``)    (line 13-14)
+      4. grouped student aggregation with the plan's weight row: unbiased
+         two-level mean collapsed into one contraction          (lines 16-18)
 
-    Returns round_fn(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng,
-    s_rng) -> (tp, ts, sp, ss, teacher_loss, student_loss); all
-    params/opt-state pytrees carry a leading (C,) client axis.  ``t_rng`` /
-    ``s_rng`` are one PRNG key per device (training mode is on: dropout
-    models draw per-step keys).  They are separate inputs because their
-    sharing patterns differ: student keys are always per-device, while with
-    ``teacher_data="leader"`` the driver hands all members of a cluster the
-    SAME teacher key so that replicas stepping on identical leader batches
-    stay bitwise in sync (dropout masks included)."""
+    Returns round_fn(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng, s_rng,
+    sync_mat, agg_row) -> (tp, ts, sp, ss, teacher_loss, student_loss); all
+    params/opt-state pytrees carry a leading (S,) slot axis (S = devices x
+    pack).  ``sync_mat`` (S, S) and ``agg_row`` (S,) come from the round's
+    ``RoundPlan`` — they are traced inputs, so sampled participation never
+    recompiles.  ``t_rng`` / ``s_rng`` are one PRNG key per slot; they are
+    separate inputs because their sharing patterns differ: student keys are
+    always per-client, while with ``teacher_data="leader"`` the driver hands
+    all slots of a cluster the SAME teacher key so that replicas stepping on
+    identical leader batches stay bitwise in sync (dropout masks included)."""
     if kd_impl not in ("fused", "reference"):
         raise ValueError(
             f"kd_impl must be 'fused' or 'reference', got {kd_impl!r}")
 
-    def kd_round(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng, s_rng):
-        tp, ts, sp, ss = (_squeeze(t) for t in (tp, ts, sp, ss))
-        tx, ty, sx, sy = (_squeeze(t) for t in (tx, ty, sx, sy))
-        t_n, s_n = t_n[0], s_n[0]
-        t_rng, s_rng = t_rng[0], s_rng[0]
+    def kd_round(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng, s_rng,
+                 sync_mat, agg_row):
+        # ---- 1-2: teacher refresh (per lane) + packed sync
+        def t_lane(tp, ts, xs, ys, n, rng):
+            step = _make_teacher_step(t_fwd, t_opt, rng)
+            return _masked_scan_steps(step, (tp, ts), xs, ys, n)
 
-        # ---- 1-2: teacher refresh + sync
-        t_step = _make_teacher_step(t_fwd, t_opt, t_rng)
-        (tp, ts), t_loss = _masked_scan_steps(t_step, (tp, ts), tx, ty, t_n)
-        tp = cc.teacher_sync(tp, AXIS, cluster_groups)
-        ts = cc.teacher_sync(ts, AXIS, cluster_groups)
+        (tp, ts), t_loss = jax.vmap(t_lane)(tp, ts, tx, ty, t_n, t_rng)
+        tp = cc.packed_teacher_sync(tp, AXIS, sync_mat, pack=pack)
+        ts = cc.packed_teacher_sync(ts, AXIS, sync_mat, pack=pack)
 
         # ---- 3: student distillation against the synced cluster teacher
-        def s_step(carry, batch):
-            p, s = carry
-            x, y, i = batch
-            k = jax.random.fold_in(s_rng, i)
-            t_logits = t_fwd(tp, x, train=False, key=None)
+        def s_lane(sp, ss, xs, ys, n, rng, tp):
+            def s_step(carry, batch):
+                p, s = carry
+                x, y, i = batch
+                k = jax.random.fold_in(rng, i)
+                t_logits = t_fwd(tp, x, train=False, key=None)
 
-            def loss_fn(p):
-                s_logits = s_fwd(p, x, train=True, key=k)
-                if kd_impl == "fused":
-                    return ops.kd_distillation_loss_batched(
-                        s_logits, t_logits, y,
-                        tau=kd_temperature, alpha=kd_alpha)
-                return distillation_loss(s_logits, t_logits, y,
-                                         temperature=kd_temperature,
-                                         alpha=kd_alpha)[0]
+                def loss_fn(p):
+                    s_logits = s_fwd(p, x, train=True, key=k)
+                    if kd_impl == "fused":
+                        return ops.kd_distillation_loss_batched(
+                            s_logits, t_logits, y,
+                            tau=kd_temperature, alpha=kd_alpha)
+                    return distillation_loss(s_logits, t_logits, y,
+                                             temperature=kd_temperature,
+                                             alpha=kd_alpha)[0]
 
-            loss, g = jax.value_and_grad(loss_fn)(p)
-            u, s = s_opt.update(g, s, p)
-            return (apply_updates(p, u), s), loss
+                loss, g = jax.value_and_grad(loss_fn)(p)
+                u, s = s_opt.update(g, s, p)
+                return (apply_updates(p, u), s), loss
 
-        (sp, ss), s_loss = _masked_scan_steps(s_step, (sp, ss), sx, sy, s_n)
+            return _masked_scan_steps(s_step, (sp, ss), xs, ys, n)
 
-        # ---- 4: grouped aggregation (cluster mean -> two-level global mean)
-        sp = cc.fedsikd_global_mean(sp, AXIS, cluster_groups,
-                                    weighting=cluster_weighting)
-        return (_unsqueeze(tp), _unsqueeze(ts), _unsqueeze(sp), _unsqueeze(ss),
-                jax.lax.pmean(t_loss, AXIS), jax.lax.pmean(s_loss, AXIS))
+        (sp, ss), s_loss = jax.vmap(s_lane)(sp, ss, sx, sy, s_n, s_rng, tp)
+
+        # ---- 4: grouped aggregation (plan-weighted mean -> every slot)
+        sp = cc.packed_weighted_mean(sp, AXIS, agg_row, pack=pack)
+        return (tp, ts, sp, ss,
+                _active_mean(t_loss, t_n, AXIS),
+                _active_mean(s_loss, s_n, AXIS))
 
     return jax.jit(shard_map(
         kd_round, mesh,
-        in_specs=(P(AXIS),) * 12,
-        out_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(), P()),
+        in_specs=(P(AXIS),) * 12 + (P(), P()),
+        out_specs=(P(AXIS),) * 4 + (P(), P()),
     ))
 
 
@@ -328,7 +351,8 @@ def run_sharded_fedsikd(mesh, shards, init_fn, fwd, opt, cluster_of,
                         batch_size: int, algorithm: str = "fedsikd",
                         seed: int = 0):
     """Plain-CE convenience driver (no distillation): returns final
-    (per-client) params after ``rounds``."""
+    (per-client) params after ``rounds``.  pack=1 layout (one client per
+    device)."""
     n = len(shards)
     groups = cc.cluster_groups(cluster_of)
     params = replicate_params(init_fn(jax.random.PRNGKey(seed)), n)
@@ -348,6 +372,8 @@ def run_sharded_fedsikd(mesh, shards, init_fn, fwd, opt, cluster_of,
 def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
                            t_model, s_model, t_opt: Optimizer,
                            s_opt: Optimizer, rounds: int,
+                           scheduler: Optional[RoundScheduler] = None,
+                           pack: int = 1,
                            local_epochs: int = 1, warmup_epochs: int = 0,
                            batch_size: int = 64, kd_temperature: float = 2.0,
                            kd_alpha: float = 0.5,
@@ -355,26 +381,46 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
                            cluster_weighting: str = "size",
                            kd_impl: str = "fused", leaders=None,
                            seed: int = 0, eval_fn=None, progress: bool = False):
-    """Full FedSiKD (Alg. 1) on the device mesh; the scalable twin of the
-    ``rounds.py`` loop engine's ``fedsikd`` branch.
+    """Full FedSiKD (Alg. 1) on the packed device mesh; the scalable twin of
+    the ``rounds.py`` loop engine's ``fedsikd`` branch.
 
     ``t_model``/``s_model`` are (init_fn, fwd_fn) pairs; ``leaders`` is one
     client index per cluster (defaults to the most-data member, DESIGN.md
-    §7).  ``eval_fn(params) -> (acc, loss)``, if given, is called on the
-    aggregated student after every round.  Returns (global_student_params,
-    history) with history matching the loop engine's schema."""
+    §7).  ``scheduler`` (a ``fed.schedule.RoundScheduler``) owns per-round
+    participation and the packed slot layout; when omitted, a
+    full-participation scheduler matching the mesh (``pack`` lanes per
+    device) is built.  ``eval_fn(params) -> (acc, loss)``, if given, is
+    called on the aggregated student after every round.  Returns
+    (global_student_params, history) with history matching the loop engine's
+    schema plus ``pack`` / ``participation`` / per-round participant counts.
+
+    State layout (DESIGN.md §8): teachers are canonical per CLUSTER — a
+    (K, ...) stacked pytree gathered onto the plan's slots each round and
+    scattered back from each cluster's first active slot (with
+    ``teacher_data="cluster"`` and unequal member budgets that slot's Adam
+    step count becomes the cluster's; replicas re-sync next round anyway).
+    Clusters with no sampled member keep their teacher untouched."""
     n = len(shards)
-    groups = cc.cluster_groups(cluster_of)
-    labels = np.asarray(cluster_of)
-    uniq = np.unique(labels).tolist()
-    # the ONE device -> cluster-index mapping everything below derives from
-    cluster_idx = [uniq.index(labels[i]) for i in range(n)]
+    if scheduler is None:
+        scheduler = RoundScheduler(
+            cluster_of, participation="full", pack=pack,
+            n_devices=int(np.prod(mesh.devices.shape)),
+            weighting=cluster_weighting, seed=seed)
+    pack = scheduler.pack
+    n_dev = int(np.prod(mesh.devices.shape))
+    if n_dev != scheduler.n_devices:
+        raise ValueError(f"mesh has {n_dev} devices but the scheduler laid "
+                         f"out {scheduler.n_devices}")
+    S = scheduler.n_slots
+    cluster_idx = scheduler.cluster_idx          # (C,) cluster index/client
+    groups = scheduler.groups
+    K = len(groups)
     if leaders is None:
-        leaders = [max(g, key=lambda i: shards[i].num_examples)
+        leaders = [int(max(g, key=lambda i: shards[i].num_examples))
                    for g in groups]
-    # per-device teacher feed (DESIGN.md §7): "leader" streams the cluster
-    # leader's shard to every member (identical batches -> replicas stay in
-    # sync between collectives); "cluster" streams each device's OWN shard,
+    # per-client teacher feed (DESIGN.md §7): "leader" streams the cluster
+    # leader's shard to every slot (identical batches -> replicas stay in
+    # sync between collectives); "cluster" streams each client's OWN shard,
     # which teacher_sync turns into data-parallel training over the union
     if teacher_data == "leader":
         t_src = [shards[leaders[cluster_idx[i]]] for i in range(n)]
@@ -388,81 +434,136 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
     s_init, s_fwd = s_model
     key = jax.random.PRNGKey(seed)
 
-    # one teacher copy per member device; cluster ci's members share init
+    # canonical per-cluster teacher state: (K, ...) stacked pytrees
     single_teachers = [t_init(jax.random.fold_in(key, 100 + k))
-                       for k in range(len(groups))]
-    tp = jax.tree_util.tree_map(
-        lambda *leaves: jnp.stack([leaves[cluster_idx[i]] for i in range(n)]),
-        *single_teachers)
-    ts = jax.vmap(t_opt.init)(tp)
-    sp = replicate_params(s_init(key), n)
+                       for k in range(K)]
+    tp_k = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *single_teachers)
+    ts_k = jax.vmap(t_opt.init)(tp_k)
+    sp_global = s_init(key)
 
-    # static per-device step budgets (mirror the loop engine's batch counts)
-    t_steps = client_step_counts(t_src, batch_size, local_epochs)
-    s_steps = client_step_counts(shards, batch_size, local_epochs)
-    w_steps = (t_steps // max(local_epochs, 1)) * warmup_epochs
+    # static per-client step budgets (mirror the loop engine's batch counts)
+    # and the one-off (C, steps, B, ...) staging of every client's batches
+    t_steps_all = client_step_counts(t_src, batch_size, local_epochs)
+    s_steps_all = client_step_counts(shards, batch_size, local_epochs)
+    tx_all, ty_all = stack_client_data(t_src, int(t_steps_all.max()),
+                                       batch_size, seed=seed)
+    sx_all, sy_all = stack_client_data(shards, int(s_steps_all.max()),
+                                       batch_size, seed=seed)
 
-    tx, ty = stack_client_data(t_src, int(t_steps.max()), batch_size,
-                               seed=seed)
-    sx, sy = stack_client_data(shards, int(s_steps.max()), batch_size,
-                               seed=seed)
-    tx, ty = jnp.asarray(tx), jnp.asarray(ty)
-    sx, sy = jnp.asarray(sx), jnp.asarray(sy)
-    t_steps, s_steps = jnp.asarray(t_steps), jnp.asarray(s_steps)
+    def stage(plan: RoundPlan, *arrays):
+        """Row-gather this round's participants onto mesh slots and place
+        the (S, ...) stacks with the packed client-axis sharding."""
+        cid = np.where(plan.active, plan.slot_client, 0)
+        stacks = tuple(jnp.asarray(a[cid]) for a in arrays)
+        return jax.device_put(stacks, named(mesh, client_stack_specs(
+            stacks, mesh, axis=AXIS)))
+
+    def slot_state(plan: RoundPlan):
+        """Gather canonical per-cluster teacher state onto the plan's slots
+        (idle slots carry cluster 0's state; they never train)."""
+        kidx = np.where(plan.active, plan.slot_cluster, 0)
+        tp = jax.tree_util.tree_map(lambda a: a[kidx], tp_k)
+        ts = jax.tree_util.tree_map(lambda a: a[kidx], ts_k)
+        return tp, ts
+
+    def scatter_teachers(plan: RoundPlan, tp_s, ts_s):
+        """Write each refreshed cluster teacher back from its first active
+        slot; untouched clusters keep their previous state."""
+        src = np.full(K, -1, np.int64)
+        for s in range(S - 1, -1, -1):
+            if plan.slot_client[s] >= 0:
+                src[plan.slot_cluster[s]] = s
+        refreshed = src >= 0
+        safe = np.where(refreshed, src, 0)
+
+        def upd(new, old):
+            mask = jnp.asarray(refreshed).reshape((K,) + (1,) * (old.ndim - 1))
+            return jnp.where(mask, new[safe], old)
+
+        return (jax.tree_util.tree_map(upd, tp_s, tp_k),
+                jax.tree_util.tree_map(upd, ts_s, ts_k))
+
+    def student_keys(salt: int, plan: RoundPlan):
+        """One training-mode PRNG key per slot, folded by CLIENT id so key
+        streams are stable under re-assignment across rounds."""
+        base = jax.random.fold_in(key, salt)
+        cid = np.where(plan.active, plan.slot_client, 0)
+        return jnp.stack([jax.random.fold_in(base, int(c)) for c in cid])
+
+    def teacher_keys(salt: int, plan: RoundPlan):
+        """Teacher-step keys.  Leader mode: slots of a cluster share one key
+        (identical batches + identical dropout masks -> replicas stay
+        bitwise in sync between sync collectives).  Cluster mode: per-client
+        keys (each slot steps on its own client's shard anyway)."""
+        base = jax.random.fold_in(key, salt)
+        if teacher_data == "leader":
+            kidx = np.where(plan.active, plan.slot_cluster, 0)
+            return jnp.stack([jax.random.fold_in(base, int(k)) for k in kidx])
+        cid = np.where(plan.active, plan.slot_client, 0)
+        return jnp.stack([jax.random.fold_in(base, 10_000 + int(c))
+                          for c in cid])
 
     history = {"acc": [], "loss": [], "round": [],
                "teacher_loss": [], "student_loss": [],
-               "num_clusters": len(groups), "engine": "sharded"}
-
-    def device_keys(salt: int):
-        """One training-mode PRNG key per client device (student steps)."""
-        return jnp.stack([jax.random.fold_in(jax.random.fold_in(key, salt), i)
-                          for i in range(n)])
-
-    def teacher_keys(salt: int):
-        """Teacher-step keys.  Leader mode: members of a cluster share one
-        key (identical batches + identical dropout masks -> replicas stay
-        bitwise in sync between ``teacher_sync`` calls).  Cluster mode:
-        per-device keys (each device steps on its own shard anyway)."""
-        base = jax.random.fold_in(key, salt)
-        if teacher_data == "leader":
-            return jnp.stack([jax.random.fold_in(base, cluster_idx[i])
-                              for i in range(n)])
-        return jnp.stack([jax.random.fold_in(base, 10_000 + i)
-                          for i in range(n)])
+               "participants": [],
+               "num_clusters": K, "engine": "sharded",
+               "pack": pack, "participation": scheduler.participation}
 
     # ---- Alg. 1 KD-establishment: teacher warm-up before round 1
     if warmup_epochs > 0:
-        warm = make_teacher_phase(mesh, t_fwd, t_opt, groups)
-        wx, wy = stack_client_data(t_src, int(np.asarray(w_steps).max()),
-                                   batch_size, seed=seed)
-        tp, ts, wloss = warm(tp, ts, jnp.asarray(wx), jnp.asarray(wy),
-                             jnp.asarray(w_steps), teacher_keys(9001))
+        w_steps_all = ((t_steps_all // max(local_epochs, 1))
+                       * warmup_epochs).astype(np.int32)
+        wx_all, wy_all = stack_client_data(t_src, int(w_steps_all.max()),
+                                           batch_size, seed=seed)
+        planw = scheduler.warmup_plan()
+        warm = make_packed_teacher_phase(mesh, pack, t_fwd, t_opt)
+        tp_s, ts_s = slot_state(planw)
+        wx, wy = stage(planw, wx_all, wy_all)
+        tp_s, ts_s, wloss = warm(
+            tp_s, ts_s, wx, wy, jnp.asarray(planw.steps_for(w_steps_all)),
+            teacher_keys(9001, planw), jnp.asarray(planw.sync_matrix()))
+        tp_k, ts_k = scatter_teachers(planw, tp_s, ts_s)
         if progress:
             print(f"  warmup  teacher_loss={float(wloss):.4f}")
 
-    round_fn = make_sharded_kd_round(
-        mesh, t_fwd, s_fwd, t_opt, s_opt, groups,
-        kd_temperature=kd_temperature, kd_alpha=kd_alpha, kd_impl=kd_impl,
-        cluster_weighting=cluster_weighting)
+    round_fn = make_packed_kd_round(
+        mesh, pack, t_fwd, s_fwd, t_opt, s_opt,
+        kd_temperature=kd_temperature, kd_alpha=kd_alpha, kd_impl=kd_impl)
 
+    staged_key = None                      # slot assignment of the staged data
     for rnd in range(1, rounds + 1):
-        ss = jax.vmap(s_opt.init)(sp)      # fresh student opt (as loop engine)
+        plan = scheduler.plan(rnd)
+        tp_s, ts_s = slot_state(plan)
+        sp_s = replicate_params(sp_global, S)
+        ss_s = jax.vmap(s_opt.init)(sp_s)  # fresh student opt (as loop engine)
+        # restage batches only when the slot->client assignment changed
+        # (with participation="full" it never does: one upload total)
+        if plan.slot_client.tobytes() != staged_key:
+            tx, ty, sx, sy = stage(plan, tx_all, ty_all, sx_all, sy_all)
+            staged_key = plan.slot_client.tobytes()
         # disjoint even/odd salts keep teacher and student PRNG streams
-        # from colliding on devices whose index equals their cluster index
-        tp, ts, sp, ss, t_loss, s_loss = round_fn(
-            tp, ts, sp, ss, tx, ty, t_steps, sx, sy, s_steps,
-            teacher_keys(2 * rnd), device_keys(2 * rnd + 1))
+        # from colliding on clients whose id equals their cluster index
+        tp_s, ts_s, sp_s, ss_s, t_loss, s_loss = round_fn(
+            tp_s, ts_s, sp_s, ss_s, tx, ty,
+            jnp.asarray(plan.steps_for(t_steps_all)), sx, sy,
+            jnp.asarray(plan.steps_for(s_steps_all)),
+            teacher_keys(2 * rnd, plan), student_keys(2 * rnd + 1, plan),
+            jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
+        tp_k, ts_k = scatter_teachers(plan, tp_s, ts_s)
+        # every slot holds the aggregated student after the weighted mean
+        sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
         history["teacher_loss"].append(float(t_loss))
         history["student_loss"].append(float(s_loss))
         history["round"].append(rnd)
-        global_student = _squeeze(sp)      # replicas agree post-aggregation
+        history["participants"].append(int(plan.active.sum()))
         if eval_fn is not None:
-            acc, loss = eval_fn(global_student)
+            acc, loss = eval_fn(sp_global)
             history["acc"].append(acc)
             history["loss"].append(loss)
             if progress:
-                print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}")
+                print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}  "
+                      f"clients={int(plan.active.sum())}")
         elif progress:
-            print(f"  round {rnd:3d}  student_loss={float(s_loss):.4f}")
-    return _squeeze(sp), history
+            print(f"  round {rnd:3d}  student_loss={float(s_loss):.4f}  "
+                  f"clients={int(plan.active.sum())}")
+    return sp_global, history

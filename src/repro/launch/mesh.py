@@ -1,13 +1,56 @@
 """Production mesh construction (TPU v5e pods; CPU placeholder devices for
-the dry-run).  A FUNCTION, not a module constant — importing this module must
-never touch jax device state.
+the dry-run) plus the federated client-mesh layout.  FUNCTIONS, not module
+constants — importing this module must never touch jax device state.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 SINGLE_POD = (16, 16)                 # 256 chips
 MULTI_POD = (2, 16, 16)               # 2 pods x 256 chips
+
+CLIENT_AXIS = "clients"               # the federated engines' 1-D mesh axis
+
+
+def fed_mesh_layout(n_participants: int, *, pack: int = 1,
+                    n_devices: int | None = None) -> tuple[int, int]:
+    """Client-packed layout: (n_devices, n_slots) hosting ``n_participants``
+    clients with ``pack`` client lanes per device (DESIGN.md §8).
+
+    ``n_slots = n_devices * pack`` is the global slot count; slot ``s``
+    lives on device ``s // pack``, lane ``s % pack``.  With ``pack > 1``
+    the client population can exceed the device count: C = devices x pack
+    clients run in one jitted program.
+    """
+    if pack < 1:
+        raise ValueError(f"pack must be >= 1, got {pack}")
+    if n_devices is None:
+        n_devices = math.ceil(n_participants / pack)
+    if n_devices * pack < n_participants:
+        raise ValueError(
+            f"{n_devices} devices x pack={pack} = {n_devices * pack} slots "
+            f"cannot host {n_participants} participants")
+    return n_devices, n_devices * pack
+
+
+def make_fed_client_mesh(n_participants: int, *, pack: int = 1,
+                         n_devices: int | None = None) -> Mesh:
+    """1-D ``(CLIENT_AXIS,)`` mesh for the packed federated runtime, using
+    the first ``fed_mesh_layout(...)`` devices."""
+    n_devices, _ = fed_mesh_layout(n_participants, pack=pack,
+                                   n_devices=n_devices)
+    devs = jax.devices()
+    if len(devs) < n_devices:
+        raise ValueError(
+            f"need {n_devices} devices for {n_participants} clients at "
+            f"pack={pack}, have {len(devs)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            f"before importing jax, or raise pack")
+    return Mesh(np.asarray(devs[:n_devices]), (CLIENT_AXIS,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -147,6 +147,21 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh):
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 
 
+def client_stack_specs(tree, mesh, *, axis: str = "clients"):
+    """Specs for client-stacked federated pytrees: every leaf carries a
+    leading (S,) slot axis (S = devices x pack) sharded over the client
+    axis; all other dims are replicated (DESIGN.md §8).  Works for params,
+    optimizer state, staged batch arrays and PRNG key stacks alike —
+    anything the packed round program consumes."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r}")
+
+    def rule(leaf):
+        return P(*([axis] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(rule, tree)
+
+
 def opt_specs(param_spec_tree):
     """AdamState(mu, nu, count): moments mirror param specs, count replicated."""
     from repro.optim.optimizers import AdamState

@@ -1,0 +1,18 @@
+"""Shared harness for tests that need their own XLA host-device count.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+jax is imported, so mesh tests run their scripts in a subprocess.  The
+stripped environment MUST keep ``JAX_PLATFORMS=cpu`` — this container ships
+libtpu and jax otherwise spends minutes in a TPU-probe retry loop
+(DESIGN.md §6).
+"""
+import subprocess
+import sys
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
+
+
+def run_script(script: str, *, timeout: int = 580) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, "-c", script], capture_output=True,
+                          text=True, timeout=timeout, env=ENV)

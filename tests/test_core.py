@@ -37,6 +37,24 @@ def test_privatize_noise_and_identity():
         stats.privatize(s, noise_multiplier=0.5)
 
 
+def test_privatize_std_stays_nonnegative():
+    # tiny true std + heavy noise used to drive std negative, poisoning the
+    # standardized k-means features (and any downstream sqrt); privatize now
+    # clamps the noised std at 0 (post-processing: no privacy cost)
+    x = np.ones((50, 16), np.float32) + 1e-4 * np.random.default_rng(0).normal(
+        size=(50, 16)).astype(np.float32)
+    s = stats.compute_stats(x)
+    for trial in range(32):
+        noisy = stats.privatize(s, noise_multiplier=5.0,
+                                key=jax.random.PRNGKey(trial))
+        assert float(noisy.std.min()) >= 0.0
+    # and the downstream standardized feature matrix stays finite
+    feats = stats.standardize(stats.stack_stats(
+        [stats.privatize(s, noise_multiplier=5.0, key=jax.random.PRNGKey(t))
+         for t in range(8)]))
+    assert np.isfinite(np.asarray(feats)).all()
+
+
 def test_label_histogram():
     h = stats.label_histogram(jnp.array([0, 0, 1, 3]), 4)
     np.testing.assert_allclose(h, [0.5, 0.25, 0.0, 0.25])
@@ -68,6 +86,20 @@ def test_silhouette_bounds():
     res = kmeans.kmeans(jax.random.PRNGKey(1), x, 4)
     s = float(kmeans.silhouette_score(x, res.assignments, 4))
     assert -1.0 <= s <= 1.0
+
+
+def test_silhouette_empty_cluster_stays_finite():
+    # all points in ONE of k=3 declared clusters: every b_i stays inf and the
+    # un-guarded score was inf/NaN, corrupting select_k's metric vote
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(10, 4)), jnp.float32)
+    assign = jnp.zeros(10, jnp.int32)
+    s = float(kmeans.silhouette_score(x, assign, 3))
+    assert np.isfinite(s) and s == 0.0
+    # k-means on near-identical points collapses clusters; the metric table
+    # (and thus the vote) must stay finite end to end
+    tight = jnp.ones((8, 3), jnp.float32)
+    k, table = kmeans.select_k(jax.random.PRNGKey(0), tight, 2, 4)
+    assert all(np.isfinite(row["silhouette"]) for row in table.values())
 
 
 @settings(max_examples=20, deadline=None)

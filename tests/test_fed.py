@@ -1,12 +1,11 @@
 """Federated runtime: all five round engines end-to-end on tiny data, plus
 the shard_map cluster-collective runtime (subprocess with 8 host devices).
 """
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+from _subproc import run_script
 
 from repro.data.synthetic import load_dataset
 from repro.fed.rounds import FedConfig, run_federated
@@ -110,8 +109,5 @@ _SHARDED_SCRIPT = textwrap.dedent("""
 
 
 def test_sharded_cluster_collectives_8dev():
-    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
-                       capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    r = run_script(_SHARDED_SCRIPT, timeout=600)
     assert "SHARDED-OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,158 @@
+"""Round scheduler (fed/schedule.py) + client-packed mesh engine.
+
+Unit tests cover the participation policies (slot assignment, teacher
+coverage, unbiased weights, validation) on the host; the packed-engine
+acceptance test — 32 clients on 8 devices at pack=4, through the full KD
+round with sampled participation, against the loop engine — needs its own
+XLA_FLAGS so it runs in a subprocess (set pre-import, DESIGN.md §6).
+"""
+import textwrap
+
+import numpy as np
+import pytest
+from _subproc import run_script
+
+from repro.fed.schedule import RoundPlan, RoundScheduler
+
+LABELS = np.array([0, 0, 0, 0, 0, 1, 1, 2, 2, 2, 2, 2])   # sizes 5, 2, 5
+
+
+# ---------------------------------------------------------------- policies
+def test_full_plan_matches_hierarchical_weights():
+    s = RoundScheduler(LABELS, participation="full", weighting="size")
+    p = s.plan(1)
+    assert np.array_equal(np.sort(p.participants), np.arange(12))
+    np.testing.assert_allclose(p.slot_weight, np.full(12, 1 / 12), rtol=1e-6)
+    u = RoundScheduler(LABELS, participation="full", weighting="uniform").plan(1)
+    w = u.weight_of()
+    np.testing.assert_allclose(w[0], 1 / (3 * 5), rtol=1e-6)   # cluster of 5
+    np.testing.assert_allclose(w[5], 1 / (3 * 2), rtol=1e-6)   # cluster of 2
+    np.testing.assert_allclose(u.slot_weight.sum(), 1.0, rtol=1e-6)
+
+
+def test_stratified_never_leaves_a_cluster_teacherless():
+    s = RoundScheduler(LABELS, participation="stratified",
+                       clients_per_round=5, seed=3)
+    for rnd in range(1, 200):
+        p = s.plan(rnd)
+        assert len(p.participants) == 5
+        covered = set(LABELS[p.participants])
+        assert covered == {0, 1, 2}, (rnd, p.slot_client)
+
+
+def test_uniform_sampling_varies_and_is_deterministic():
+    s = RoundScheduler(LABELS, participation="uniform", clients_per_round=6,
+                       seed=7)
+    p1, p2 = s.plan(1), s.plan(2)
+    assert len(p1.participants) == len(p2.participants) == 6
+    assert not np.array_equal(p1.participants, p2.participants)
+    s_again = RoundScheduler(LABELS, participation="uniform",
+                             clients_per_round=6, seed=7)
+    assert np.array_equal(s_again.plan(1).slot_client, p1.slot_client)
+
+
+def test_sampled_weights_are_unbiased():
+    """E[plan-weighted aggregate] == full-participation aggregate: the
+    stratified weights (full-population cluster weight / sampled count)
+    make the sampled two-level mean an unbiased estimator."""
+    rngv = np.random.default_rng(0)
+    v = rngv.normal(size=len(LABELS))
+    for weighting in ("size", "uniform"):
+        full = RoundScheduler(LABELS, participation="full",
+                              weighting=weighting).plan(1)
+        target = float(sum(full.weight_of()[i] * v[i] for i in range(len(v))))
+        s = RoundScheduler(LABELS, participation="stratified",
+                           clients_per_round=6, weighting=weighting, seed=1)
+        est = []
+        for rnd in range(4000):
+            w = s.plan(rnd).weight_of()
+            est.append(sum(wi * v[i] for i, wi in w.items()))
+        assert abs(np.mean(est) - target) < 0.01, (weighting, np.mean(est),
+                                                   target)
+
+
+def test_slot_layout_and_idle_padding():
+    s = RoundScheduler(LABELS, participation="stratified",
+                       clients_per_round=5, pack=2, seed=0)
+    assert s.n_devices == 3 and s.n_slots == 6
+    p = s.plan(1)
+    assert isinstance(p, RoundPlan)
+    assert (~p.active).sum() == 1                    # one idle padding slot
+    assert p.slot_client[-1] == -1 and p.slot_weight[-1] == 0.0
+    np.testing.assert_allclose(p.slot_weight.sum(), 1.0, rtol=1e-6)
+    # steps_for: idle slots get 0, active slots their client's budget
+    budgets = np.arange(12, dtype=np.int32) + 1
+    st = p.steps_for(budgets)
+    assert st[-1] == 0
+    assert all(st[i] == budgets[p.slot_client[i]] for i in range(5))
+    # sync matrix: row-stochastic, idle row = identity
+    m = p.sync_matrix()
+    np.testing.assert_allclose(m.sum(1), 1.0, rtol=1e-6)
+    assert m[-1, -1] == 1.0 and m[-1, :-1].sum() == 0.0
+    # active rows mix only slots of the same cluster
+    for a in range(5):
+        mixed = np.flatnonzero(m[a] > 0)
+        assert set(p.slot_cluster[mixed]) == {p.slot_cluster[a]}
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, participation="sometimes")
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, participation="uniform")  # no clients_per_round
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, participation="uniform", clients_per_round=13)
+    with pytest.raises(ValueError):   # stratified needs >= 1 per cluster
+        RoundScheduler(LABELS, participation="stratified", clients_per_round=2)
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, pack=0)
+    with pytest.raises(ValueError):   # 12 participants can't fit 2x2 slots
+        RoundScheduler(LABELS, participation="full", pack=2, n_devices=2)
+
+
+def test_fedconfig_validation():
+    from repro.fed.rounds import FedConfig
+    with pytest.raises(ValueError):
+        FedConfig(participation="uniform")            # missing sample size
+    with pytest.raises(ValueError):
+        FedConfig(participation="full", clients_per_round=5, num_clients=8)
+    with pytest.raises(ValueError):
+        FedConfig(pack=0)
+    cfg = FedConfig(participation="stratified", clients_per_round=4,
+                    num_clients=8, pack=2)
+    assert cfg.clients_per_round == 4
+
+
+# ------------------------------------------- packed engine acceptance test
+_PACKED_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    # 32 clients on 8 host devices (pack=4), full KD round: teacher warm-up,
+    # packed teacher_sync, fused Pallas KD steps, plan-weighted aggregation —
+    # with SAMPLED rounds (clients_per_round < C, cluster-stratified).
+    common = dict(algorithm="fedsikd", num_clients=32, alpha=1.0, rounds=2,
+                  local_epochs=1, teacher_warmup_epochs=2, batch_size=32,
+                  num_clusters=3, participation="stratified",
+                  clients_per_round=16, seed=0)
+    h_loop = run_federated(ds, FedConfig(engine="loop", **common))
+    h_pack = run_federated(ds, FedConfig(engine="sharded", pack=4,
+                                         kd_impl="fused", **common))
+    assert h_pack["engine"] == "sharded" and h_pack["pack"] == 4
+    assert h_pack["participation"] == "stratified"
+    # both engines drew the SAME deterministic plans
+    assert h_pack["participants"] == h_loop["participants"] == [16, 16]
+    assert len(h_pack["acc"]) == len(h_loop["acc"]) == 2
+    # acceptance: per-round accuracy within 1 point of the loop engine
+    for rnd, (a, b) in enumerate(zip(h_loop["acc"], h_pack["acc"]), 1):
+        assert abs(a - b) <= 0.01, (rnd, h_loop["acc"], h_pack["acc"])
+    print("PACKED-PARITY-OK", h_loop["acc"], h_pack["acc"])
+""")
+
+
+def test_packed_engine_32_clients_8_devices_sampled_rounds():
+    r = run_script(_PACKED_PARITY_SCRIPT)
+    assert "PACKED-PARITY-OK" in r.stdout, r.stdout + r.stderr

@@ -3,17 +3,9 @@ loop/sharded parity on a tiny synthetic dataset, and the batched
 ``kd_distillation_loss`` entry point under ``shard_map``.  Both need 8 host
 devices, so they run in subprocesses (XLA_FLAGS must be set pre-import).
 """
-import subprocess
-import sys
 import textwrap
 
-_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-        "JAX_PLATFORMS": "cpu"}   # keep jax off the TPU-probe path
-
-
-def _run(script: str) -> subprocess.CompletedProcess:
-    return subprocess.run([sys.executable, "-c", script], capture_output=True,
-                          text=True, timeout=580, env=_ENV)
+from _subproc import run_script as _run
 
 
 _PARITY_SCRIPT = textwrap.dedent("""

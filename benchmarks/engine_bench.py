@@ -45,12 +45,13 @@ from repro.fed.rounds import FedConfig, run_federated
 def bench_engine(ds, engine: str, *, clients: int = 8, pack: int = 1,
                  kd_impl: str = "fused", rounds: int = 3,
                  participation: str = "full",
-                 clients_per_round=None) -> dict:
+                 clients_per_round=None, dropout_rate: float = 0.0) -> dict:
     cfg = FedConfig(algorithm="fedsikd", engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
                     num_clusters=3, participation=participation,
-                    clients_per_round=clients_per_round, seed=0)
+                    clients_per_round=clients_per_round,
+                    dropout_rate=dropout_rate, seed=0)
     t0 = time.perf_counter()
     h = run_federated(ds, cfg)
     total = time.perf_counter() - t0
@@ -63,6 +64,7 @@ def bench_engine(ds, engine: str, *, clients: int = 8, pack: int = 1,
             "pack": pack if engine == "sharded" else None,
             "participation": participation,
             "clients_per_round": clients_per_round,
+            "dropout_rate": dropout_rate,
             "rounds": rounds, "total_s": round(total, 3),
             "rerun_s_per_round": round(rerun / rounds, 4),
             "final_acc": h2["acc"][-1], "acc_curve": h["acc"]}
@@ -83,6 +85,10 @@ def main():
         rows = [
             bench_engine(ds, "loop", clients=8, rounds=rounds),
             bench_engine(ds, "sharded", clients=8, pack=2, rounds=rounds),
+            # dropout scenario smoke: survivors reweighted per round
+            bench_engine(ds, "loop", clients=8, rounds=rounds,
+                         participation="uniform", clients_per_round=6,
+                         dropout_rate=0.25),
         ]
     else:
         rounds = args.rounds or 3
@@ -97,14 +103,23 @@ def main():
             bench_engine(ds, "sharded", clients=32, pack=4, rounds=rounds),
             bench_engine(ds, "sharded", clients=32, pack=4, rounds=rounds,
                          participation="stratified", clients_per_round=16),
+            # dropout sweep: the failure scenario on both engines — same
+            # sampled plans, 20% of invitees fail each round
+            bench_engine(ds, "loop", clients=32, rounds=rounds,
+                         participation="stratified", clients_per_round=16,
+                         dropout_rate=0.2),
+            bench_engine(ds, "sharded", clients=32, pack=4, rounds=rounds,
+                         participation="stratified", clients_per_round=16,
+                         dropout_rate=0.2),
         ]
 
     print(f"{'engine':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
-          f"{'part':>10s} {'cold total':>11s} {'rerun s/round':>14s} "
-          f"{'final acc':>10s}")
+          f"{'part':>10s} {'drop':>5s} {'cold total':>11s} "
+          f"{'rerun s/round':>14s} {'final acc':>10s}")
     for r in rows:
         print(f"{r['engine']:8s} {r['kd_impl']:10s} {r['clients']:3d} "
               f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
+              f"{r['dropout_rate']:5.2f} "
               f"{r['total_s']:10.1f}s {r['rerun_s_per_round']:13.2f}s "
               f"{r['final_acc']:10.3f}")
     spread = [r["final_acc"] for r in rows

@@ -1,11 +1,16 @@
 """Flat-npz pytree checkpointing with round resumption metadata.
 
 Leaves are stored under path-encoded keys ("layer/0/w"), dtypes preserved
-(bfloat16 round-trips via a view trick since npz has no bf16).
+(bfloat16 round-trips via a view trick since npz has no bf16).  ``restore``
+validates the checkpoint against the target structure — shape, dtype,
+missing and unexpected leaves all raise ``ValueError`` with the offending
+key paths (real exceptions, not ``assert``: they must survive ``python -O``
+because a silently mis-restored run is worse than a crashed one).
 """
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 
 import jax
@@ -15,10 +20,14 @@ import numpy as np
 _BF16_TAG = "__bf16__"
 
 
+def _key_path(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = _key_path(path)
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             flat[key + _BF16_TAG] = arr.view(np.uint16)
@@ -28,30 +37,70 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 
 def save(path: str | Path, tree, *, step: int = 0, extra: dict | None = None) -> None:
+    """Atomically publish the checkpoint: a kill mid-save must never leave
+    a truncated npz as the newest checkpoint (resume scans for ``*.npz``).
+    Both files go to temp names first and are ``os.replace``-d into place —
+    meta first, npz last, so the npz's appearance is the commit point and a
+    visible npz always has its meta."""
     path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    np.savez(path, **_flatten(tree))
-    meta = {"step": step, **(extra or {})}
-    path.with_suffix(".meta.json").write_text(json.dumps(meta))
+    npz_path = path if path.suffix == ".npz" else path.with_suffix(".npz")
+    npz_path.parent.mkdir(parents=True, exist_ok=True)
+    meta_path = npz_path.with_suffix(".meta.json")
+    tmp_meta = meta_path.with_name(meta_path.name + ".tmp")
+    tmp_meta.write_text(json.dumps({"step": step, **(extra or {})}))
+    os.replace(tmp_meta, meta_path)
+    tmp_npz = npz_path.with_name(npz_path.name + ".tmp")
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **_flatten(tree))
+    os.replace(tmp_npz, npz_path)
 
 
 def restore(path: str | Path, like):
-    """Restore into the structure of ``like`` (a pytree of arrays/SDS)."""
+    """Restore into the structure of ``like`` (a pytree of arrays/SDS).
+
+    Every leaf of ``like`` must be present in the checkpoint with the same
+    shape and dtype, and every array in the checkpoint must be consumed by a
+    leaf of ``like`` — any violation raises ``ValueError`` naming the key
+    paths involved (all of them, not just the first).
+    """
     path = Path(path)
-    z = np.load(path if path.suffix == ".npz" else path.with_suffix(".npz"))
+    npz_path = path if path.suffix == ".npz" else path.with_suffix(".npz")
+    z = np.load(npz_path)
     flat = dict(z.items())
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
+    leaves, used, errors = [], set(), []
     for p, leaf in paths:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        key = _key_path(p)
         if key + _BF16_TAG in flat:
             arr = flat[key + _BF16_TAG].view(jnp.bfloat16)
-        else:
+            used.add(key + _BF16_TAG)
+        elif key in flat:
             arr = flat[key]
-        assert arr.shape == tuple(leaf.shape), f"shape mismatch at {key}"
-        leaves.append(jnp.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+            used.add(key)
+        else:
+            errors.append(f"missing leaf '{key}' "
+                          f"(wanted {tuple(leaf.shape)} {jnp.dtype(leaf.dtype)})")
+            leaves.append(None)
+            continue
+        want_shape = tuple(leaf.shape)
+        want_dtype = jnp.dtype(leaf.dtype)
+        if arr.shape != want_shape:
+            errors.append(f"shape mismatch at '{key}': checkpoint has "
+                          f"{arr.shape}, target wants {want_shape}")
+        elif arr.dtype != want_dtype:
+            errors.append(f"dtype mismatch at '{key}': checkpoint has "
+                          f"{arr.dtype}, target wants {want_dtype}")
+        leaves.append(arr)
+    unexpected = sorted(set(flat) - used)
+    if unexpected:
+        errors.append("checkpoint leaves absent from the restore target: "
+                      + ", ".join(f"'{k.removesuffix(_BF16_TAG)}'"
+                                  for k in unexpected))
+    if errors:
+        raise ValueError(f"cannot restore {npz_path}:\n  " + "\n  ".join(errors))
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(a) for a in leaves])
 
 
 def load_meta(path: str | Path) -> dict:

@@ -25,7 +25,14 @@ class ClientShard:
 
     def batches(self, batch_size: int, *, epoch: int = 0, seed: int = 0,
                 drop_remainder: bool = False) -> Iterator[tuple[np.ndarray, np.ndarray]]:
-        rng = np.random.default_rng(hash((seed, self.client_id, epoch)) % (2**32))
+        # SeedSequence entropy, not builtin hash: CPython's hash(-1) ==
+        # hash(-2) collides the pooled-cluster shard (client_id=-1) with
+        # other negative ids, and builtin-hash streams are fragile across
+        # interpreters.  Masking keeps the entropy non-negative while
+        # staying injective over 32-bit ids (as fed/schedule.py's _rng).
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [seed & 0xFFFFFFFF, self.client_id & 0xFFFFFFFF,
+             epoch & 0xFFFFFFFF]))
         order = rng.permutation(self.num_examples)
         for start in range(0, self.num_examples, batch_size):
             idx = order[start:start + batch_size]

@@ -1,0 +1,126 @@
+"""Round-granular fault tolerance for the federated engines (DESIGN.md §9).
+
+The paper's own premise — "learning across a high number of communication
+rounds can be risky and potentially unsafe" — cuts both ways: a long
+federated run must survive a preemption.  This module owns the persistent
+between-round state of a federated run and its on-disk format, built on
+``repro.checkpoint``:
+
+- ``FedState`` — everything a resumed run needs: the array pytree (global
+  student + per-cluster teachers + teacher optimizer states, in whichever
+  layout the engine keeps canonical state), the number of completed rounds,
+  the running history, and a JSON ``meta`` fingerprint of the run
+  configuration (seed, algorithm, engine, cluster labels, ...).
+- ``save_round`` — one ``round_NNNNN.npz`` + ``.meta.json`` pair per
+  checkpointed round under ``ckpt_dir``; history and fingerprint ride in
+  the meta JSON, arrays in the npz.
+- ``restore_run`` — loads the LATEST round, validates arrays against a
+  ``like`` pytree (shape/dtype/key errors from ``checkpoint.restore``) and
+  the fingerprint against the resuming run's config, so a checkpoint from a
+  different seed/algorithm/clustering fails loudly instead of silently
+  continuing the wrong run.
+
+Resume invariant (tested in tests/test_fault_tolerance.py): every round is
+a pure function of (state after round r, round index, seed) — plans, batch
+order, and PRNG keys are all derived from ``(seed, round)`` — and float32
+arrays round-trip npz losslessly, so "run N rounds" and "run r rounds, die,
+resume, run the rest" produce bit-identical histories on both engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import numpy as np
+
+from repro import checkpoint as ckpt
+
+_ROUND_RE = re.compile(r"^round_(\d+)\.npz$")
+
+
+def json_safe(obj):
+    """Recursively convert numpy scalars/arrays so ``json.dumps`` accepts
+    the running history (engines append plain floats, but eval plumbing may
+    hand back np.float32/np.int64)."""
+    if isinstance(obj, dict):
+        return {str(k): json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return json_safe(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+@dataclasses.dataclass
+class FedState:
+    """Snapshot of a federated run after ``round_index`` completed rounds."""
+
+    round_index: int
+    arrays: Any          # pytree: {"student": ..., "teachers": ..., "t_opts": ...}
+    history: dict        # running history (JSON-safe after json_safe())
+    meta: dict = dataclasses.field(default_factory=dict)   # run fingerprint
+
+
+def round_path(ckpt_dir: str | Path, round_index: int) -> Path:
+    return Path(ckpt_dir) / f"round_{round_index:05d}.npz"
+
+
+def latest_round(ckpt_dir: str | Path) -> Optional[int]:
+    """Highest checkpointed round index under ``ckpt_dir``, or None."""
+    d = Path(ckpt_dir)
+    if not d.is_dir():
+        return None
+    rounds = [int(m.group(1)) for p in d.iterdir()
+              if (m := _ROUND_RE.match(p.name))]
+    return max(rounds) if rounds else None
+
+
+def save_round(ckpt_dir: str | Path, state: FedState, *,
+               keep_last: Optional[int] = None) -> Path:
+    """Persist one round's state; returns the npz path.  With ``keep_last``
+    set, prune all but the newest N round snapshots AFTER the new one is
+    published (a full snapshot per round grows O(rounds) model copies and
+    only the latest is ever restored)."""
+    path = round_path(ckpt_dir, state.round_index)
+    ckpt.save(path, state.arrays, step=state.round_index,
+              extra={"history": json_safe(state.history),
+                     "fingerprint": json_safe(state.meta)})
+    if keep_last is not None:
+        rounds = sorted(int(m.group(1)) for p in Path(ckpt_dir).iterdir()
+                        if (m := _ROUND_RE.match(p.name)))
+        for r in rounds[:-keep_last]:
+            stale = round_path(ckpt_dir, r)
+            stale.unlink(missing_ok=True)
+            stale.with_suffix(".meta.json").unlink(missing_ok=True)
+    return path
+
+
+def restore_run(ckpt_dir: str | Path, like, *,
+                expect_meta: Optional[dict] = None) -> FedState:
+    """Load the latest round under ``ckpt_dir`` into the structure of
+    ``like``; validate the stored fingerprint against ``expect_meta`` —
+    every key the resuming run supplies must match what the checkpointing
+    run recorded, or the resume refuses with the conflicting values."""
+    r = latest_round(ckpt_dir)
+    if r is None:
+        raise FileNotFoundError(
+            f"no round_*.npz checkpoint under {ckpt_dir!r}")
+    path = round_path(ckpt_dir, r)
+    meta = ckpt.load_meta(path)
+    fingerprint = meta.get("fingerprint", {})
+    if expect_meta:
+        want = json_safe(expect_meta)
+        conflicts = [f"{k}: checkpoint={fingerprint.get(k)!r} vs "
+                     f"this run={v!r}"
+                     for k, v in want.items() if fingerprint.get(k) != v]
+        if conflicts:
+            raise ValueError(
+                f"checkpoint {path} was written by a different run "
+                f"configuration:\n  " + "\n  ".join(conflicts))
+    arrays = ckpt.restore(path, like)
+    return FedState(round_index=int(meta["step"]), arrays=arrays,
+                    history=meta.get("history", {}), meta=fingerprint)

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import hierarchical, kmeans, stats
-from repro.fed import schedule
+from repro.fed import fedstate, schedule
 from repro.data.pipeline import ClientShard, make_client_shards
 from repro.data.synthetic import Dataset
 from repro.fed.client import evaluate, make_steps
@@ -49,6 +49,11 @@ class FedConfig:
     # parity extends to sampled rounds.
     participation: str = "full"
     clients_per_round: Optional[int] = None
+    # Per-round client failure probability (fed/schedule.py module docstring,
+    # DESIGN.md §9): each invited client independently drops out of the round
+    # with this probability, deterministic per (seed, round); survivors are
+    # reweighted by the same present-cluster renormalisation as sampling.
+    dropout_rate: float = 0.0
     # Client lanes per device in the sharded engine: C = devices x pack
     # clients run in one jitted program (ignored by the loop engine).
     pack: int = 1
@@ -76,6 +81,17 @@ class FedConfig:
                                          # shard) | cluster (Alg.1 literal)
     cluster_weighting: str = "size"      # size (§IV-C.5 text) | uniform (Alg.1)
     dp_noise: float = 0.0                # DP noise multiplier on shared stats
+    # Fault tolerance (fed/fedstate.py, DESIGN.md §9): with ckpt_dir set the
+    # run writes round_NNNNN.npz snapshots every ckpt_every rounds (and at
+    # the final round); resume=True restarts from the latest one if present
+    # — bit-identical to the uninterrupted run — else starts fresh.
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 1
+    # Retention: keep only the newest N round snapshots (a full snapshot
+    # per round is O(rounds) model copies and only the latest is restored);
+    # None keeps everything.
+    ckpt_keep: Optional[int] = 3
+    resume: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -99,13 +115,58 @@ class FedConfig:
                 f"{self.clients_per_round}")
         if self.pack < 1:
             raise ValueError(f"pack must be >= 1, got {self.pack}")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(
+                f"dropout_rate must be in [0, 1), got {self.dropout_rate}")
+        if self.dropout_rate > 0 and self.algorithm == "flhc":
+            raise ValueError(
+                "FL+HC does not consume a RoundPlan; dropout_rate is not "
+                "defined for it (see the participation restriction above)")
+        if self.ckpt_every < 1:
+            raise ValueError(f"ckpt_every must be >= 1, got {self.ckpt_every}")
+        if self.ckpt_keep is not None and self.ckpt_keep < 1:
+            raise ValueError(
+                f"ckpt_keep must be >= 1 or None, got {self.ckpt_keep}")
+        if self.resume and not self.ckpt_dir:
+            raise ValueError("resume=True needs ckpt_dir")
+        if self.ckpt_dir and self.algorithm == "flhc":
+            raise ValueError(
+                "FL+HC's clustering pre-round is not checkpointable; "
+                "ckpt_dir supports fedsikd/random/fedavg/fedprox")
 
 
-def _local_epochs(shard: ClientShard, steps, params, opt_state, key, cfg,
+def _fingerprint(cfg: FedConfig, labels=None) -> dict:
+    """Run identity stored with every checkpoint and re-validated on resume
+    (fedstate.restore_run): every config field whose change would make the
+    resumed tail a DIFFERENT run — sampling identity, data/model identity,
+    and training hyperparameters.  Deliberately absent: ``rounds`` (resuming
+    with a higher target is the point) and ``ckpt_every``/``ckpt_keep``
+    (cadence is not identity).  ``labels`` (the cluster assignment) is
+    recomputed deterministically at startup, so comparing it also catches
+    silent data/config drift between save and resume."""
+    fp = {"algorithm": cfg.algorithm, "engine": cfg.engine,
+          "seed": cfg.seed, "num_clients": cfg.num_clients,
+          "alpha": cfg.alpha, "num_clusters": cfg.num_clusters,
+          "participation": cfg.participation,
+          "clients_per_round": cfg.clients_per_round,
+          "dropout_rate": cfg.dropout_rate,
+          "local_epochs": cfg.local_epochs, "batch_size": cfg.batch_size,
+          "lr": cfg.lr, "student_lr": cfg.student_lr,
+          "kd_temperature": cfg.kd_temperature, "kd_alpha": cfg.kd_alpha,
+          "kd_impl": cfg.kd_impl, "prox_mu": cfg.prox_mu,
+          "teacher_warmup_epochs": cfg.teacher_warmup_epochs,
+          "teacher_data": cfg.teacher_data,
+          "cluster_weighting": cfg.cluster_weighting,
+          "dp_noise": cfg.dp_noise}
+    if labels is not None:
+        fp["labels"] = [int(l) for l in labels]
+    return fp
+
+
+def _local_epochs(shard: ClientShard, params, opt_state, key, cfg,
                   *, step_fn, extra=()):
     for epoch in range(cfg.local_epochs):
-        for bi, (x, y) in enumerate(shard.batches(cfg.batch_size, epoch=epoch,
-                                                  seed=cfg.seed)):
+        for x, y in shard.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
             key, sub = jax.random.split(key)
             params, opt_state, _ = step_fn(params, opt_state,
                                            {"x": x, "y": y}, sub, *extra)
@@ -208,7 +269,12 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         scheduler = schedule.RoundScheduler(
             labels, participation=cfg.participation,
             clients_per_round=cfg.clients_per_round, pack=cfg.pack,
-            weighting=cfg.cluster_weighting, seed=cfg.seed)
+            weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
+            seed=cfg.seed)
+        # run fingerprint stored with every checkpoint: a resume with a
+        # different seed/algorithm/hyperparameters/clustering must refuse,
+        # not silently continue the wrong run (fed/fedstate.py, DESIGN.md §9)
+        fingerprint = _fingerprint(cfg, labels=labels)
 
         if cfg.engine == "sharded":
             # Scalable path: same Alg. 1 phases, mapped onto a packed device
@@ -233,11 +299,15 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                 teacher_data=cfg.teacher_data,
                 cluster_weighting=cfg.cluster_weighting,
                 kd_impl=cfg.kd_impl, leaders=leaders, seed=cfg.seed,
+                ckpt_dir=cfg.ckpt_dir, ckpt_every=cfg.ckpt_every,
+                ckpt_keep=cfg.ckpt_keep,
+                resume=cfg.resume, fingerprint=fingerprint,
                 eval_fn=eval_fn, progress=progress)
             history.update({k: hist[k] for k in
                             ("acc", "loss", "round", "engine",
                              "teacher_loss", "student_loss",
                              "pack", "participation", "participants")})
+            history["dropout_rate"] = cfg.dropout_rate
             return history
 
         global_student = s_init(key)
@@ -254,17 +324,38 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                         for i in (clusters[ci] if members is None else members)]
             return [shards[leaders[ci]]]
 
-        # KD establishment phase (pre-round teacher warm-up)
-        for ci in range(len(clusters)):
-            if cfg.teacher_warmup_epochs:
-                teachers[ci], t_opts[ci] = _cluster_epochs(
-                    teacher_shards(ci), teachers[ci], t_opts[ci],
-                    jax.random.fold_in(key, 9000 + ci), cfg,
-                    step_fn=teacher_steps["ce"],
-                    epochs=cfg.teacher_warmup_epochs)
         history["participation"] = cfg.participation
+        history["dropout_rate"] = cfg.dropout_rate
         history["participants"] = []
-        for rnd in range(1, cfg.rounds + 1):
+        # resume-or-warmup: a checkpoint's teacher state already includes
+        # the KD-establishment warm-up, so a resumed run must skip it
+        start_round = 0
+        resumed = False
+        if cfg.resume and fedstate.latest_round(cfg.ckpt_dir) is not None:
+            st = fedstate.restore_run(
+                cfg.ckpt_dir,
+                {"student": global_student, "teachers": teachers,
+                 "t_opts": t_opts},
+                expect_meta=fingerprint)
+            global_student = st.arrays["student"]
+            teachers = st.arrays["teachers"]
+            t_opts = st.arrays["t_opts"]
+            history.update(st.history)
+            start_round = st.round_index
+            resumed = True
+            if progress:
+                print(f"  resumed from round {start_round} "
+                      f"({cfg.ckpt_dir})")
+        if not resumed:
+            # KD establishment phase (pre-round teacher warm-up)
+            for ci in range(len(clusters)):
+                if cfg.teacher_warmup_epochs:
+                    teachers[ci], t_opts[ci] = _cluster_epochs(
+                        teacher_shards(ci), teachers[ci], t_opts[ci],
+                        jax.random.fold_in(key, 9000 + ci), cfg,
+                        step_fn=teacher_steps["ce"],
+                        epochs=cfg.teacher_warmup_epochs)
+        for rnd in range(start_round + 1, cfg.rounds + 1):
             plan = scheduler.plan(rnd)
             part = set(int(i) for i in plan.participants)
             weight_of = plan.weight_of()
@@ -282,16 +373,27 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                     sp = jax.tree_util.tree_map(jnp.copy, global_student)
                     so = s_opt.init(sp)
                     sp, _ = _local_epochs(
-                        shards[i], None, sp, so,
+                        shards[i], sp, so,
                         jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
                         step_fn=distill_step, extra=(teachers[ci],))
                     new_params.append(sp)
                     weights.append(weight_of[int(i)])
             # the plan's weights ARE the two-level FedSiKD mean, extended
             # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
-            global_student = agg.weighted_average(new_params, weights)
-            history["participants"].append(len(new_params))
+            if new_params:
+                global_student = agg.weighted_average(new_params, weights)
+            # else: every invited client dropped out — a no-op round
+            # (student and teachers unchanged), matching the sharded engine
+            history["participants"].append(len(plan.participants))
             record(global_student, student_steps["eval"], rnd)
+            if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0
+                                 or rnd == cfg.rounds):
+                fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
+                    round_index=rnd,
+                    arrays={"student": global_student, "teachers": teachers,
+                            "t_opts": t_opts},
+                    history=history, meta=fingerprint),
+                    keep_last=cfg.ckpt_keep)
         return history
 
     if cfg.algorithm == "flhc":
@@ -302,7 +404,7 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
         for i, sh in enumerate(shards):
             p = jax.tree_util.tree_map(jnp.copy, global_params)
             o = opt.init(p)
-            p, _ = _local_epochs(sh, None, p, o, jax.random.fold_in(key, i),
+            p, _ = _local_epochs(sh, p, o, jax.random.fold_in(key, i),
                                  cfg, step_fn=teacher_steps["ce"])
             locals_.append(p)
             updates.append(hierarchical.flatten_update(
@@ -336,7 +438,7 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
                     p = jax.tree_util.tree_map(jnp.copy, cluster_models[ci])
                     o = opt.init(p)
                     p, _ = _local_epochs(
-                        shards[i], None, p, o,
+                        shards[i], p, o,
                         jax.random.fold_in(key, rnd * 777 + i), cfg,
                         step_fn=teacher_steps["ce"])
                     locs.append(p)
@@ -350,11 +452,23 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
     # the plan is just "which clients train this round"
     scheduler = schedule.RoundScheduler(
         np.zeros(cfg.num_clients, np.int32), participation=cfg.participation,
-        clients_per_round=cfg.clients_per_round, seed=cfg.seed)
+        clients_per_round=cfg.clients_per_round,
+        dropout_rate=cfg.dropout_rate, seed=cfg.seed)
     history["participation"] = cfg.participation
+    history["dropout_rate"] = cfg.dropout_rate
     history["participants"] = []
     global_params = t_init(key)
-    for rnd in range(1, cfg.rounds + 1):
+    fingerprint = _fingerprint(cfg)
+    start_round = 0
+    if cfg.resume and fedstate.latest_round(cfg.ckpt_dir) is not None:
+        st = fedstate.restore_run(cfg.ckpt_dir, {"student": global_params},
+                                  expect_meta=fingerprint)
+        global_params = st.arrays["student"]
+        history.update(st.history)
+        start_round = st.round_index
+        if progress:
+            print(f"  resumed from round {start_round} ({cfg.ckpt_dir})")
+    for rnd in range(start_round + 1, cfg.rounds + 1):
         part = scheduler.plan(rnd).participants
         history["participants"].append(len(part))
         locals_, sizes = [], []
@@ -362,16 +476,23 @@ def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dic
             p = jax.tree_util.tree_map(jnp.copy, global_params)
             o = opt.init(p)
             if cfg.algorithm == "fedprox":
-                p, _ = _local_epochs(sh, None, p, o,
+                p, _ = _local_epochs(sh, p, o,
                                      jax.random.fold_in(key, rnd * 31 + i), cfg,
                                      step_fn=teacher_steps["prox"],
                                      extra=(global_params,))
             else:
-                p, _ = _local_epochs(sh, None, p, o,
+                p, _ = _local_epochs(sh, p, o,
                                      jax.random.fold_in(key, rnd * 31 + i), cfg,
                                      step_fn=teacher_steps["ce"])
             locals_.append(p)
             sizes.append(sh.num_examples)
-        global_params = agg.fedavg(locals_, sizes)
+        if locals_:
+            global_params = agg.fedavg(locals_, sizes)
+        # else: an all-dropout round is a no-op (params unchanged)
         record(global_params, teacher_steps["eval"], rnd)
+        if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0 or rnd == cfg.rounds):
+            fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
+                round_index=rnd, arrays={"student": global_params},
+                history=history, meta=fingerprint),
+                keep_last=cfg.ckpt_keep)
     return history

@@ -36,6 +36,21 @@ With ``participation="full"`` the plan collapses to today's semantics
 exactly: slot i hosts client i, weights reproduce
 ``aggregation.hierarchical_average`` (``size`` -> flat 1/N, ``uniform`` ->
 1/(K*|C_k|)).
+
+Client dropout (``dropout_rate``): real deployments lose clients MID-ROUND
+(stragglers, battery, network — a standing challenge in federated
+distillation, arXiv:2404.08564 / arXiv:2211.04742).  After the
+participation policy invites its subset, each invited client independently
+fails with probability ``dropout_rate``, deterministically per
+``(seed, round)`` on a PRNG stream disjoint from the sampling stream.  The
+survivors flow through the SAME ``_build_plan`` weighting as sampling, so
+the unbiasedness story extends to failures: surviving members of cluster k
+aggregate with ``W_k / m_k`` (m_k = survivor count) and a cluster whose
+invitees all failed is renormalised away exactly like an unsampled cluster
+under ``uniform``.  Dropout can empty a round entirely; engines treat an
+all-idle plan as a no-op round (state unchanged, metrics still recorded).
+The warm-up plan never drops clients — the KD-establishment phase happens
+before deployment failures are in scope.
 """
 from __future__ import annotations
 
@@ -130,6 +145,8 @@ class RoundScheduler:
     n_devices : mesh size; defaults to ``ceil(max_participants / pack)``.
     weighting : full-population cluster weight, ``size`` (|C_k|/N,
         §IV-C.5) or ``uniform`` (1/K, Alg. 1 literal).
+    dropout_rate : probability that an invited client fails mid-round
+        (module docstring); 0 disables the failure scenario.
     seed : plans are a pure function of (seed, round_index).
     """
 
@@ -137,7 +154,8 @@ class RoundScheduler:
                  participation: str = "full",
                  clients_per_round: Optional[int] = None,
                  pack: int = 1, n_devices: Optional[int] = None,
-                 weighting: str = "size", seed: int = 0):
+                 weighting: str = "size", dropout_rate: float = 0.0,
+                 seed: int = 0):
         labels = np.asarray(cluster_of)
         self.n_clients = len(labels)
         uniq = np.unique(labels)
@@ -173,9 +191,13 @@ class RoundScheduler:
                     f"stratified sampling needs clients_per_round >= "
                     f"n_clusters ({self.n_clusters}) to keep every cluster's "
                     f"teacher covered, got {clients_per_round}")
+        if not 0.0 <= dropout_rate < 1.0:
+            raise ValueError(
+                f"dropout_rate must be in [0, 1), got {dropout_rate}")
         self.participation = participation
         self.clients_per_round = clients_per_round
         self.weighting = weighting
+        self.dropout_rate = dropout_rate
         self.pack = pack
         self.max_participants = clients_per_round
         # the ONE slot-layout rule, shared with the mesh builder
@@ -223,6 +245,17 @@ class RoundScheduler:
         return [np.sort(rng.choice(g, int(m), replace=False))
                 for g, m in zip(self.groups, counts)]
 
+    def _apply_dropout(self, round_index: int,
+                       per_cluster: list[np.ndarray]) -> list[np.ndarray]:
+        """Fail each invited client independently with ``dropout_rate``,
+        deterministically per (seed, round); the 0xD0 salt keeps the failure
+        stream disjoint from the sampling stream (``_rng``), so turning
+        dropout on never reshuffles WHO was invited."""
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [self.seed & 0x7FFFFFFF, round_index + 1, 0xD0]))
+        return [sel[rng.random(len(sel)) >= self.dropout_rate]
+                for sel in per_cluster]
+
     # ----------------------------------------------------------------- plan
     def _build_plan(self, round_index: int,
                     per_cluster: list[np.ndarray]) -> RoundPlan:
@@ -253,8 +286,13 @@ class RoundScheduler:
 
     def plan(self, round_index: int) -> RoundPlan:
         """The participation plan for round ``round_index`` (1-based by
-        convention; any int is valid and deterministic)."""
-        return self._build_plan(round_index, self._sample(round_index))
+        convention; any int is valid and deterministic).  Survivors of the
+        dropout filter are reweighted by ``_build_plan``'s present-cluster
+        renormalisation, exactly like an under-sampled round."""
+        sel = self._sample(round_index)
+        if self.dropout_rate > 0.0:
+            sel = self._apply_dropout(round_index, sel)
+        return self._build_plan(round_index, sel)
 
     def warmup_plan(self) -> RoundPlan:
         """Teacher-coverage plan for the pre-round KD-establishment phase:

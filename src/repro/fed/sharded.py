@@ -56,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import cluster_collectives as cc
 from repro.core.distill import distillation_loss, softmax_cross_entropy
+from repro.fed import fedstate
 from repro.fed.schedule import RoundPlan, RoundScheduler
 from repro.kernels import ops
 from repro.launch.mesh import CLIENT_AXIS, make_fed_client_mesh
@@ -380,6 +381,9 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
                            teacher_data: str = "leader",
                            cluster_weighting: str = "size",
                            kd_impl: str = "fused", leaders=None,
+                           ckpt_dir=None, ckpt_every: int = 1,
+                           ckpt_keep: Optional[int] = None,
+                           resume: bool = False, fingerprint=None,
                            seed: int = 0, eval_fn=None, progress: bool = False):
     """Full FedSiKD (Alg. 1) on the packed device mesh; the scalable twin of
     the ``rounds.py`` loop engine's ``fedsikd`` branch.
@@ -399,7 +403,15 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
     scattered back from each cluster's first active slot (with
     ``teacher_data="cluster"`` and unequal member budgets that slot's Adam
     step count becomes the cluster's; replicas re-sync next round anyway).
-    Clusters with no sampled member keep their teacher untouched."""
+    Clusters with no sampled member keep their teacher untouched.
+
+    Fault tolerance (DESIGN.md §9): with ``ckpt_dir`` set, the canonical
+    host-side state — the global student plus the (K, ...) per-cluster
+    teacher/opt stacks, i.e. exactly what survives between rounds — is
+    saved every ``ckpt_every`` rounds via ``fed.fedstate``; ``resume=True``
+    restores the latest snapshot (skipping the already-banked warm-up) and
+    the next round's ``slot_state`` gather re-scatters it onto the plan's
+    slots.  Resumed runs are bit-identical to uninterrupted ones."""
     n = len(shards)
     if scheduler is None:
         scheduler = RoundScheduler(
@@ -509,8 +521,26 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
                "num_clusters": K, "engine": "sharded",
                "pack": pack, "participation": scheduler.participation}
 
-    # ---- Alg. 1 KD-establishment: teacher warm-up before round 1
-    if warmup_epochs > 0:
+    # ---- resume from the latest round checkpoint (canonical host state:
+    # global student + stacked per-cluster teachers/opt states)
+    start_round = 0
+    resumed = False
+    if resume and ckpt_dir and fedstate.latest_round(ckpt_dir) is not None:
+        st = fedstate.restore_run(
+            ckpt_dir, {"student": sp_global, "teachers": tp_k, "t_opts": ts_k},
+            expect_meta=fingerprint)
+        sp_global = st.arrays["student"]
+        tp_k = st.arrays["teachers"]
+        ts_k = st.arrays["t_opts"]
+        history.update(st.history)
+        start_round = st.round_index
+        resumed = True
+        if progress:
+            print(f"  resumed from round {start_round} ({ckpt_dir})")
+
+    # ---- Alg. 1 KD-establishment: teacher warm-up before round 1 (a
+    # checkpoint's teacher state already includes it, so resume skips)
+    if warmup_epochs > 0 and not resumed:
         w_steps_all = ((t_steps_all // max(local_epochs, 1))
                        * warmup_epochs).astype(np.int32)
         wx_all, wy_all = stack_client_data(t_src, int(w_steps_all.max()),
@@ -531,29 +561,35 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
         kd_temperature=kd_temperature, kd_alpha=kd_alpha, kd_impl=kd_impl)
 
     staged_key = None                      # slot assignment of the staged data
-    for rnd in range(1, rounds + 1):
+    for rnd in range(start_round + 1, rounds + 1):
         plan = scheduler.plan(rnd)
-        tp_s, ts_s = slot_state(plan)
-        sp_s = replicate_params(sp_global, S)
-        ss_s = jax.vmap(s_opt.init)(sp_s)  # fresh student opt (as loop engine)
-        # restage batches only when the slot->client assignment changed
-        # (with participation="full" it never does: one upload total)
-        if plan.slot_client.tobytes() != staged_key:
-            tx, ty, sx, sy = stage(plan, tx_all, ty_all, sx_all, sy_all)
-            staged_key = plan.slot_client.tobytes()
-        # disjoint even/odd salts keep teacher and student PRNG streams
-        # from colliding on clients whose id equals their cluster index
-        tp_s, ts_s, sp_s, ss_s, t_loss, s_loss = round_fn(
-            tp_s, ts_s, sp_s, ss_s, tx, ty,
-            jnp.asarray(plan.steps_for(t_steps_all)), sx, sy,
-            jnp.asarray(plan.steps_for(s_steps_all)),
-            teacher_keys(2 * rnd, plan), student_keys(2 * rnd + 1, plan),
-            jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
-        tp_k, ts_k = scatter_teachers(plan, tp_s, ts_s)
-        # every slot holds the aggregated student after the weighted mean
-        sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
-        history["teacher_loss"].append(float(t_loss))
-        history["student_loss"].append(float(s_loss))
+        if plan.active.any():
+            tp_s, ts_s = slot_state(plan)
+            sp_s = replicate_params(sp_global, S)
+            ss_s = jax.vmap(s_opt.init)(sp_s)  # fresh student opt (loop too)
+            # restage batches only when the slot->client assignment changed
+            # (with participation="full" it never does: one upload total)
+            if plan.slot_client.tobytes() != staged_key:
+                tx, ty, sx, sy = stage(plan, tx_all, ty_all, sx_all, sy_all)
+                staged_key = plan.slot_client.tobytes()
+            # disjoint even/odd salts keep teacher and student PRNG streams
+            # from colliding on clients whose id equals their cluster index
+            tp_s, ts_s, sp_s, ss_s, t_loss, s_loss = round_fn(
+                tp_s, ts_s, sp_s, ss_s, tx, ty,
+                jnp.asarray(plan.steps_for(t_steps_all)), sx, sy,
+                jnp.asarray(plan.steps_for(s_steps_all)),
+                teacher_keys(2 * rnd, plan), student_keys(2 * rnd + 1, plan),
+                jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
+            tp_k, ts_k = scatter_teachers(plan, tp_s, ts_s)
+            # every slot holds the aggregated student after the weighted mean
+            sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+            t_loss, s_loss = float(t_loss), float(s_loss)
+        else:
+            # every invited client dropped out: a no-op round — canonical
+            # state untouched, metrics still recorded (loop engine ditto)
+            t_loss = s_loss = 0.0
+        history["teacher_loss"].append(t_loss)
+        history["student_loss"].append(s_loss)
         history["round"].append(rnd)
         history["participants"].append(int(plan.active.sum()))
         if eval_fn is not None:
@@ -564,6 +600,13 @@ def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
                 print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}  "
                       f"clients={int(plan.active.sum())}")
         elif progress:
-            print(f"  round {rnd:3d}  student_loss={float(s_loss):.4f}  "
+            print(f"  round {rnd:3d}  student_loss={s_loss:.4f}  "
                   f"clients={int(plan.active.sum())}")
+        if ckpt_dir and (rnd % ckpt_every == 0 or rnd == rounds):
+            fedstate.save_round(ckpt_dir, fedstate.FedState(
+                round_index=rnd,
+                arrays={"student": sp_global, "teachers": tp_k,
+                        "t_opts": ts_k},
+                history=history, meta=fingerprint or {}),
+                keep_last=ckpt_keep)
     return sp_global, history

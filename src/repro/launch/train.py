@@ -31,16 +31,27 @@ from repro.models import transformer as tf
 
 def run_fl(args):
     ds = load_dataset(args.dataset, small=args.small)
-    cfg = FedConfig(algorithm=args.algorithm, num_clients=args.clients,
+    cfg = FedConfig(algorithm=args.algorithm, engine=args.engine,
+                    num_clients=args.clients,
                     alpha=args.alpha, rounds=args.rounds,
                     local_epochs=args.local_epochs, seed=args.seed,
-                    num_clusters=args.clusters)
+                    num_clusters=args.clusters,
+                    participation=args.participation,
+                    clients_per_round=args.clients_per_round,
+                    dropout_rate=args.dropout_rate,
+                    # --ckpt doubles as the round-checkpoint dir: a killed
+                    # run restarts with --resume (fed/fedstate.py)
+                    ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+                    ckpt_keep=args.ckpt_keep or None,
+                    resume=args.resume)
     h = run_federated(ds, cfg, progress=True)
     print(f"final: acc={h['acc'][-1]:.4f} loss={h['loss'][-1]:.4f}")
     if args.ckpt:
         Path(args.ckpt).mkdir(parents=True, exist_ok=True)
         import json
-        (Path(args.ckpt) / "history.json").write_text(json.dumps(h))
+
+        from repro.fed.fedstate import json_safe
+        (Path(args.ckpt) / "history.json").write_text(json.dumps(json_safe(h)))
     return h
 
 
@@ -93,14 +104,27 @@ def main():
     fl = sub.add_parser("fl")
     fl.add_argument("--dataset", default="mnist")
     fl.add_argument("--algorithm", default="fedsikd")
+    fl.add_argument("--engine", default="loop", choices=["loop", "sharded"])
     fl.add_argument("--alpha", type=float, default=0.5)
     fl.add_argument("--rounds", type=int, default=5)
     fl.add_argument("--clients", type=int, default=16)
     fl.add_argument("--local-epochs", type=int, default=2)
     fl.add_argument("--clusters", type=int, default=None)
+    fl.add_argument("--participation", default="full",
+                    choices=["full", "uniform", "stratified"])
+    fl.add_argument("--clients-per-round", type=int, default=None)
+    fl.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round client failure probability")
     fl.add_argument("--small", action="store_true")
     fl.add_argument("--seed", type=int, default=0)
-    fl.add_argument("--ckpt", default=None)
+    fl.add_argument("--ckpt", default=None,
+                    help="checkpoint dir: round_NNNNN.npz every --ckpt-every "
+                         "rounds + history.json at the end")
+    fl.add_argument("--ckpt-every", type=int, default=1)
+    fl.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain the newest N round snapshots (0 = all)")
+    fl.add_argument("--resume", action="store_true",
+                    help="resume from the latest round checkpoint in --ckpt")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

@@ -1,0 +1,169 @@
+"""Round-granular checkpoint/resume (fed/fedstate.py, DESIGN.md §9).
+
+The acceptance property: a run checkpointed at round r and resumed produces
+a history BIT-IDENTICAL to the uninterrupted run — on both engines, and
+with the hardest scheduling enabled (stratified sampling + client dropout),
+since resume must replay the same plans, batch order, and PRNG streams.
+The loop engine runs in-process; the sharded engine needs 8 host devices so
+it runs in a subprocess (XLA_FLAGS pre-import, DESIGN.md §6).
+"""
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _subproc import run_script
+
+from repro.data.synthetic import load_dataset
+from repro.fed import fedstate
+from repro.fed.rounds import FedConfig, run_federated
+
+
+# ------------------------------------------------------------ fedstate unit
+def test_latest_round_and_save_restore_roundtrip(tmp_path):
+    assert fedstate.latest_round(tmp_path) is None
+    assert fedstate.latest_round(tmp_path / "nope") is None
+    arrays = {"student": {"w": jnp.arange(4.0)}}
+    for r in (1, 3, 2):
+        fedstate.save_round(tmp_path, fedstate.FedState(
+            round_index=r, arrays=arrays,
+            history={"acc": [0.1] * r, "round": list(range(1, r + 1))},
+            meta={"seed": 0}))
+    assert fedstate.latest_round(tmp_path) == 3
+    st = fedstate.restore_run(tmp_path, arrays, expect_meta={"seed": 0})
+    assert st.round_index == 3
+    assert st.history["acc"] == [0.1, 0.1, 0.1]
+    np.testing.assert_array_equal(np.asarray(st.arrays["student"]["w"]),
+                                  np.arange(4.0))
+    # numpy scalars in history/meta are converted, not crashed on
+    fedstate.save_round(tmp_path, fedstate.FedState(
+        round_index=4, arrays=arrays,
+        history={"acc": [np.float32(0.5)], "n": np.int64(3)}, meta={}))
+    assert fedstate.restore_run(tmp_path, arrays).history["acc"] == [0.5]
+    # retention: keep_last prunes npz AND meta of all but the newest N
+    fedstate.save_round(tmp_path, fedstate.FedState(
+        round_index=5, arrays=arrays, history={}, meta={}), keep_last=2)
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert kept == ["round_00004.meta.json", "round_00004.npz",
+                    "round_00005.meta.json", "round_00005.npz"], kept
+    assert fedstate.latest_round(tmp_path) == 5
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    arrays = {"student": {"w": jnp.zeros(2)}}
+    fedstate.save_round(tmp_path, fedstate.FedState(
+        round_index=1, arrays=arrays, history={}, meta={}))
+    assert not list(tmp_path.glob("*.tmp"))
+    # a stray truncated temp file from a killed save is never picked up
+    (tmp_path / "round_00009.npz.tmp").write_bytes(b"garbage")
+    assert fedstate.latest_round(tmp_path) == 1
+
+
+def test_resume_refuses_changed_hyperparameters(tmp_path):
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedavg", num_clients=4, alpha=1.0, rounds=1,
+                  local_epochs=1, batch_size=64, seed=3)
+    d = str(tmp_path / "ck")
+    run_federated(ds, FedConfig(**common, ckpt_dir=d))
+    # a changed training hyperparameter makes the tail a DIFFERENT run
+    with pytest.raises(ValueError, match="local_epochs"):
+        run_federated(ds, FedConfig(**{**common, "local_epochs": 2,
+                                       "rounds": 2},
+                                    ckpt_dir=d, resume=True))
+    # ...but a higher round target alone is the intended resume use case
+    h = run_federated(ds, FedConfig(**{**common, "rounds": 2},
+                                    ckpt_dir=d, resume=True))
+    assert h["round"] == [1, 2]
+
+
+def test_restore_refuses_mismatched_fingerprint(tmp_path):
+    arrays = {"student": {"w": jnp.zeros(2)}}
+    fedstate.save_round(tmp_path, fedstate.FedState(
+        round_index=1, arrays=arrays, history={},
+        meta={"seed": 0, "algorithm": "fedsikd"}))
+    with pytest.raises(ValueError, match="different run configuration"):
+        fedstate.restore_run(tmp_path, arrays,
+                             expect_meta={"seed": 1, "algorithm": "fedsikd"})
+    with pytest.raises(FileNotFoundError):
+        fedstate.restore_run(tmp_path / "empty", arrays)
+
+
+# ----------------------------------------------- loop engine resume parity
+def test_loop_engine_resume_is_bit_identical(tmp_path):
+    """6 rounds straight == 3 rounds + kill + resume 3, bit for bit, under
+    stratified sampling AND dropout (the acceptance criterion)."""
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedsikd", num_clients=6, alpha=1.0, rounds=6,
+                  local_epochs=1, teacher_warmup_epochs=1, batch_size=64,
+                  num_clusters=2, participation="stratified",
+                  clients_per_round=4, dropout_rate=0.25, seed=0)
+    h_full = run_federated(ds, FedConfig(**common))
+    d = str(tmp_path / "ck")
+    run_federated(ds, FedConfig(**{**common, "rounds": 3},
+                                ckpt_dir=d, ckpt_every=1))
+    assert fedstate.latest_round(d) == 3
+    h_res = run_federated(ds, FedConfig(**common, ckpt_dir=d, ckpt_every=3,
+                                        resume=True))
+    assert h_res["acc"] == h_full["acc"]          # bit-identical floats
+    assert h_res["loss"] == h_full["loss"]
+    assert h_res["round"] == list(range(1, 7))
+    assert h_res["participants"] == h_full["participants"]
+    assert fedstate.latest_round(d) == 6
+
+
+def test_fedavg_resume_and_config_fingerprint_guard(tmp_path):
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedavg", num_clients=4, alpha=1.0, rounds=4,
+                  local_epochs=1, batch_size=64, seed=3)
+    h_full = run_federated(ds, FedConfig(**common))
+    d = str(tmp_path / "ck")
+    run_federated(ds, FedConfig(**{**common, "rounds": 2},
+                                ckpt_dir=d, ckpt_every=2))
+    h_res = run_federated(ds, FedConfig(**common, ckpt_dir=d, resume=True))
+    assert h_res["acc"] == h_full["acc"] and h_res["loss"] == h_full["loss"]
+    # resuming with a different seed must refuse, not silently continue
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_federated(ds, FedConfig(**{**common, "seed": 4},
+                                    ckpt_dir=d, resume=True))
+    # resume=True with an empty dir starts fresh instead of crashing
+    h_fresh = run_federated(ds, FedConfig(
+        **{**common, "rounds": 1}, ckpt_dir=str(tmp_path / "new"),
+        resume=True))
+    assert len(h_fresh["acc"]) == 1
+
+
+# -------------------------------------------- sharded engine resume parity
+_SHARDED_RESUME_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    # packed mesh (pack=2), stratified sampling AND dropout: resume must
+    # re-gather the restored canonical per-cluster teachers onto the
+    # round's slots and continue bit-identically
+    common = dict(algorithm="fedsikd", engine="sharded", num_clients=8,
+                  pack=2, alpha=1.0, rounds=4, local_epochs=1,
+                  teacher_warmup_epochs=1, batch_size=32, num_clusters=3,
+                  participation="stratified", clients_per_round=6,
+                  dropout_rate=0.25, seed=0)
+    h_full = run_federated(ds, FedConfig(**common))
+    d = tempfile.mkdtemp()
+    run_federated(ds, FedConfig(**{**common, "rounds": 2},
+                                ckpt_dir=d, ckpt_every=1))
+    h_res = run_federated(ds, FedConfig(**common, ckpt_dir=d, ckpt_every=2,
+                                        resume=True))
+    assert h_res["acc"] == h_full["acc"], (h_res["acc"], h_full["acc"])
+    assert h_res["loss"] == h_full["loss"]
+    assert h_res["teacher_loss"] == h_full["teacher_loss"]
+    assert h_res["student_loss"] == h_full["student_loss"]
+    assert h_res["participants"] == h_full["participants"]
+    assert h_res["round"] == [1, 2, 3, 4]
+    print("SHARDED-RESUME-OK", h_res["acc"])
+""")
+
+
+def test_sharded_engine_resume_is_bit_identical():
+    r = run_script(_SHARDED_RESUME_SCRIPT)
+    assert "SHARDED-RESUME-OK" in r.stdout, r.stdout + r.stderr

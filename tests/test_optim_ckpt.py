@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import checkpoint as ckpt
 from repro.optim import adamw, apply_updates, cosine_schedule, fedprox_penalty, sgd
@@ -73,3 +74,64 @@ def test_checkpoint_roundtrip(tmp_path):
                                np.asarray(tree["nested"]["b"], np.float32))
     meta = ckpt.load_meta(path)
     assert meta["step"] == 7 and meta["note"] == "x"
+
+
+def test_checkpoint_bf16_view_trick_is_bitexact(tmp_path):
+    # values that are NOT bf16-representable sums of powers of two still
+    # round-trip bit-for-bit (the uint16 view stores the raw payload)
+    vals = jnp.array([1 / 3, -2.7182818, 1e-30, 6.1e4], jnp.bfloat16)
+    path = tmp_path / "bf.npz"
+    ckpt.save(path, {"w": vals})
+    out = ckpt.restore(path, {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)})
+    np.testing.assert_array_equal(np.asarray(out["w"]).view(np.uint16),
+                                  np.asarray(vals).view(np.uint16))
+
+
+def test_checkpoint_int_opt_state_roundtrip(tmp_path):
+    # Adam's integer step count must survive: a resumed optimizer with a
+    # zeroed count replays bias correction and diverges from the original
+    opt = adamw(1e-2)
+    p = {"w": jnp.ones((3,), jnp.float32)}
+    s = opt.init(p)
+    for _ in range(5):
+        u, s = opt.update({"w": jnp.ones((3,))}, s, p)
+        p = apply_updates(p, u)
+    path = tmp_path / "opt.npz"
+    ckpt.save(path, {"params": p, "opt": s}, step=5)
+    out = ckpt.restore(path, {"params": p, "opt": s})
+    assert out["opt"].count.dtype == s.count.dtype
+    assert int(out["opt"].count) == 5
+    np.testing.assert_array_equal(np.asarray(out["opt"].mu["w"]),
+                                  np.asarray(s.mu["w"]))
+
+
+def test_checkpoint_restore_error_paths(tmp_path):
+    tree = {"a": jnp.zeros((2, 3), jnp.float32),
+            "b": jnp.zeros((4,), jnp.int32)}
+    path = tmp_path / "ck.npz"
+    ckpt.save(path, tree)
+    # shape mismatch names the offending key path
+    with pytest.raises(ValueError, match=r"shape mismatch at 'a'"):
+        ckpt.restore(path, {"a": jax.ShapeDtypeStruct((3, 2), jnp.float32),
+                            "b": tree["b"]})
+    # dtype mismatch is a real error too (not silently cast)
+    with pytest.raises(ValueError, match=r"dtype mismatch at 'b'"):
+        ckpt.restore(path, {"a": tree["a"],
+                            "b": jax.ShapeDtypeStruct((4,), jnp.float32)})
+    # a leaf the target wants but the npz lacks
+    with pytest.raises(ValueError, match=r"missing leaf 'c/extra'"):
+        ckpt.restore(path, {**tree, "c": {"extra": jnp.zeros((1,))}})
+    # a leaf the npz has but the target does not consume
+    with pytest.raises(ValueError, match=r"absent from the restore target"):
+        ckpt.restore(path, {"a": tree["a"]})
+
+
+def test_load_meta_with_and_without_npz_suffix(tmp_path):
+    path = tmp_path / "run.npz"
+    ckpt.save(path, {"w": jnp.zeros((2,))}, step=3)
+    assert ckpt.load_meta(tmp_path / "run.npz")["step"] == 3
+    assert ckpt.load_meta(tmp_path / "run")["step"] == 3
+    # restore resolves the suffix-less spelling the same way
+    out = ckpt.restore(tmp_path / "run",
+                       {"w": jax.ShapeDtypeStruct((2,), jnp.float32)})
+    assert out["w"].shape == (2,)

@@ -95,6 +95,58 @@ def test_slot_layout_and_idle_padding():
         assert set(p.slot_cluster[mixed]) == {p.slot_cluster[a]}
 
 
+def test_dropout_filters_invitees_deterministically():
+    kw = dict(participation="stratified", clients_per_round=8, seed=11)
+    base = RoundScheduler(LABELS, **kw)
+    drop = RoundScheduler(LABELS, dropout_rate=0.3, **kw)
+    saw_failure = False
+    for rnd in range(1, 60):
+        invited = set(base.plan(rnd).participants.tolist())
+        survived = set(drop.plan(rnd).participants.tolist())
+        # dropout never changes WHO was invited, only who finishes
+        assert survived <= invited, (rnd, survived, invited)
+        saw_failure |= survived < invited
+        p = drop.plan(rnd)
+        if len(survived):     # survivor weights stay a proper mean
+            np.testing.assert_allclose(p.slot_weight.sum(), 1.0, rtol=1e-6)
+    assert saw_failure
+    again = RoundScheduler(LABELS, dropout_rate=0.3, **kw)
+    assert np.array_equal(again.plan(7).slot_client, drop.plan(7).slot_client)
+
+
+def test_dropout_survivors_reweighted_like_sampling():
+    """A cluster that loses all invitees is renormalised away, exactly like
+    an unsampled cluster under ``uniform`` — survivors of cluster k carry
+    W_k / m_k over the renormalised present-cluster weights."""
+    s = RoundScheduler(LABELS, participation="full", weighting="size",
+                       dropout_rate=0.5, seed=2)
+    for rnd in range(1, 100):
+        p = s.plan(rnd)
+        if not p.active.any():
+            continue
+        w = p.weight_of()
+        present = np.unique(LABELS[p.participants])
+        norm = sum(len(np.flatnonzero(LABELS == k)) / len(LABELS)
+                   for k in present)
+        for k in present:
+            members = [i for i in p.participants if LABELS[i] == k]
+            W_k = len(np.flatnonzero(LABELS == k)) / len(LABELS)
+            for i in members:
+                np.testing.assert_allclose(
+                    w[int(i)], W_k / (norm * len(members)), rtol=1e-5)
+
+
+def test_dropout_can_empty_a_round():
+    s = RoundScheduler(LABELS, participation="uniform", clients_per_round=3,
+                       dropout_rate=0.9, seed=5)
+    empties = [r for r in range(1, 200) if not s.plan(r).active.any()]
+    assert empties, "0.9^3 per round should empty some round in 200"
+    p = s.plan(empties[0])
+    assert p.slot_weight.sum() == 0.0
+    # an all-idle plan still has a well-formed identity sync operator
+    np.testing.assert_array_equal(p.sync_matrix(), np.eye(p.n_slots))
+
+
 def test_scheduler_validation():
     with pytest.raises(ValueError):
         RoundScheduler(LABELS, participation="sometimes")
@@ -108,6 +160,10 @@ def test_scheduler_validation():
         RoundScheduler(LABELS, pack=0)
     with pytest.raises(ValueError):   # 12 participants can't fit 2x2 slots
         RoundScheduler(LABELS, participation="full", pack=2, n_devices=2)
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, dropout_rate=1.0)
+    with pytest.raises(ValueError):
+        RoundScheduler(LABELS, dropout_rate=-0.1)
 
 
 def test_fedconfig_validation():
@@ -121,6 +177,18 @@ def test_fedconfig_validation():
     cfg = FedConfig(participation="stratified", clients_per_round=4,
                     num_clients=8, pack=2)
     assert cfg.clients_per_round == 4
+    with pytest.raises(ValueError):
+        FedConfig(dropout_rate=1.5)
+    with pytest.raises(ValueError):
+        FedConfig(resume=True)                       # needs ckpt_dir
+    with pytest.raises(ValueError):
+        FedConfig(ckpt_dir="x", ckpt_every=0)
+    with pytest.raises(ValueError):
+        FedConfig(ckpt_dir="x", ckpt_keep=0)
+    with pytest.raises(ValueError):
+        FedConfig(algorithm="flhc", ckpt_dir="x")    # not checkpointable
+    with pytest.raises(ValueError):
+        FedConfig(algorithm="flhc", dropout_rate=0.1)
 
 
 # ------------------------------------------- packed engine acceptance test

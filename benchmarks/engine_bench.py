@@ -1,10 +1,11 @@
-"""Loop vs packed-sharded FedSiKD round-engine benchmark (8 host devices).
+"""Loop vs packed-sharded round-engine benchmark (8 host devices).
 
-Runs the SAME FedSiKD configuration (Alg. 1: teacher warm-up, per-round
-teacher refresh, KD local steps, hierarchical aggregation) through both
-round engines — sweeping the client count and the ``pack`` factor (client
-lanes per device) for the mesh engine — and reports wall-clock per round
-plus final accuracy:
+Runs the SAME configuration through both round engines — FedSiKD (Alg. 1:
+teacher warm-up, per-round teacher refresh, KD local steps, hierarchical
+aggregation) AND the paper's baselines (FedAvg/FedProx, which since the
+algorithm-strategy layer run on the packed mesh too) — sweeping the client
+count and the ``pack`` factor (client lanes per device) for the mesh
+engine — and reports wall-clock per round plus final accuracy:
 
   loop    — sequential per-client Python loop (reference engine)
   sharded — pack clients per device (C = devices x pack); fused Pallas KD
@@ -42,11 +43,12 @@ from repro.data.synthetic import load_dataset
 from repro.fed.rounds import FedConfig, run_federated
 
 
-def bench_engine(ds, engine: str, *, clients: int = 8, pack: int = 1,
+def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
+                 clients: int = 8, pack: int = 1,
                  kd_impl: str = "fused", rounds: int = 3,
                  participation: str = "full",
                  clients_per_round=None, dropout_rate: float = 0.0) -> dict:
-    cfg = FedConfig(algorithm="fedsikd", engine=engine, kd_impl=kd_impl,
+    cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
                     num_clusters=3, participation=participation,
@@ -60,7 +62,9 @@ def bench_engine(ds, engine: str, *, clients: int = 8, pack: int = 1,
     t0 = time.perf_counter()
     h2 = run_federated(ds, cfg)
     rerun = time.perf_counter() - t0
-    return {"engine": engine, "kd_impl": kd_impl, "clients": clients,
+    return {"engine": engine, "algorithm": algorithm,
+            "kd_impl": kd_impl if algorithm in ("fedsikd", "random") else "-",
+            "clients": clients,
             "pack": pack if engine == "sharded" else None,
             "participation": participation,
             "clients_per_round": clients_per_round,
@@ -89,6 +93,11 @@ def main():
             bench_engine(ds, "loop", clients=8, rounds=rounds,
                          participation="uniform", clients_per_round=6,
                          dropout_rate=0.25),
+            # baselines-on-mesh smoke: fedavg through both engines
+            bench_engine(ds, "loop", algorithm="fedavg", clients=8,
+                         rounds=rounds),
+            bench_engine(ds, "sharded", algorithm="fedavg", clients=8,
+                         pack=2, rounds=rounds),
         ]
     else:
         rounds = args.rounds or 3
@@ -111,19 +120,34 @@ def main():
             bench_engine(ds, "sharded", clients=32, pack=4, rounds=rounds,
                          participation="stratified", clients_per_round=16,
                          dropout_rate=0.2),
+            # the paper's baselines on the SAME packed mesh (fed/algorithms/
+            # baselines.py): loop-vs-sharded rows so the comparative sweeps'
+            # scalable path is tracked per commit too
+            bench_engine(ds, "loop", algorithm="fedavg", clients=32,
+                         rounds=rounds),
+            bench_engine(ds, "sharded", algorithm="fedavg", clients=32,
+                         pack=4, rounds=rounds),
+            bench_engine(ds, "loop", algorithm="fedprox", clients=32,
+                         rounds=rounds),
+            bench_engine(ds, "sharded", algorithm="fedprox", clients=32,
+                         pack=4, rounds=rounds,
+                         participation="stratified", clients_per_round=16,
+                         dropout_rate=0.2),
         ]
 
-    print(f"{'engine':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
+    print(f"{'engine':8s} {'alg':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
           f"{'part':>10s} {'drop':>5s} {'cold total':>11s} "
           f"{'rerun s/round':>14s} {'final acc':>10s}")
     for r in rows:
-        print(f"{r['engine']:8s} {r['kd_impl']:10s} {r['clients']:3d} "
+        print(f"{r['engine']:8s} {r['algorithm']:8s} {r['kd_impl']:10s} "
+              f"{r['clients']:3d} "
               f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
               f"{r['dropout_rate']:5.2f} "
               f"{r['total_s']:10.1f}s {r['rerun_s_per_round']:13.2f}s "
               f"{r['final_acc']:10.3f}")
     spread = [r["final_acc"] for r in rows
-              if r["clients"] == 8 and r["participation"] == "full"]
+              if r["clients"] == 8 and r["participation"] == "full"
+              and r["algorithm"] == "fedsikd"]
     if len(spread) > 1:
         print(f"engine agreement (C=8, full): max final-acc spread "
               f"{max(spread) - min(spread):.4f}")

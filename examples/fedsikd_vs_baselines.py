@@ -1,26 +1,47 @@
 """FedSiKD against the paper's baselines (FedAvg, FL+HC, RandomCluster,
 FedProx) at a chosen skew level — the paper's Fig. 3 comparison in miniature.
 
+With ``--engine sharded`` every algorithm except FL+HC runs on the packed
+client mesh (C = devices x pack clients in one jitted program per round,
+fed/algorithms/, DESIGN.md §10) — the comparative sweep itself scales;
+FL+HC transparently falls back to the loop engine (its clustering
+pre-round is host-sequential).
+
   PYTHONPATH=src python examples/fedsikd_vs_baselines.py [alpha]
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python examples/fedsikd_vs_baselines.py \\
+      0.5 --engine sharded --pack 2
 """
-import sys
+import argparse
 import time
 
 from repro.data.synthetic import load_dataset
-from repro.fed.rounds import FedConfig, run_federated
+from repro.fed.rounds import SHARDED_ALGORITHMS, FedConfig, run_federated
 
 
 def main():
-    alpha = float(sys.argv[1]) if len(sys.argv) > 1 else 0.5
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("alpha", nargs="?", type=float, default=0.5)
+    ap.add_argument("--engine", default="loop", choices=["loop", "sharded"])
+    ap.add_argument("--pack", type=int, default=2,
+                    help="client lanes per device (sharded engine)")
+    args = ap.parse_args()
+
     ds = load_dataset("mnist", small=True)
-    print(f"dataset={ds.name} twin, alpha={alpha}, 8 clients, 3 rounds")
+    print(f"dataset={ds.name} twin, alpha={args.alpha}, 8 clients, 3 rounds, "
+          f"engine={args.engine}")
     for alg in ("fedsikd", "random", "flhc", "fedavg", "fedprox"):
+        engine = (args.engine if alg in SHARDED_ALGORITHMS else "loop")
         t0 = time.time()
-        cfg = FedConfig(algorithm=alg, num_clients=8, alpha=alpha, rounds=3,
+        cfg = FedConfig(algorithm=alg, engine=engine,
+                        pack=args.pack if engine == "sharded" else 1,
+                        num_clients=8, alpha=args.alpha, rounds=3,
                         local_epochs=2,
                         num_clusters=None if alg == "fedsikd" else 3)
         h = run_federated(ds, cfg)
-        print(f"  {alg:9s} acc={['%.3f' % a for a in h['acc']]} "
+        print(f"  {alg:9s} [{engine:7s}] "
+              f"acc={['%.3f' % a for a in h['acc']]} "
+              f"loss={h['loss'][-1]:.3f} "
               f"K={h.get('num_clusters', '-')} ({time.time()-t0:.0f}s)")
 
 

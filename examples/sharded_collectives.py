@@ -1,12 +1,15 @@
-"""FedSiKD on a device mesh (DESIGN.md §3, §8): 8 placeholder devices.
-Part 1 shows the raw collective pattern — intra-cluster grouped all-reduce
-+ two-level global mean on plain-CE local steps.  Part 2 runs the FULL
-FedSiKD algorithm (Alg. 1) on the mesh: per-cluster teacher replicas,
-KD-establishment warm-up, fused Pallas distillation steps inside lax.scan,
-grouped student aggregation.  Part 3 breaks the clients==devices coupling:
-24 clients packed 3-per-device with stratified partial participation
-(12 sampled clients per round) through the same jitted program.  This is
-the communication pattern the multi-pod dry-run scales up.
+"""Federated algorithms on a device mesh (DESIGN.md §3, §8, §10): 8
+placeholder devices.  Part 1 shows the raw collective pattern —
+intra-cluster grouped all-reduce + two-level global mean operators.
+Part 2 runs the FULL FedSiKD algorithm (Alg. 1) on the mesh: per-cluster
+teacher replicas, KD-establishment warm-up, fused Pallas distillation
+steps inside lax.scan, grouped student aggregation.  Part 3 breaks the
+clients==devices coupling: 24 clients packed 3-per-device with stratified
+partial participation (12 sampled clients per round) through the same
+jitted program.  Part 4 runs a BASELINE (FedAvg) through the same packed
+runtime — since the algorithm-strategy layer, the paper's comparison
+algorithms share the mesh engine.  This is the communication pattern the
+multi-pod dry-run scales up.
 
   PYTHONPATH=src python examples/sharded_collectives.py
 """
@@ -16,15 +19,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 
+from repro.core import cluster_collectives as cc
 from repro.core import kmeans, stats
 from repro.data.pipeline import make_client_shards
 from repro.data.synthetic import load_dataset
 from repro.fed import sharded as sh
-from repro.fed.client import evaluate, make_steps
-from repro.models.cnn import make_model
-from repro.optim import adamw
+from repro.fed.rounds import FedConfig, run_federated
 
 import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 
 def main():
@@ -41,41 +45,30 @@ def main():
 
     mesh = sh.make_client_mesh(8)
 
-    # ---- part 1: plain-CE grouped-collective round (no distillation)
-    init, fwd = make_model("mnist", student=True)
-    opt = adamw(3e-3)
-    params, losses = sh.run_sharded_fedsikd(
-        mesh, shards, init, fwd, opt, cluster_of,
-        rounds=3, steps_per_round=5, batch_size=32)
-    print("plain-CE round losses:", ["%.3f" % l for l in losses])
-    one = jax.tree_util.tree_map(lambda a: a[0], params)
-    steps = make_steps(fwd, opt)
-    acc, loss = evaluate(steps["eval"], one, ds.x_test, ds.y_test)
-    print(f"plain-CE global model: acc={acc:.3f} loss={loss:.3f}")
+    # ---- part 1: the raw grouped-collective operators (Alg. 1 lines 16-18)
+    groups = cc.cluster_groups(cluster_of)
+    x = jnp.arange(8.0)
+    intra = jax.jit(sh.shard_map(
+        lambda v: cc.intra_cluster_mean(v, sh.AXIS, groups),
+        mesh=mesh, in_specs=P(sh.AXIS), out_specs=P(sh.AXIS)))
+    two_level = jax.jit(sh.shard_map(
+        lambda v: cc.fedsikd_global_mean(v, sh.AXIS, groups),
+        mesh=mesh, in_specs=P(sh.AXIS), out_specs=P(sh.AXIS)))
+    print("per-cluster means:", np.asarray(intra(x)))
+    print("two-level global mean:", np.asarray(two_level(x)))
 
     # ---- part 2: the full Alg. 1 on the mesh (teachers + fused Pallas KD)
-    t_model = make_model("mnist", student=False)
-    s_model = make_model("mnist", student=True)
-    s_steps = make_steps(s_model[1], adamw(3e-3))
-
-    def eval_fn(p):
-        return evaluate(s_steps["eval"], p, ds.x_test, ds.y_test)
-
     print("sharded FedSiKD (teacher replicas + fused KD steps):")
-    _, hist = sh.run_sharded_fedsikd_kd(
-        mesh, shards, cluster_of,
-        t_model=t_model, s_model=s_model,
-        t_opt=adamw(1e-3), s_opt=adamw(3e-3),
-        rounds=3, local_epochs=1, warmup_epochs=2, batch_size=32,
-        kd_temperature=3.0, kd_alpha=0.5, kd_impl="fused",
-        eval_fn=eval_fn, progress=True)
+    hist = run_federated(ds, FedConfig(
+        algorithm="fedsikd", engine="sharded", num_clients=8,
+        alpha=0.3, rounds=3, local_epochs=1, teacher_warmup_epochs=2,
+        batch_size=32, num_clusters=3, kd_temperature=3.0, kd_impl="fused",
+        seed=0), progress=True)
     print("accuracy curve:", ["%.3f" % a for a in hist["acc"]])
 
     # ---- part 3: C >> devices — client packing + partial participation
     # (fed/schedule.py: the scheduler assigns sampled clients to mesh slots
     # and the packed round program is reused across rounds, DESIGN.md §8)
-    from repro.fed.rounds import FedConfig, run_federated
-
     print("packed FedSiKD: 24 clients on 8 devices (pack=3), "
           "12 sampled per round:")
     hist3 = run_federated(ds, FedConfig(
@@ -85,6 +78,16 @@ def main():
         batch_size=32, num_clusters=3, seed=0), progress=True)
     print("accuracy curve:", ["%.3f" % a for a in hist3["acc"]],
           "participants/round:", hist3["participants"])
+
+    # ---- part 4: a baseline on the SAME packed mesh (fed/algorithms/
+    # baselines.py): 24 FedAvg clients, 3 lanes per device, one all-clients
+    # example-weighted grouped mean per round
+    print("packed FedAvg: 24 clients on 8 devices (pack=3):")
+    hist4 = run_federated(ds, FedConfig(
+        algorithm="fedavg", engine="sharded", num_clients=24, pack=3,
+        alpha=0.5, rounds=3, local_epochs=1, batch_size=32, seed=0),
+        progress=True)
+    print("accuracy curve:", ["%.3f" % a for a in hist4["acc"]])
 
 
 if __name__ == "__main__":

@@ -14,7 +14,13 @@ All helpers are meant to be called INSIDE a shard_map'd function where
 ``axis_name`` is bound.  The ``packed_*`` variants additionally handle a
 local ``pack`` lane axis (several clients per device) and take their
 grouped-mean operators as RUNTIME arrays, so per-round participation
-changes never trigger a recompile (DESIGN.md §8).
+changes never trigger a recompile (DESIGN.md §8).  The same contraction
+serves every algorithm family: FedSiKD contracts the plan's two-level
+cluster row (``RoundPlan.agg_row``), the FedAvg/FedProx baselines contract
+a single all-clients example-weighted row (``RoundPlan.example_row``) —
+one group spanning every active slot, no cluster structure.  The static
+(baked-in-groups) helpers below remain the readable reference form of the
+mapping and are exercised directly by tests/examples.
 """
 from __future__ import annotations
 

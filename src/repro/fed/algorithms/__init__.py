@@ -1,0 +1,31 @@
+"""Algorithm-strategy layer (DESIGN.md §10): one strategy class per
+(algorithm family, engine), all driven by ``fed.driver.RoundDriver``.
+
+``make_algorithm(cfg)`` is the one dispatch point — ``FedConfig`` validates
+the engine x algorithm compatibility matrix at construction, so dispatch
+here is total.
+"""
+from __future__ import annotations
+
+from repro.fed.algorithms.base import Algorithm
+from repro.fed.algorithms.baselines import LoopBaseline, PackedBaseline
+from repro.fed.algorithms.clustered_kd import (LoopClusteredKD,
+                                               ShardedClusteredKD,
+                                               cluster_by_stats)
+from repro.fed.algorithms.flhc import FLHC
+
+__all__ = ["Algorithm", "make_algorithm", "cluster_by_stats",
+           "LoopClusteredKD", "ShardedClusteredKD", "LoopBaseline",
+           "PackedBaseline", "FLHC"]
+
+
+def make_algorithm(cfg) -> Algorithm:
+    """Strategy for a validated ``FedConfig`` (see rounds.ALGORITHMS)."""
+    sharded = cfg.engine == "sharded"
+    if cfg.algorithm in ("fedsikd", "random"):
+        return ShardedClusteredKD() if sharded else LoopClusteredKD()
+    if cfg.algorithm in ("fedavg", "fedprox"):
+        return PackedBaseline() if sharded else LoopBaseline()
+    if cfg.algorithm == "flhc":
+        return FLHC()
+    raise ValueError(f"unknown algorithm {cfg.algorithm!r}")

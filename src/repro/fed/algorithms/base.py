@@ -1,0 +1,126 @@
+"""The ``Algorithm`` strategy protocol (DESIGN.md §10).
+
+A federated run is a fixed round skeleton parameterized by an algorithm
+strategy — the framing the KD-in-FL surveys use for FL systems, and the
+seam that lets every algorithm (FedSiKD, RandomCluster, FedAvg, FedProx,
+FL+HC) share ONE driver (`fed/driver.py::RoundDriver`) owning participation
+plans, dropout, eval/record, history, and checkpoint/resume.
+
+Lifecycle (driven by ``RoundDriver.run``):
+
+1. ``setup(ds, shards, cfg, key)`` — everything before round 1 that is a
+   pure function of ``(dataset, config, seed)``: clustering, model/step
+   construction, the ``RoundScheduler``, staged data.  Must populate
+   ``scheduler`` (the participation policy the driver plans with),
+   ``labels`` (cluster assignment for the run fingerprint, or None) and
+   ``history_extras()``'s inputs.  Runs on resume too — it must be
+   deterministic, so recomputed clustering catches silent data/config
+   drift between save and resume.
+2. ``warmup()`` — pre-round establishment work whose RESULT is part of the
+   checkpointed state (FedSiKD's teacher warm-up).  Skipped on resume: a
+   checkpoint already banks it.
+3. ``run_round(plan, rnd)`` — one round of local updates + aggregation for
+   the plan's participants; returns a dict of per-round metrics the driver
+   appends into the history (e.g. ``teacher_loss``).  Must tolerate an
+   all-idle plan (every invitee dropped out) as a no-op.
+4. ``eval()`` — (accuracy, loss) of the algorithm's CURRENT global model on
+   the test set; the driver records it after every round, identically for
+   every algorithm (acc AND loss — no more per-algorithm reporting drift).
+5. ``checkpoint_arrays()`` / ``restore_arrays(arrays)`` — the array pytree
+   that crosses the round boundary (exactly what ``fedstate.FedState``
+   persists) and its inverse.  The driver owns WHEN to save/restore; the
+   algorithm only owns WHAT.
+
+``setup_rounds`` (default 0) is the number of rounds consumed by ``setup``
+itself: FL+HC's clustering pre-round IS its round 1, so the driver records
+an eval for it and starts the plan loop at round 2.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ClientShard
+from repro.fed.schedule import RoundPlan, RoundScheduler
+
+
+class Algorithm:
+    """Base strategy: one subclass per (algorithm family, engine)."""
+
+    name: str = "?"
+    engine: str = "loop"
+    setup_rounds: int = 0
+    # populated by setup():
+    scheduler: RoundScheduler
+    labels: Optional[np.ndarray] = None
+    # set by the driver before setup():
+    progress: bool = False
+
+    def setup(self, ds, shards: list[ClientShard], cfg, key) -> None:
+        raise NotImplementedError
+
+    def warmup(self) -> None:
+        """Pre-round establishment (checkpointed state; skipped on resume)."""
+
+    def run_round(self, plan: RoundPlan, rnd: int) -> dict:
+        raise NotImplementedError
+
+    def eval(self) -> tuple[float, float]:
+        raise NotImplementedError
+
+    def checkpoint_arrays(self) -> dict:
+        raise NotImplementedError
+
+    def restore_arrays(self, arrays: dict) -> None:
+        raise NotImplementedError
+
+    def history_extras(self) -> dict:
+        """Algorithm-specific history fields (scalars, or [] lists that
+        ``run_round`` metrics append into)."""
+        return {}
+
+
+# ------------------------------------------------ shared loop-engine helpers
+def local_epochs(shard: ClientShard, params, opt_state, key, cfg,
+                 *, step_fn, extra=()):
+    """``cfg.local_epochs`` of sequential local steps on one client's shard
+    (the loop engines' unit of client work)."""
+    for epoch in range(cfg.local_epochs):
+        for x, y in shard.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
+            key, sub = jax.random.split(key)
+            params, opt_state, _ = step_fn(params, opt_state,
+                                           {"x": x, "y": y}, sub, *extra)
+    return params, opt_state
+
+
+def cluster_epochs(members: list[ClientShard], params, opt_state, key, cfg,
+                   *, step_fn, epochs: int):
+    """Teacher pass over the union of cluster members' shards (Alg.1 l.12).
+
+    The cluster data is POOLED and shuffled globally — visiting member shards
+    sequentially causes catastrophic interference under label skew (each
+    shard's classes overwrite the previous one's; measured in EXPERIMENTS.md
+    calibration: loss diverges 2.5 -> 2.9).  A single-member "union"
+    (teacher_data="leader") is the member itself — keeping its client_id
+    keeps the batch shuffle identical to the sharded engine's teacher feed,
+    which is what makes loop/sharded parity tight."""
+    if len(members) == 1:
+        pooled = members[0]
+    else:
+        pooled = ClientShard(
+            client_id=-1,
+            x=np.concatenate([sh.x for sh in members]),
+            y=np.concatenate([sh.y for sh in members]))
+    for epoch in range(epochs):
+        for x, y in pooled.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
+            key, sub = jax.random.split(key)
+            params, opt_state, _ = step_fn(params, opt_state,
+                                           {"x": x, "y": y}, sub)
+    return params, opt_state
+
+
+def tree_copy(tree):
+    return jax.tree_util.tree_map(jnp.copy, tree)

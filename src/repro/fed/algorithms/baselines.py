@@ -1,0 +1,169 @@
+"""FedAvg / FedProx baseline strategies — loop reference AND packed mesh.
+
+The paper's headline claims are comparative (FedSiKD vs FedAvg/FedProx at
+alpha in {0.1, 0.5}), so the baselines deserve the same scalable runtime as
+FedSiKD: ``PackedBaseline`` runs C = devices x pack clients in ONE jitted
+collective program per round (`fed/sharded.py::make_packed_baseline_round`),
+with the prox term computed against the broadcast global params and masked
+per slot, and aggregation as a single all-clients grouped contraction
+(``cluster_collectives.packed_weighted_mean`` with the plan's
+example-weighted row ``RoundPlan.example_row``) — no cluster structure,
+one group spanning every active slot.
+
+Parity with the loop engine is by construction (DESIGN.md §2): the packed
+engine stages the SAME per-client batch sequences, freezes each client's
+carry after the same per-client step budget, starts every round from the
+same broadcast global params with a fresh Adam state, and aggregates with
+the same example weights (tests/test_baseline_parity.py: <= 1pt on full,
+sampled, and dropout rounds).
+
+Checkpoint payload (both engines): ``{"student": global_params}`` — local
+opt state is per-round-fresh, so it is correctly absent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.fed import schedule
+from repro.fed.algorithms.base import Algorithm, local_epochs, tree_copy
+from repro.fed.client import evaluate, make_steps
+from repro.models.cnn import make_model
+from repro.optim import adamw
+
+
+class _BaselineBase(Algorithm):
+    """Shared setup: single pseudo-cluster scheduler (uniform == stratified;
+    the plan is just "which clients train this round"), the paper's teacher
+    CNN as the federated model, example-weighted FedAvg aggregation."""
+
+    def setup(self, ds, shards, cfg, key):
+        self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
+        self.name = cfg.algorithm
+        self.is_prox = cfg.algorithm == "fedprox"
+        self.scheduler = self._make_scheduler(cfg)
+        self.opt = adamw(cfg.lr)
+        t_init, t_fwd = make_model(ds.name, student=False)
+        self.t_fwd = t_fwd
+        self.steps = make_steps(t_fwd, self.opt, prox_mu=cfg.prox_mu)
+        self.global_params = t_init(key)
+        self.sizes = np.asarray([sh.num_examples for sh in shards])
+        self._setup_engine()
+
+    def _make_scheduler(self, cfg):
+        return schedule.RoundScheduler(
+            np.zeros(cfg.num_clients, np.int32),
+            participation=cfg.participation,
+            clients_per_round=cfg.clients_per_round,
+            dropout_rate=cfg.dropout_rate, seed=cfg.seed)
+
+    def _setup_engine(self):
+        pass
+
+    def eval(self):
+        return evaluate(self.steps["eval"], self.global_params,
+                        self.ds.x_test, self.ds.y_test)
+
+    def checkpoint_arrays(self):
+        return {"student": self.global_params}
+
+    def restore_arrays(self, arrays):
+        self.global_params = arrays["student"]
+
+
+# ---------------------------------------------------------------- loop engine
+class LoopBaseline(_BaselineBase):
+    """Sequential reference: per-client CE (FedAvg) or proximal-CE (FedProx)
+    local epochs, example-weighted global mean."""
+
+    engine = "loop"
+
+    def run_round(self, plan, rnd):
+        cfg, key = self.cfg, self.key
+        locals_, sizes = [], []
+        for i in (int(i) for i in plan.participants):
+            sh = self.shards[i]
+            p = tree_copy(self.global_params)
+            o = self.opt.init(p)
+            if self.is_prox:
+                p, _ = local_epochs(sh, p, o,
+                                    jax.random.fold_in(key, rnd * 31 + i),
+                                    cfg, step_fn=self.steps["prox"],
+                                    extra=(self.global_params,))
+            else:
+                p, _ = local_epochs(sh, p, o,
+                                    jax.random.fold_in(key, rnd * 31 + i),
+                                    cfg, step_fn=self.steps["ce"])
+            locals_.append(p)
+            sizes.append(sh.num_examples)
+        if locals_:
+            self.global_params = agg.fedavg(locals_, sizes)
+        # else: an all-dropout round is a no-op (params unchanged)
+        return {}
+
+
+# ------------------------------------------------------------- packed engine
+class PackedBaseline(_BaselineBase):
+    """FedAvg/FedProx on the packed client mesh: every participating client
+    runs its masked-scan local steps in one jitted program, then one
+    all-clients example-weighted grouped mean broadcasts the new global
+    model to every slot.  The global params enter the program replicated
+    (P() spec) so FedProx's proximal term reads the ROUND-START anchor on
+    every slot, exactly like the loop engine's ``extra=(global_params,)``."""
+
+    engine = "sharded"
+
+    def _make_scheduler(self, cfg):
+        return schedule.RoundScheduler(
+            np.zeros(cfg.num_clients, np.int32),
+            participation=cfg.participation,
+            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
+            dropout_rate=cfg.dropout_rate, seed=cfg.seed)
+
+    def _setup_engine(self):
+        from repro.fed import sharded as sh
+        from repro.launch.mesh import make_fed_client_mesh
+        cfg = self.cfg
+        self.sh = sh
+        self.mesh = make_fed_client_mesh(self.scheduler.max_participants,
+                                         pack=cfg.pack,
+                                         n_devices=self.scheduler.n_devices)
+        self.S = self.scheduler.n_slots
+        # static per-client step budgets + one-off (C, steps, B, ...) staging
+        # (identical batch sequences to the loop engine's ClientShard.batches)
+        self.steps_all = sh.client_step_counts(self.shards, cfg.batch_size,
+                                               cfg.local_epochs)
+        self.x_all, self.y_all = sh.stack_client_data(
+            self.shards, int(self.steps_all.max()), cfg.batch_size,
+            seed=cfg.seed)
+        self.round_fn = sh.make_packed_baseline_round(
+            self.mesh, cfg.pack, self.t_fwd, self.opt,
+            prox_mu=cfg.prox_mu if self.is_prox else 0.0)
+        self.stager = sh.SlotStager(self.mesh, self.x_all, self.y_all)
+
+    def _slot_keys(self, rnd, plan):
+        """Per-slot training keys (sh.slot_client_keys, stable under slot
+        re-assignment; the disjoint 40_000 salt keeps the stream away from
+        the clustered-KD engines')."""
+        return self.sh.slot_client_keys(
+            jax.random.fold_in(self.key, 40_000 + rnd), plan)
+
+    def run_round(self, plan, rnd):
+        sh = self.sh
+        if not plan.active.any():
+            return {"train_loss": 0.0}      # all invitees dropped out: no-op
+        p_s = sh.replicate_params(self.global_params, self.S)
+        s_s = jax.vmap(self.opt.init)(p_s)  # fresh local opt (loop too)
+        xs, ys = self.stager.stage(plan)
+        p_s, _s_s, loss = self.round_fn(
+            p_s, s_s, xs, ys, jnp.asarray(plan.steps_for(self.steps_all)),
+            self._slot_keys(rnd, plan),
+            jnp.asarray(plan.example_row(self.sizes)), self.global_params)
+        # every slot holds the aggregated model after the weighted mean
+        self.global_params = jax.tree_util.tree_map(lambda a: a[0], p_s)
+        return {"train_loss": float(loss)}
+
+    def history_extras(self):
+        return {"pack": self.scheduler.pack, "train_loss": []}

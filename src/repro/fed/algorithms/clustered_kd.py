@@ -1,0 +1,353 @@
+"""Clustered-KD strategies: FedSiKD (Alg. 1) and RandomCluster, on both
+engines.
+
+``LoopClusteredKD`` is the sequential per-client reference (the semantic
+ground truth); ``ShardedClusteredKD`` maps the same phases onto the packed
+client mesh (`fed/sharded.py`, DESIGN.md §3/§8): per-cluster teacher
+replicas, packed teacher sync, fused Pallas KD student steps inside
+``lax.scan``, grouped plan-weighted aggregation.  Both consume the same
+deterministic ``RoundPlan``s, so loop/sharded parity extends to sampled
+rounds and dropout (tests/test_schedule.py, tests/test_sharded_kd.py).
+
+Checkpoint payload (both engines, same keys): the global student, the
+per-cluster teachers WITH their optimizer states — the loop engine as
+lists, the sharded engine as ``(K, ...)`` stacked host pytrees (packed slot
+state is derived, never persisted: the next round's gather re-scatters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import kmeans, stats
+from repro.fed import schedule
+from repro.fed.algorithms.base import (Algorithm, cluster_epochs,
+                                       local_epochs, tree_copy)
+from repro.fed.client import evaluate, make_steps
+from repro.models.cnn import make_model
+from repro.optim import adamw
+
+
+def cluster_by_stats(shards, cfg) -> np.ndarray:
+    """Alg. 1 phases 1-2: client statistics sharing (+ optional DP noise)
+    -> k-means cluster formation with metric-voted K."""
+    key = jax.random.PRNGKey(cfg.seed + 17)
+    all_stats = []
+    for i, sh in enumerate(shards):
+        s = stats.compute_stats(sh.x.reshape(sh.num_examples, -1))
+        if cfg.dp_noise > 0:
+            s = stats.privatize(s, noise_multiplier=cfg.dp_noise,
+                                key=jax.random.fold_in(key, i))
+        all_stats.append(s)
+    feats = stats.standardize(stats.stack_stats(all_stats))
+    if cfg.num_clusters is None:
+        k, _ = kmeans.select_k(key, feats, *cfg.k_range)
+    else:
+        k = cfg.num_clusters
+    res = kmeans.kmeans(key, feats, k)
+    return np.asarray(res.assignments)
+
+
+def _assign_clusters(shards, cfg) -> np.ndarray:
+    if cfg.algorithm == "fedsikd":
+        return cluster_by_stats(shards, cfg)
+    rng = np.random.default_rng(cfg.seed + 3)          # random baseline
+    k = cfg.num_clusters or 4
+    return rng.integers(0, k, cfg.num_clients)
+
+
+class _ClusteredKDBase(Algorithm):
+    """Shared setup: clustering, leaders, scheduler, models/optimizers."""
+
+    def setup(self, ds, shards, cfg, key):
+        self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
+        self.name = cfg.algorithm
+        labels = _assign_clusters(shards, cfg)
+        self.labels = labels
+        self.clusters = [np.flatnonzero(labels == c)
+                         for c in np.unique(labels)]
+        # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
+        self.leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
+                        for c in self.clusters]
+        self.scheduler = schedule.RoundScheduler(
+            labels, participation=cfg.participation,
+            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
+            weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
+            seed=cfg.seed)
+        self.opt = adamw(cfg.lr)
+        self.s_opt = adamw(cfg.student_lr)
+        self.t_model = make_model(ds.name, student=False)
+        self.s_model = make_model(ds.name, student=True)
+        self._setup_engine()
+
+    def _setup_engine(self):
+        raise NotImplementedError
+
+    def history_extras(self):
+        return {"num_clusters": len(self.clusters)}
+
+
+# ---------------------------------------------------------------- loop engine
+class LoopClusteredKD(_ClusteredKDBase):
+    """Sequential reference: Alg. 1 phases 3-4 as a per-client Python loop."""
+
+    engine = "loop"
+
+    def _setup_engine(self):
+        cfg, key = self.cfg, self.key
+        t_init, t_fwd = self.t_model
+        s_init, _s_fwd = self.s_model
+        self.teacher_steps = make_steps(t_fwd, self.opt, prox_mu=cfg.prox_mu)
+        self.student_steps = make_steps(
+            self.s_model[1], self.s_opt, kd_temperature=cfg.kd_temperature,
+            kd_alpha=cfg.kd_alpha)
+        self.distill_step = self.student_steps["make_distill"](t_fwd)
+        self.global_student = s_init(key)
+        self.teachers = [t_init(jax.random.fold_in(key, 100 + k))
+                         for k in range(len(self.clusters))]
+        self.t_opts = [self.opt.init(t) for t in self.teachers]
+
+    def _teacher_shards(self, ci, members=None):
+        # "cluster" mode pools the round's SAMPLED members only (None =
+        # all, for warm-up): the packed engine trains teacher replicas
+        # on participating slots' shards, and non-participants' raw data
+        # must not reach the teacher in a round they sat out
+        if self.cfg.teacher_data == "cluster":
+            sel = self.clusters[ci] if members is None else members
+            return [self.shards[i] for i in sel]
+        return [self.shards[self.leaders[ci]]]
+
+    def warmup(self):
+        cfg, key = self.cfg, self.key
+        if not cfg.teacher_warmup_epochs:
+            return
+        # KD establishment phase (pre-round teacher warm-up, Alg. 1)
+        for ci in range(len(self.clusters)):
+            self.teachers[ci], self.t_opts[ci] = cluster_epochs(
+                self._teacher_shards(ci), self.teachers[ci], self.t_opts[ci],
+                jax.random.fold_in(key, 9000 + ci), cfg,
+                step_fn=self.teacher_steps["ce"],
+                epochs=cfg.teacher_warmup_epochs)
+
+    def run_round(self, plan, rnd):
+        cfg, key = self.cfg, self.key
+        part = set(int(i) for i in plan.participants)
+        weight_of = plan.weight_of()
+        new_params, weights = [], []
+        for ci, members in enumerate(self.clusters):
+            sel = [i for i in members if int(i) in part]
+            if not sel:
+                continue           # no sampled member: teacher untouched
+            # Alg.1 line 12: teacher trains on (sampled) cluster data
+            self.teachers[ci], self.t_opts[ci] = cluster_epochs(
+                self._teacher_shards(ci, sel), self.teachers[ci],
+                self.t_opts[ci], jax.random.fold_in(key, rnd * 1000 + ci),
+                cfg, step_fn=self.teacher_steps["ce"], epochs=cfg.local_epochs)
+            for i in sel:
+                sp = tree_copy(self.global_student)
+                so = self.s_opt.init(sp)
+                sp, _ = local_epochs(
+                    self.shards[i], sp, so,
+                    jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
+                    step_fn=self.distill_step, extra=(self.teachers[ci],))
+                new_params.append(sp)
+                weights.append(weight_of[int(i)])
+        # the plan's weights ARE the two-level FedSiKD mean, extended
+        # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
+        if new_params:
+            self.global_student = agg.weighted_average(new_params, weights)
+        # else: every invited client dropped out — a no-op round
+        return {}
+
+    def eval(self):
+        return evaluate(self.student_steps["eval"], self.global_student,
+                        self.ds.x_test, self.ds.y_test)
+
+    def checkpoint_arrays(self):
+        return {"student": self.global_student, "teachers": self.teachers,
+                "t_opts": self.t_opts}
+
+    def restore_arrays(self, arrays):
+        self.global_student = arrays["student"]
+        self.teachers = arrays["teachers"]
+        self.t_opts = arrays["t_opts"]
+
+
+# ------------------------------------------------------------- sharded engine
+class ShardedClusteredKD(_ClusteredKDBase):
+    """Alg. 1 on the packed client mesh (C = devices x pack clients in one
+    jitted program per round; fed/sharded.py owns the collective programs).
+
+    Canonical state lives per CLUSTER between rounds (teachers: a (K, ...)
+    stacked pytree; student: one global pytree): each round the strategy
+    gathers it onto the plan's slots, runs the collective program, and
+    scatters the refreshed teachers back from each cluster's first active
+    slot.  Clusters with no sampled member keep their teacher untouched —
+    exactly like the loop engine skipping them (DESIGN.md §8)."""
+
+    engine = "sharded"
+
+    def _setup_engine(self):
+        from repro.fed import sharded as sh
+        from repro.launch.mesh import make_fed_client_mesh
+        cfg, key, shards = self.cfg, self.key, self.shards
+        self.sh = sh
+        scheduler = self.scheduler
+        self.mesh = make_fed_client_mesh(scheduler.max_participants,
+                                         pack=cfg.pack,
+                                         n_devices=scheduler.n_devices)
+        self.S = scheduler.n_slots
+        self.K = len(self.clusters)
+        cluster_idx = scheduler.cluster_idx        # (C,) cluster index/client
+        # per-client teacher feed (DESIGN.md §7): "leader" streams the
+        # cluster leader's shard to every slot (identical batches ->
+        # replicas stay in sync between collectives); "cluster" streams each
+        # client's OWN shard, which teacher_sync turns into data-parallel
+        # training over the union
+        if cfg.teacher_data == "leader":
+            t_src = [shards[self.leaders[cluster_idx[i]]]
+                     for i in range(len(shards))]
+        else:
+            t_src = list(shards)
+        self.t_src = t_src
+
+        t_init, t_fwd = self.t_model
+        s_init, s_fwd = self.s_model
+        # canonical per-cluster teacher state: (K, ...) stacked pytrees
+        single_teachers = [t_init(jax.random.fold_in(key, 100 + k))
+                           for k in range(self.K)]
+        self.tp_k = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
+                                           *single_teachers)
+        self.ts_k = jax.vmap(self.opt.init)(self.tp_k)
+        self.sp_global = s_init(key)
+        self.student_steps = make_steps(
+            s_fwd, self.s_opt, kd_temperature=cfg.kd_temperature,
+            kd_alpha=cfg.kd_alpha)
+
+        # static per-client step budgets (mirror the loop engine's batch
+        # counts) and the one-off (C, steps, B, ...) staging of batches
+        self.t_steps_all = sh.client_step_counts(t_src, cfg.batch_size,
+                                                 cfg.local_epochs)
+        self.s_steps_all = sh.client_step_counts(shards, cfg.batch_size,
+                                                 cfg.local_epochs)
+        self.tx_all, self.ty_all = sh.stack_client_data(
+            t_src, int(self.t_steps_all.max()), cfg.batch_size, seed=cfg.seed)
+        self.sx_all, self.sy_all = sh.stack_client_data(
+            shards, int(self.s_steps_all.max()), cfg.batch_size, seed=cfg.seed)
+
+        self.round_fn = sh.make_packed_kd_round(
+            self.mesh, cfg.pack, t_fwd, s_fwd, self.opt, self.s_opt,
+            kd_temperature=cfg.kd_temperature, kd_alpha=cfg.kd_alpha,
+            kd_impl=cfg.kd_impl)
+        self.stager = sh.SlotStager(self.mesh, self.tx_all, self.ty_all,
+                                    self.sx_all, self.sy_all)
+
+    # ------------------------------------------------- slot gather/scatter
+    def _slot_state(self, plan):
+        """Gather canonical per-cluster teacher state onto the plan's slots
+        (idle slots carry cluster 0's state; they never train)."""
+        kidx = np.where(plan.active, plan.slot_cluster, 0)
+        tp = jax.tree_util.tree_map(lambda a: a[kidx], self.tp_k)
+        ts = jax.tree_util.tree_map(lambda a: a[kidx], self.ts_k)
+        return tp, ts
+
+    def _scatter_teachers(self, plan, tp_s, ts_s):
+        """Write each refreshed cluster teacher back from its first active
+        slot; untouched clusters keep their previous state."""
+        K, S = self.K, self.S
+        src = np.full(K, -1, np.int64)
+        for s in range(S - 1, -1, -1):
+            if plan.slot_client[s] >= 0:
+                src[plan.slot_cluster[s]] = s
+        refreshed = src >= 0
+        safe = np.where(refreshed, src, 0)
+
+        def upd(new, old):
+            mask = jnp.asarray(refreshed).reshape((K,) + (1,) * (old.ndim - 1))
+            return jnp.where(mask, new[safe], old)
+
+        self.tp_k = jax.tree_util.tree_map(upd, tp_s, self.tp_k)
+        self.ts_k = jax.tree_util.tree_map(upd, ts_s, self.ts_k)
+
+    def _student_keys(self, salt, plan):
+        """Per-slot training keys, folded by client id (sh.slot_client_keys:
+        stable under slot re-assignment across rounds)."""
+        return self.sh.slot_client_keys(jax.random.fold_in(self.key, salt),
+                                        plan)
+
+    def _teacher_keys(self, salt, plan):
+        """Teacher-step keys.  Leader mode: slots of a cluster share one key
+        (sh.slot_cluster_keys — replicas stepping on identical leader
+        batches stay bitwise in sync between sync collectives).  Cluster
+        mode: per-client keys, offset 10_000 to stay disjoint from the
+        student stream (each slot steps on its own client's shard anyway)."""
+        base = jax.random.fold_in(self.key, salt)
+        if self.cfg.teacher_data == "leader":
+            return self.sh.slot_cluster_keys(base, plan)
+        return self.sh.slot_client_keys(base, plan, offset=10_000)
+
+    # ------------------------------------------------------------- lifecycle
+    def warmup(self):
+        """Alg. 1 KD-establishment: teacher warm-up before round 1 as a
+        separate jitted collective program (a checkpoint's teacher state
+        already includes it, so the driver skips this on resume)."""
+        cfg, sh = self.cfg, self.sh
+        if cfg.teacher_warmup_epochs <= 0:
+            return
+        w_steps_all = ((self.t_steps_all // max(cfg.local_epochs, 1))
+                       * cfg.teacher_warmup_epochs).astype(np.int32)
+        wx_all, wy_all = sh.stack_client_data(
+            self.t_src, int(w_steps_all.max()), cfg.batch_size, seed=cfg.seed)
+        planw = self.scheduler.warmup_plan()
+        warm = sh.make_packed_teacher_phase(self.mesh, cfg.pack,
+                                            self.t_model[1], self.opt)
+        tp_s, ts_s = self._slot_state(planw)
+        wx, wy = sh.stage_on_slots(self.mesh, planw, wx_all, wy_all)
+        tp_s, ts_s, wloss = warm(
+            tp_s, ts_s, wx, wy, jnp.asarray(planw.steps_for(w_steps_all)),
+            self._teacher_keys(9001, planw), jnp.asarray(planw.sync_matrix()))
+        self._scatter_teachers(planw, tp_s, ts_s)
+        if self.progress:
+            print(f"  warmup  teacher_loss={float(wloss):.4f}")
+
+    def run_round(self, plan, rnd):
+        cfg, sh, S = self.cfg, self.sh, self.S
+        if not plan.active.any():
+            # every invited client dropped out: a no-op round — canonical
+            # state untouched, metrics still recorded (loop engine ditto)
+            return {"teacher_loss": 0.0, "student_loss": 0.0}
+        tp_s, ts_s = self._slot_state(plan)
+        sp_s = sh.replicate_params(self.sp_global, S)
+        ss_s = jax.vmap(self.s_opt.init)(sp_s)   # fresh student opt (loop too)
+        tx, ty, sx, sy = self.stager.stage(plan)
+        # disjoint even/odd salts keep teacher and student PRNG streams
+        # from colliding on clients whose id equals their cluster index
+        tp_s, ts_s, sp_s, _ss_s, t_loss, s_loss = self.round_fn(
+            tp_s, ts_s, sp_s, ss_s, tx, ty,
+            jnp.asarray(plan.steps_for(self.t_steps_all)), sx, sy,
+            jnp.asarray(plan.steps_for(self.s_steps_all)),
+            self._teacher_keys(2 * rnd, plan), self._student_keys(2 * rnd + 1, plan),
+            jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
+        self._scatter_teachers(plan, tp_s, ts_s)
+        # every slot holds the aggregated student after the weighted mean
+        self.sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+        return {"teacher_loss": float(t_loss), "student_loss": float(s_loss)}
+
+    def eval(self):
+        return evaluate(self.student_steps["eval"], self.sp_global,
+                        self.ds.x_test, self.ds.y_test)
+
+    def checkpoint_arrays(self):
+        return {"student": self.sp_global, "teachers": self.tp_k,
+                "t_opts": self.ts_k}
+
+    def restore_arrays(self, arrays):
+        self.sp_global = arrays["student"]
+        self.tp_k = arrays["teachers"]
+        self.ts_k = arrays["t_opts"]
+
+    def history_extras(self):
+        return {"num_clusters": self.K, "pack": self.scheduler.pack,
+                "teacher_loss": [], "student_loss": []}

@@ -1,0 +1,129 @@
+"""RoundDriver: the ONE federated round skeleton (DESIGN.md §10).
+
+Every algorithm runs through this driver, which owns exactly the things
+that used to be triplicated across the clustered-KD, fedavg/fedprox, and
+sharded paths of the old ``rounds.py`` monolith:
+
+- the per-round ``RoundPlan`` (participation sampling + client dropout) —
+  pulled from the strategy's ``RoundScheduler``;
+- eval/record: after every round, acc AND loss on the test set, printed
+  identically for every algorithm under ``progress=True``;
+- the running history (one schema for all algorithms/engines, plus the
+  strategy's ``history_extras`` and per-round ``run_round`` metrics);
+- checkpoint/save/resume (`fed/fedstate.py`, DESIGN.md §9): the SINGLE
+  copy of the save-cadence, restore, fingerprint-validation and
+  skip-warmup-on-resume logic.  Resumed runs are bit-identical to
+  uninterrupted ones for every checkpointable algorithm
+  (tests/test_fault_tolerance.py covers a clustered-KD run on both
+  engines, a baseline, and FL+HC).
+
+The driver is engine-agnostic: strategies hide whether a round is a Python
+loop over clients or one jitted collective program on the packed mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.data.pipeline import make_client_shards
+from repro.fed import fedstate
+
+
+def fingerprint(cfg, labels=None) -> dict:
+    """Run identity stored with every checkpoint and re-validated on resume
+    (fedstate.restore_run): every config field whose change would make the
+    resumed tail a DIFFERENT run — sampling identity, data/model identity,
+    and training hyperparameters.  Deliberately absent: ``rounds`` (resuming
+    with a higher target is the point) and ``ckpt_every``/``ckpt_keep``
+    (cadence is not identity).  ``labels`` (the cluster assignment) is
+    recomputed deterministically at startup, so comparing it also catches
+    silent data/config drift between save and resume."""
+    fp = {"algorithm": cfg.algorithm, "engine": cfg.engine,
+          "seed": cfg.seed, "num_clients": cfg.num_clients,
+          "alpha": cfg.alpha, "num_clusters": cfg.num_clusters,
+          "participation": cfg.participation,
+          "clients_per_round": cfg.clients_per_round,
+          "dropout_rate": cfg.dropout_rate,
+          "local_epochs": cfg.local_epochs, "batch_size": cfg.batch_size,
+          "lr": cfg.lr, "student_lr": cfg.student_lr,
+          "kd_temperature": cfg.kd_temperature, "kd_alpha": cfg.kd_alpha,
+          "kd_impl": cfg.kd_impl, "prox_mu": cfg.prox_mu,
+          "teacher_warmup_epochs": cfg.teacher_warmup_epochs,
+          "teacher_data": cfg.teacher_data,
+          "cluster_weighting": cfg.cluster_weighting,
+          "dp_noise": cfg.dp_noise}
+    if labels is not None:
+        fp["labels"] = [int(l) for l in labels]
+    return fp
+
+
+class RoundDriver:
+    """Runs ``cfg.rounds`` federated rounds of one Algorithm strategy."""
+
+    def __init__(self, ds, cfg, algorithm, *, progress: bool = False):
+        self.ds, self.cfg, self.alg = ds, cfg, algorithm
+        self.progress = progress
+
+    def run(self) -> dict:
+        ds, cfg, alg = self.ds, self.cfg, self.alg
+        alg.progress = self.progress
+        shards = make_client_shards(ds, cfg.num_clients, cfg.alpha,
+                                    seed=cfg.seed)
+        alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))
+        fp = fingerprint(cfg, labels=alg.labels)
+
+        history = {"acc": [], "loss": [], "round": [], "participants": [],
+                   "algorithm": cfg.algorithm, "engine": cfg.engine,
+                   "participation": cfg.participation,
+                   "dropout_rate": cfg.dropout_rate}
+        history.update(alg.history_extras())
+
+        # ---- resume-or-warmup: a checkpoint's state already includes the
+        # establishment work (warm-up / pre-round), so a resumed run skips it
+        start_round = 0
+        resumed = False
+        if (cfg.resume and cfg.ckpt_dir
+                and fedstate.latest_round(cfg.ckpt_dir) is not None):
+            st = fedstate.restore_run(cfg.ckpt_dir, alg.checkpoint_arrays(),
+                                      expect_meta=fp)
+            alg.restore_arrays(st.arrays)
+            history.update(st.history)
+            start_round = st.round_index
+            resumed = True
+            if self.progress:
+                print(f"  resumed from round {start_round} ({cfg.ckpt_dir})")
+        if not resumed:
+            alg.warmup()
+            # rounds consumed by setup itself (FL+HC's clustering pre-round
+            # trains every client and IS the run's round 1)
+            for rnd in range(1, min(alg.setup_rounds, cfg.rounds) + 1):
+                history["participants"].append(cfg.num_clients)
+                self._record(history, rnd)
+                self._save(history, fp, rnd)
+            start_round = min(alg.setup_rounds, cfg.rounds)
+
+        for rnd in range(start_round + 1, cfg.rounds + 1):
+            plan = alg.scheduler.plan(rnd)
+            metrics = alg.run_round(plan, rnd)
+            for k, v in metrics.items():
+                history.setdefault(k, []).append(v)
+            history["participants"].append(int(plan.active.sum()))
+            self._record(history, rnd)
+            self._save(history, fp, rnd)
+        return history
+
+    # ------------------------------------------------------------ internals
+    def _record(self, history, rnd):
+        acc, loss = self.alg.eval()
+        history["acc"].append(acc)
+        history["loss"].append(loss)
+        history["round"].append(rnd)
+        if self.progress:
+            print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}  "
+                  f"clients={history['participants'][-1]}")
+
+    def _save(self, history, fp, rnd):
+        cfg = self.cfg
+        if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0 or rnd == cfg.rounds):
+            fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
+                round_index=rnd, arrays=self.alg.checkpoint_arrays(),
+                history=history, meta=fp), keep_last=cfg.ckpt_keep)

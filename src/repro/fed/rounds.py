@@ -1,8 +1,14 @@
-"""Federated round engines: FedSiKD (Alg. 1) and the paper's baselines
-(FedAvg, FL+HC, RandomCluster) plus FedProx.
+"""Federated entry point: ``FedConfig`` (all knob validation) +
+``run_federated`` (one call = one ``RoundDriver`` run).
 
-The engine is model-agnostic: it takes the paper's CNNs by default but any
-(init_fn, fwd_fn) pair works.  FedSiKD's phases follow Alg. 1 exactly:
+The round implementations live in the algorithm-strategy layer
+(`fed/algorithms/`, DESIGN.md §10): one strategy class per (algorithm
+family, engine) — FedSiKD/RandomCluster clustered KD (loop + packed mesh),
+FedAvg/FedProx baselines (loop + packed mesh), FL+HC (loop) — all driven
+by the single round skeleton in `fed/driver.py` (participation plans,
+dropout, eval/record, history, checkpoint/resume).
+
+FedSiKD's phases follow Alg. 1 exactly:
   1. ClientStatisticsSharing  -> core.stats
   2. ClusterFormation         -> core.kmeans (+ metric-voted K)
   3. KnowledgeDistillation    -> per-cluster teacher/student rounds
@@ -11,30 +17,31 @@ The engine is model-agnostic: it takes the paper's CNNs by default but any
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import aggregation as agg
-from repro.core import hierarchical, kmeans, stats
-from repro.fed import fedstate, schedule
-from repro.data.pipeline import ClientShard, make_client_shards
 from repro.data.synthetic import Dataset
-from repro.fed.client import evaluate, make_steps
-from repro.models.cnn import make_model
-from repro.optim import adamw
+from repro.fed import schedule
+
+ALGORITHMS = ("fedsikd", "random", "fedavg", "fedprox", "flhc")
+ENGINES = ("loop", "sharded")
+KD_IMPLS = ("fused", "reference")
+TEACHER_DATA_MODES = ("leader", "cluster")
+# engine x algorithm compatibility matrix: every algorithm runs on the
+# sequential loop engine; the packed mesh engine runs everything except
+# FL+HC, whose agglomerative-clustering pre-round is host-sequential by
+# construction (its post-clustering rounds still get the shared driver).
+SHARDED_ALGORITHMS = ("fedsikd", "random", "fedavg", "fedprox")
 
 
 @dataclasses.dataclass
 class FedConfig:
     algorithm: str = "fedsikd"        # fedsikd | fedavg | flhc | random | fedprox
-    # Round engine for the clustered-KD algorithms (fedsikd | random):
+    # Round engine (every algorithm has a strategy per engine, DESIGN.md §10):
     #   loop    — sequential per-client Python loop (reference implementation)
-    #   sharded — one device per client on a mesh; teachers replicated per
-    #             cluster member, fused Pallas KD steps inside lax.scan,
-    #             grouped all-reduce aggregation (fed/sharded.py, DESIGN.md §3)
+    #   sharded — packed client mesh: C = devices x pack clients in one
+    #             jitted collective program per round (fed/sharded.py,
+    #             DESIGN.md §3/§8).  Supports fedsikd | random | fedavg |
+    #             fedprox (FL+HC's clustering pre-round is loop-only).
     engine: str = "loop"
     # KD loss used by the sharded engine's student steps:
     #   fused     — Pallas kd_distillation_loss kernel (one pass over logits)
@@ -45,7 +52,7 @@ class FedConfig:
     #   uniform    — clients_per_round sampled uniformly w/o replacement
     #   stratified — per-cluster proportional sampling, >= 1 per cluster
     #                (every cluster keeps teacher coverage)
-    # Both engines consume the same deterministic RoundPlan, so loop/sharded
+    # All engines consume the same deterministic RoundPlan, so loop/sharded
     # parity extends to sampled rounds.
     participation: str = "full"
     clients_per_round: Optional[int] = None
@@ -95,8 +102,34 @@ class FedConfig:
     seed: int = 0
 
     def __post_init__(self):
-        # knob-level validation; the RoundScheduler re-validates against the
-        # actual cluster structure (e.g. stratified needs >= K participants)
+        # Construction-time validation of EVERY knob (and the engine x
+        # algorithm compatibility matrix): an invalid config fails here,
+        # not minutes into a run.  The RoundScheduler re-validates against
+        # the actual cluster structure (e.g. stratified needs >= K
+        # participants), which is only known at setup time.
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS}, "
+                f"got {self.algorithm!r}")
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"engine must be one of {ENGINES}, got {self.engine!r}")
+        if self.engine == "sharded" and self.algorithm not in SHARDED_ALGORITHMS:
+            raise ValueError(
+                f"engine='sharded' supports algorithms {SHARDED_ALGORITHMS}; "
+                f"{self.algorithm!r} clusters on a host-sequential pre-round "
+                f"of local updates — use engine='loop'")
+        if self.kd_impl not in KD_IMPLS:
+            raise ValueError(
+                f"kd_impl must be one of {KD_IMPLS}, got {self.kd_impl!r}")
+        if self.teacher_data not in TEACHER_DATA_MODES:
+            raise ValueError(
+                f"teacher_data must be one of {TEACHER_DATA_MODES}, "
+                f"got {self.teacher_data!r}")
+        if self.cluster_weighting not in schedule.WEIGHTINGS:
+            raise ValueError(
+                f"cluster_weighting must be one of {schedule.WEIGHTINGS}, "
+                f"got {self.cluster_weighting!r}")
         if self.participation not in schedule.PARTICIPATION_MODES:
             raise ValueError(
                 f"participation must be one of {schedule.PARTICIPATION_MODES},"
@@ -118,10 +151,6 @@ class FedConfig:
         if not 0.0 <= self.dropout_rate < 1.0:
             raise ValueError(
                 f"dropout_rate must be in [0, 1), got {self.dropout_rate}")
-        if self.dropout_rate > 0 and self.algorithm == "flhc":
-            raise ValueError(
-                "FL+HC does not consume a RoundPlan; dropout_rate is not "
-                "defined for it (see the participation restriction above)")
         if self.ckpt_every < 1:
             raise ValueError(f"ckpt_every must be >= 1, got {self.ckpt_every}")
         if self.ckpt_keep is not None and self.ckpt_keep < 1:
@@ -129,370 +158,18 @@ class FedConfig:
                 f"ckpt_keep must be >= 1 or None, got {self.ckpt_keep}")
         if self.resume and not self.ckpt_dir:
             raise ValueError("resume=True needs ckpt_dir")
-        if self.ckpt_dir and self.algorithm == "flhc":
-            raise ValueError(
-                "FL+HC's clustering pre-round is not checkpointable; "
-                "ckpt_dir supports fedsikd/random/fedavg/fedprox")
-
-
-def _fingerprint(cfg: FedConfig, labels=None) -> dict:
-    """Run identity stored with every checkpoint and re-validated on resume
-    (fedstate.restore_run): every config field whose change would make the
-    resumed tail a DIFFERENT run — sampling identity, data/model identity,
-    and training hyperparameters.  Deliberately absent: ``rounds`` (resuming
-    with a higher target is the point) and ``ckpt_every``/``ckpt_keep``
-    (cadence is not identity).  ``labels`` (the cluster assignment) is
-    recomputed deterministically at startup, so comparing it also catches
-    silent data/config drift between save and resume."""
-    fp = {"algorithm": cfg.algorithm, "engine": cfg.engine,
-          "seed": cfg.seed, "num_clients": cfg.num_clients,
-          "alpha": cfg.alpha, "num_clusters": cfg.num_clusters,
-          "participation": cfg.participation,
-          "clients_per_round": cfg.clients_per_round,
-          "dropout_rate": cfg.dropout_rate,
-          "local_epochs": cfg.local_epochs, "batch_size": cfg.batch_size,
-          "lr": cfg.lr, "student_lr": cfg.student_lr,
-          "kd_temperature": cfg.kd_temperature, "kd_alpha": cfg.kd_alpha,
-          "kd_impl": cfg.kd_impl, "prox_mu": cfg.prox_mu,
-          "teacher_warmup_epochs": cfg.teacher_warmup_epochs,
-          "teacher_data": cfg.teacher_data,
-          "cluster_weighting": cfg.cluster_weighting,
-          "dp_noise": cfg.dp_noise}
-    if labels is not None:
-        fp["labels"] = [int(l) for l in labels]
-    return fp
-
-
-def _local_epochs(shard: ClientShard, params, opt_state, key, cfg,
-                  *, step_fn, extra=()):
-    for epoch in range(cfg.local_epochs):
-        for x, y in shard.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
-            key, sub = jax.random.split(key)
-            params, opt_state, _ = step_fn(params, opt_state,
-                                           {"x": x, "y": y}, sub, *extra)
-    return params, opt_state
-
-
-def _cluster_epochs(members: list[ClientShard], params, opt_state, key, cfg,
-                    *, step_fn, epochs: int):
-    """Teacher pass over the union of cluster members' shards (Alg.1 l.12).
-
-    The cluster data is POOLED and shuffled globally — visiting member shards
-    sequentially causes catastrophic interference under label skew (each
-    shard's classes overwrite the previous one's; measured in EXPERIMENTS.md
-    calibration: loss diverges 2.5 -> 2.9).  A single-member "union"
-    (teacher_data="leader") is the member itself — keeping its client_id
-    keeps the batch shuffle identical to the sharded engine's teacher feed,
-    which is what makes loop/sharded parity tight."""
-    if len(members) == 1:
-        pooled = members[0]
-    else:
-        pooled = ClientShard(
-            client_id=-1,
-            x=np.concatenate([sh.x for sh in members]),
-            y=np.concatenate([sh.y for sh in members]))
-    for epoch in range(epochs):
-        for x, y in pooled.batches(cfg.batch_size, epoch=epoch, seed=cfg.seed):
-            key, sub = jax.random.split(key)
-            params, opt_state, _ = step_fn(params, opt_state,
-                                           {"x": x, "y": y}, sub)
-    return params, opt_state
-
-
-def _cluster_by_stats(shards: list[ClientShard], cfg: FedConfig) -> np.ndarray:
-    """Alg. 1 phases 1-2."""
-    key = jax.random.PRNGKey(cfg.seed + 17)
-    all_stats = []
-    for i, sh in enumerate(shards):
-        s = stats.compute_stats(sh.x.reshape(sh.num_examples, -1))
-        if cfg.dp_noise > 0:
-            s = stats.privatize(s, noise_multiplier=cfg.dp_noise,
-                                key=jax.random.fold_in(key, i))
-        all_stats.append(s)
-    feats = stats.standardize(stats.stack_stats(all_stats))
-    if cfg.num_clusters is None:
-        k, _ = kmeans.select_k(key, feats, *cfg.k_range)
-    else:
-        k = cfg.num_clusters
-    res = kmeans.kmeans(key, feats, k)
-    return np.asarray(res.assignments)
 
 
 def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dict:
-    """Runs ``cfg.rounds`` federated rounds; returns per-round test metrics."""
-    if cfg.engine not in ("loop", "sharded"):
-        raise ValueError(f"unknown engine {cfg.engine!r}")
-    if cfg.engine == "sharded" and cfg.algorithm not in ("fedsikd", "random"):
-        raise ValueError(
-            f"engine='sharded' implements the clustered-KD algorithms "
-            f"(fedsikd | random); use engine='loop' for {cfg.algorithm!r}")
-    if cfg.participation != "full" and cfg.algorithm == "flhc":
-        raise ValueError(
-            "FL+HC clusters on a full pre-round of local updates; partial "
-            "participation is not defined for it (use participation='full')")
-    shards = make_client_shards(ds, cfg.num_clients, cfg.alpha, seed=cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
-    opt = adamw(cfg.lr)
-    s_opt = adamw(cfg.student_lr)
+    """Runs ``cfg.rounds`` federated rounds; returns per-round test metrics
+    (one history schema for every algorithm/engine, DESIGN.md §10)."""
+    from repro.fed.algorithms import make_algorithm
+    from repro.fed.driver import RoundDriver
+    return RoundDriver(ds, cfg, make_algorithm(cfg), progress=progress).run()
 
-    t_init, t_fwd = make_model(ds.name, student=False)
-    s_init, s_fwd = make_model(ds.name, student=True)
-    teacher_steps = make_steps(t_fwd, opt, prox_mu=cfg.prox_mu)
-    student_steps = make_steps(s_fwd, s_opt, kd_temperature=cfg.kd_temperature,
-                               kd_alpha=cfg.kd_alpha)
-    distill_step = student_steps["make_distill"](t_fwd)
 
-    history = {"acc": [], "loss": [], "round": []}
-
-    def record(params, eval_fn, rnd):
-        acc, loss = evaluate(eval_fn, params, ds.x_test, ds.y_test)
-        history["acc"].append(acc)
-        history["loss"].append(loss)
-        history["round"].append(rnd)
-        if progress:
-            print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}")
-
-    # ---------------------------------------------------------- clustering
-    if cfg.algorithm in ("fedsikd", "random"):
-        if cfg.algorithm == "fedsikd":
-            labels = _cluster_by_stats(shards, cfg)
-        else:
-            rng = np.random.default_rng(cfg.seed + 3)
-            k = cfg.num_clusters or 4
-            labels = rng.integers(0, k, cfg.num_clients)
-        clusters = [np.flatnonzero(labels == c) for c in np.unique(labels)]
-        # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
-        leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
-                   for c in clusters]
-        history["num_clusters"] = len(clusters)
-        # the ONE participation policy both engines consume (DESIGN.md §8)
-        scheduler = schedule.RoundScheduler(
-            labels, participation=cfg.participation,
-            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
-            weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
-            seed=cfg.seed)
-        # run fingerprint stored with every checkpoint: a resume with a
-        # different seed/algorithm/hyperparameters/clustering must refuse,
-        # not silently continue the wrong run (fed/fedstate.py, DESIGN.md §9)
-        fingerprint = _fingerprint(cfg, labels=labels)
-
-        if cfg.engine == "sharded":
-            # Scalable path: same Alg. 1 phases, mapped onto a packed device
-            # mesh (pack clients per device; fed/sharded.py, DESIGN.md §3/§8).
-            from repro.fed import sharded as sh
-            from repro.launch.mesh import make_fed_client_mesh
-            mesh = make_fed_client_mesh(scheduler.max_participants,
-                                        pack=cfg.pack,
-                                        n_devices=scheduler.n_devices)
-
-            def eval_fn(p):
-                return evaluate(student_steps["eval"], p, ds.x_test, ds.y_test)
-
-            _, hist = sh.run_sharded_fedsikd_kd(
-                mesh, shards, labels, scheduler=scheduler,
-                t_model=(t_init, t_fwd), s_model=(s_init, s_fwd),
-                t_opt=opt, s_opt=s_opt, rounds=cfg.rounds,
-                local_epochs=cfg.local_epochs,
-                warmup_epochs=cfg.teacher_warmup_epochs,
-                batch_size=cfg.batch_size,
-                kd_temperature=cfg.kd_temperature, kd_alpha=cfg.kd_alpha,
-                teacher_data=cfg.teacher_data,
-                cluster_weighting=cfg.cluster_weighting,
-                kd_impl=cfg.kd_impl, leaders=leaders, seed=cfg.seed,
-                ckpt_dir=cfg.ckpt_dir, ckpt_every=cfg.ckpt_every,
-                ckpt_keep=cfg.ckpt_keep,
-                resume=cfg.resume, fingerprint=fingerprint,
-                eval_fn=eval_fn, progress=progress)
-            history.update({k: hist[k] for k in
-                            ("acc", "loss", "round", "engine",
-                             "teacher_loss", "student_loss",
-                             "pack", "participation", "participants")})
-            history["dropout_rate"] = cfg.dropout_rate
-            return history
-
-        global_student = s_init(key)
-        teachers = [t_init(jax.random.fold_in(key, 100 + k))
-                    for k in range(len(clusters))]
-        t_opts = [opt.init(t) for t in teachers]
-        def teacher_shards(ci, members=None):
-            # "cluster" mode pools the round's SAMPLED members only (None =
-            # all, for warm-up): the packed engine trains teacher replicas
-            # on participating slots' shards, and non-participants' raw data
-            # must not reach the teacher in a round they sat out
-            if cfg.teacher_data == "cluster":
-                return [shards[i]
-                        for i in (clusters[ci] if members is None else members)]
-            return [shards[leaders[ci]]]
-
-        history["participation"] = cfg.participation
-        history["dropout_rate"] = cfg.dropout_rate
-        history["participants"] = []
-        # resume-or-warmup: a checkpoint's teacher state already includes
-        # the KD-establishment warm-up, so a resumed run must skip it
-        start_round = 0
-        resumed = False
-        if cfg.resume and fedstate.latest_round(cfg.ckpt_dir) is not None:
-            st = fedstate.restore_run(
-                cfg.ckpt_dir,
-                {"student": global_student, "teachers": teachers,
-                 "t_opts": t_opts},
-                expect_meta=fingerprint)
-            global_student = st.arrays["student"]
-            teachers = st.arrays["teachers"]
-            t_opts = st.arrays["t_opts"]
-            history.update(st.history)
-            start_round = st.round_index
-            resumed = True
-            if progress:
-                print(f"  resumed from round {start_round} "
-                      f"({cfg.ckpt_dir})")
-        if not resumed:
-            # KD establishment phase (pre-round teacher warm-up)
-            for ci in range(len(clusters)):
-                if cfg.teacher_warmup_epochs:
-                    teachers[ci], t_opts[ci] = _cluster_epochs(
-                        teacher_shards(ci), teachers[ci], t_opts[ci],
-                        jax.random.fold_in(key, 9000 + ci), cfg,
-                        step_fn=teacher_steps["ce"],
-                        epochs=cfg.teacher_warmup_epochs)
-        for rnd in range(start_round + 1, cfg.rounds + 1):
-            plan = scheduler.plan(rnd)
-            part = set(int(i) for i in plan.participants)
-            weight_of = plan.weight_of()
-            new_params, weights = [], []
-            for ci, members in enumerate(clusters):
-                sel = [i for i in members if int(i) in part]
-                if not sel:
-                    continue           # no sampled member: teacher untouched
-                # Alg.1 line 12: teacher trains on (sampled) cluster data
-                teachers[ci], t_opts[ci] = _cluster_epochs(
-                    teacher_shards(ci, sel), teachers[ci], t_opts[ci],
-                    jax.random.fold_in(key, rnd * 1000 + ci), cfg,
-                    step_fn=teacher_steps["ce"], epochs=cfg.local_epochs)
-                for i in sel:
-                    sp = jax.tree_util.tree_map(jnp.copy, global_student)
-                    so = s_opt.init(sp)
-                    sp, _ = _local_epochs(
-                        shards[i], sp, so,
-                        jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
-                        step_fn=distill_step, extra=(teachers[ci],))
-                    new_params.append(sp)
-                    weights.append(weight_of[int(i)])
-            # the plan's weights ARE the two-level FedSiKD mean, extended
-            # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
-            if new_params:
-                global_student = agg.weighted_average(new_params, weights)
-            # else: every invited client dropped out — a no-op round
-            # (student and teachers unchanged), matching the sharded engine
-            history["participants"].append(len(plan.participants))
-            record(global_student, student_steps["eval"], rnd)
-            if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0
-                                 or rnd == cfg.rounds):
-                fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
-                    round_index=rnd,
-                    arrays={"student": global_student, "teachers": teachers,
-                            "t_opts": t_opts},
-                    history=history, meta=fingerprint),
-                    keep_last=cfg.ckpt_keep)
-        return history
-
-    if cfg.algorithm == "flhc":
-        # FL+HC (Briggs 2020): one pre-round of local training, agglomerative
-        # clustering of updates, then per-cluster FedAvg forever after.
-        global_params = t_init(key)
-        locals_, updates = [], []
-        for i, sh in enumerate(shards):
-            p = jax.tree_util.tree_map(jnp.copy, global_params)
-            o = opt.init(p)
-            p, _ = _local_epochs(sh, p, o, jax.random.fold_in(key, i),
-                                 cfg, step_fn=teacher_steps["ce"])
-            locals_.append(p)
-            updates.append(hierarchical.flatten_update(
-                agg.tree_sub(p, global_params)))
-        k = cfg.num_clusters or 4
-        labels = hierarchical.agglomerative(np.stack(updates), n_clusters=k)
-        clusters = [np.flatnonzero(labels == c) for c in np.unique(labels)]
-        cluster_models = [
-            agg.fedavg([locals_[i] for i in c],
-                       [shards[i].num_examples for i in c]) for c in clusters]
-        history["num_clusters"] = len(clusters)
-
-        def flhc_record(rnd):
-            # client-weighted mean over cluster models on the global test set
-            accs, losses, ws = [], [], []
-            for cm, c in zip(cluster_models, clusters):
-                a, l = evaluate(teacher_steps["eval"], cm, ds.x_test, ds.y_test)
-                w = sum(shards[i].num_examples for i in c)
-                accs.append(a * w); losses.append(l * w); ws.append(w)
-            history["acc"].append(sum(accs) / sum(ws))
-            history["loss"].append(sum(losses) / sum(ws))
-            history["round"].append(rnd)
-            if progress:
-                print(f"  round {rnd:3d}  acc={history['acc'][-1]:.4f}")
-
-        flhc_record(1)
-        for rnd in range(2, cfg.rounds + 1):
-            for ci, members in enumerate(clusters):
-                locs = []
-                for i in members:
-                    p = jax.tree_util.tree_map(jnp.copy, cluster_models[ci])
-                    o = opt.init(p)
-                    p, _ = _local_epochs(
-                        shards[i], p, o,
-                        jax.random.fold_in(key, rnd * 777 + i), cfg,
-                        step_fn=teacher_steps["ce"])
-                    locs.append(p)
-                cluster_models[ci] = agg.fedavg(
-                    locs, [shards[i].num_examples for i in members])
-            flhc_record(rnd)
-        return history
-
-    # ------------------------------------------------- fedavg / fedprox
-    # no cluster structure: one pseudo-cluster, so uniform == stratified and
-    # the plan is just "which clients train this round"
-    scheduler = schedule.RoundScheduler(
-        np.zeros(cfg.num_clients, np.int32), participation=cfg.participation,
-        clients_per_round=cfg.clients_per_round,
-        dropout_rate=cfg.dropout_rate, seed=cfg.seed)
-    history["participation"] = cfg.participation
-    history["dropout_rate"] = cfg.dropout_rate
-    history["participants"] = []
-    global_params = t_init(key)
-    fingerprint = _fingerprint(cfg)
-    start_round = 0
-    if cfg.resume and fedstate.latest_round(cfg.ckpt_dir) is not None:
-        st = fedstate.restore_run(cfg.ckpt_dir, {"student": global_params},
-                                  expect_meta=fingerprint)
-        global_params = st.arrays["student"]
-        history.update(st.history)
-        start_round = st.round_index
-        if progress:
-            print(f"  resumed from round {start_round} ({cfg.ckpt_dir})")
-    for rnd in range(start_round + 1, cfg.rounds + 1):
-        part = scheduler.plan(rnd).participants
-        history["participants"].append(len(part))
-        locals_, sizes = [], []
-        for i, sh in ((int(i), shards[int(i)]) for i in part):
-            p = jax.tree_util.tree_map(jnp.copy, global_params)
-            o = opt.init(p)
-            if cfg.algorithm == "fedprox":
-                p, _ = _local_epochs(sh, p, o,
-                                     jax.random.fold_in(key, rnd * 31 + i), cfg,
-                                     step_fn=teacher_steps["prox"],
-                                     extra=(global_params,))
-            else:
-                p, _ = _local_epochs(sh, p, o,
-                                     jax.random.fold_in(key, rnd * 31 + i), cfg,
-                                     step_fn=teacher_steps["ce"])
-            locals_.append(p)
-            sizes.append(sh.num_examples)
-        if locals_:
-            global_params = agg.fedavg(locals_, sizes)
-        # else: an all-dropout round is a no-op (params unchanged)
-        record(global_params, teacher_steps["eval"], rnd)
-        if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0 or rnd == cfg.rounds):
-            fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
-                round_index=rnd, arrays={"student": global_params},
-                history=history, meta=fingerprint),
-                keep_last=cfg.ckpt_keep)
-    return history
+def _cluster_by_stats(shards, cfg: FedConfig):
+    """Alg. 1 phases 1-2 (back-compat alias; canonical implementation is
+    ``fed.algorithms.clustered_kd.cluster_by_stats``)."""
+    from repro.fed.algorithms.clustered_kd import cluster_by_stats
+    return cluster_by_stats(shards, cfg)

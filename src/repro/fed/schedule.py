@@ -128,6 +128,20 @@ class RoundPlan:
         safe = np.where(self.active, self.slot_client, 0)
         return np.where(self.active, per_client_steps[safe], 0).astype(np.int32)
 
+    def example_row(self, num_examples: np.ndarray) -> np.ndarray:
+        """(S,) FedAvg example-weighted aggregation row: active slot ``s``
+        weighs ``n_{client(s)} / sum_active n``, idle slots 0.  This is the
+        single all-clients group operator the packed baseline engine
+        contracts with ``cluster_collectives.packed_weighted_mean`` — the
+        runtime-array mirror of the loop engine's
+        ``aggregation.fedavg(locals, sizes)`` (no cluster structure, so
+        ``slot_weight``'s two-level mean does not apply)."""
+        n = np.asarray(num_examples, np.float64)
+        safe = np.where(self.active, self.slot_client, 0)
+        row = np.where(self.active, n[safe], 0.0)
+        total = row.sum()
+        return (row / (total if total > 0 else 1.0)).astype(np.float32)
+
 
 # ---------------------------------------------------------------- scheduler
 class RoundScheduler:

@@ -1,21 +1,19 @@
-"""Client-packed federated runtime on a device mesh — KD-complete, with
-scheduled partial participation.
+"""Client-packed federated runtime on a device mesh: the jitted collective
+PROGRAMS and staging helpers the sharded algorithm strategies call
+(`fed/algorithms/`, DESIGN.md §10).
 
 Each device on the 1-D ``"clients"`` mesh axis hosts a ``(pack,)`` block of
 client lanes, so ``C = devices x pack`` clients run in ONE jitted program —
 the clients==devices coupling of the original runtime is gone.  Local steps
-are ``vmap``-ed over the lane axis inside ``shard_map``; FedSiKD's
-hierarchical aggregation is a grouped weighted-gather contraction whose
-cluster groups span (device, lane) pairs — and whose operators are RUNTIME
-arrays built from a per-round ``RoundPlan`` (fed/schedule.py), so partial
+are ``vmap``-ed over the lane axis inside ``shard_map``; aggregation is a
+grouped weighted-gather contraction whose operators are RUNTIME arrays
+built from a per-round ``RoundPlan`` (fed/schedule.py), so partial
 participation (sampled client subsets) re-uses the compiled program across
 rounds (DESIGN.md §3, §8).
 
-Engines in this module:
+One mesh entry point per algorithm family:
 
-- ``make_sharded_round``       — plain CE local steps + grouped aggregation
-  (one client per device; FedAvg / cluster-only variants).
-- ``make_packed_kd_round``     — the full FedSiKD round (Alg. 1) on the
+- ``make_packed_kd_round``       — the full FedSiKD round (Alg. 1) on the
   packed mesh: per-cluster TEACHER REPLICAS on every participating slot,
   teacher CE steps, intra-cluster teacher sync
   (``cluster_collectives.packed_teacher_sync``), student DISTILLATION steps
@@ -24,20 +22,22 @@ Engines in this module:
   masked per slot by the plan's step budgets (idle slots freeze).
   ``make_packed_teacher_phase`` is Alg. 1's pre-round KD-establishment
   (teacher warm-up) as a separate jitted collective program.
+- ``make_packed_baseline_round`` — FedAvg / FedProx: plain-CE (or proximal
+  CE against the broadcast round-start global params) local steps, then ONE
+  all-clients example-weighted grouped mean (no cluster structure — a
+  single group spanning every active slot).
 
 Per-slot step masking: every slot is padded to the same static number of
 scan steps (shorter clients' extra steps are frozen via ``jnp.where``, idle
 slots run zero), so the packed engine performs exactly the same number of
-REAL updates per participating client as the sequential loop engine in
-``rounds.py`` — that is what makes loop/packed parity tight, on full AND
-sampled rounds (tests/test_sharded_kd.py, tests/test_schedule.py).
+REAL updates per participating client as the sequential loop engine — that
+is what makes loop/packed parity tight, on full AND sampled rounds
+(tests/test_sharded_kd.py, tests/test_schedule.py,
+tests/test_baseline_parity.py).
 
-Canonical state lives per CLUSTER between rounds (teachers: a (K, ...)
-stacked pytree; student: one global pytree): each round the driver gathers
-it onto the plan's slots, runs the collective program, and scatters the
-refreshed teachers back from each cluster's first active slot.  Clusters
-with no sampled member this round keep their teacher untouched — exactly
-like the loop engine skipping them.
+Round-to-round state handling (slot gather/scatter of canonical per-cluster
+state) lives with the strategies in ``fed/algorithms/``; checkpoint/resume
+lives with the driver in ``fed/driver.py``.
 
 This runtime drives the paper's CNNs (or any pure fwd fn) and is exercised
 by tests/examples with ``--xla_force_host_platform_device_count``.  jax API
@@ -47,7 +47,7 @@ is absorbed by the small compat shims at the top.
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -56,12 +56,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import cluster_collectives as cc
 from repro.core.distill import distillation_loss, softmax_cross_entropy
-from repro.fed import fedstate
-from repro.fed.schedule import RoundPlan, RoundScheduler
+from repro.fed.schedule import RoundPlan
 from repro.kernels import ops
 from repro.launch.mesh import CLIENT_AXIS, make_fed_client_mesh
 from repro.launch.shardings import client_stack_specs, named
-from repro.optim import Optimizer, apply_updates
+from repro.optim import Optimizer, apply_updates, fedprox_penalty
 
 AXIS = CLIENT_AXIS
 
@@ -122,19 +121,55 @@ def client_step_counts(shards, batch_size: int, epochs: int) -> np.ndarray:
                        for sh in shards], np.int32)
 
 
+def stage_on_slots(mesh, plan: RoundPlan, *arrays):
+    """Row-gather this round's participants onto mesh slots and place the
+    (S, ...) stacks with the packed client-axis sharding (idle slots carry
+    client 0's rows; they run zero steps)."""
+    cid = np.where(plan.active, plan.slot_client, 0)
+    stacks = tuple(jnp.asarray(a[cid]) for a in arrays)
+    return jax.device_put(stacks, named(mesh, client_stack_specs(
+        stacks, mesh, axis=AXIS)))
+
+
+class SlotStager:
+    """Caches the row-gathered slot staging of ``arrays`` across rounds,
+    restaging only when the plan's slot->client assignment changes (with
+    ``participation="full"`` it never does: one upload total)."""
+
+    def __init__(self, mesh, *arrays):
+        self.mesh, self.arrays = mesh, arrays
+        self._key = None
+        self._staged = None
+
+    def stage(self, plan: RoundPlan):
+        key = plan.slot_client.tobytes()
+        if key != self._key:
+            self._staged = stage_on_slots(self.mesh, plan, *self.arrays)
+            self._key = key
+        return self._staged
+
+
+def slot_client_keys(base, plan: RoundPlan, *, offset: int = 0):
+    """One PRNG key per slot, folded by ``offset +`` the hosted CLIENT id —
+    key streams stay stable under slot re-assignment across rounds (idle
+    slots fold client 0; they never train)."""
+    cid = np.where(plan.active, plan.slot_client, 0)
+    return jnp.stack([jax.random.fold_in(base, offset + int(c))
+                      for c in cid])
+
+
+def slot_cluster_keys(base, plan: RoundPlan):
+    """One PRNG key per slot, folded by the slot's CLUSTER index: all slots
+    of a cluster share one key (identical batches + identical dropout masks
+    keep teacher replicas bitwise in sync between sync collectives)."""
+    kidx = np.where(plan.active, plan.slot_cluster, 0)
+    return jnp.stack([jax.random.fold_in(base, int(k)) for k in kidx])
+
+
 def replicate_params(params, n: int):
     """Stack identical replicas on a leading slot axis."""
     return jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), params)
-
-
-def _squeeze(tree):
-    """Strip the local size-1 client axis shard_map leaves on entry."""
-    return jax.tree_util.tree_map(lambda a: a[0], tree)
-
-
-def _unsqueeze(tree):
-    return jax.tree_util.tree_map(lambda a: a[None], tree)
 
 
 def _masked_scan_steps(step_fn, carry, xs, ys, n_steps):
@@ -183,57 +218,6 @@ def _active_mean(loss, n_steps, axis_name):
     return num / jnp.maximum(den, 1.0)
 
 
-# -------------------------------------------------- plain-CE round engine
-def make_sharded_round(mesh, fwd: Callable, opt: Optimizer,
-                       cluster_groups: list[list[int]],
-                       *, algorithm: str = "fedsikd"):
-    """Returns jitted round_fn(params_stacked, opt_stacked, x, y, sizes).
-
-    params_stacked leaves: (C, ...) — one replica per client, sharded on the
-    client axis (pack=1 layout).  One call = local steps on every client +
-    aggregation:
-      fedsikd -> grouped psum (cluster mean) then two-level global mean
-      fedavg  -> example-weighted global all-reduce
-    After the call every client's replica holds the aggregated weights.
-    """
-
-    def local_round(params, opt_state, xs, ys, n_examples):
-        params, opt_state = _squeeze(params), _squeeze(opt_state)
-        xs, ys = _squeeze(xs), _squeeze(ys)
-        n_examples = n_examples[0]
-
-        def step(carry, batch):
-            p, s = carry
-            x, y = batch
-
-            def loss_fn(p):
-                return softmax_cross_entropy(fwd(p, x, train=False, key=None), y)
-
-            loss, g = jax.value_and_grad(loss_fn)(p)
-            u, s = opt.update(g, s, p)
-            return (apply_updates(p, u), s), loss
-
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
-                                                   (xs, ys))
-        if algorithm == "fedsikd":
-            params = cc.fedsikd_global_mean(params, AXIS, cluster_groups)
-        elif algorithm == "fedavg":
-            params = cc.fedavg_mean(params, AXIS, n_examples)
-        elif algorithm == "cluster_only":
-            params = cc.intra_cluster_mean(params, AXIS, cluster_groups)
-        else:
-            raise ValueError(algorithm)
-        return (_unsqueeze(params), _unsqueeze(opt_state),
-                jax.lax.pmean(losses.mean(), AXIS))
-
-    shard = shard_map(
-        local_round, mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
-        out_specs=(P(AXIS), P(AXIS), P()),
-    )
-    return jax.jit(shard)
-
-
 # ----------------------------------------- FedSiKD packed KD round engine
 def make_packed_teacher_phase(mesh, pack: int, t_fwd: Callable,
                               t_opt: Optimizer):
@@ -247,7 +231,7 @@ def make_packed_teacher_phase(mesh, pack: int, t_fwd: Callable,
     get a fresh per-step key, as in the loop engine).  With
     ``teacher_data="leader"`` the driver hands all slots of a cluster the
     SAME key, keeping teacher replicas bitwise in sync (see
-    ``run_sharded_fedsikd_kd``)."""
+    ``algorithms.clustered_kd.ShardedClusteredKD``)."""
 
     def phase(tp, ts, xs, ys, n_steps, rng, sync_mat):
         def lane(tp, ts, xs, ys, n, rng):
@@ -275,7 +259,7 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
 
       1. teacher CE steps on each slot's teacher feed             (line 12)
       2. intra-cluster teacher sync (grouped all-reduce over
-         (device, lane) slots, runtime operator)                  (tentpole)
+         (device, lane) slots, runtime operator)
       3. student distillation steps vs the synced teacher — the loss is the
          fused Pallas ``kd_distillation_loss`` kernel (``kd_impl="fused"``)
          or the pure-jnp reference (``kd_impl="reference"``)    (line 13-14)
@@ -289,9 +273,10 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
     ``RoundPlan`` — they are traced inputs, so sampled participation never
     recompiles.  ``t_rng`` / ``s_rng`` are one PRNG key per slot; they are
     separate inputs because their sharing patterns differ: student keys are
-    always per-client, while with ``teacher_data="leader"`` the driver hands
-    all slots of a cluster the SAME teacher key so that replicas stepping on
-    identical leader batches stay bitwise in sync (dropout masks included)."""
+    always per-client, while with ``teacher_data="leader"`` the strategy
+    hands all slots of a cluster the SAME teacher key so that replicas
+    stepping on identical leader batches stay bitwise in sync (dropout
+    masks included)."""
     if kd_impl not in ("fused", "reference"):
         raise ValueError(
             f"kd_impl must be 'fused' or 'reference', got {kd_impl!r}")
@@ -346,267 +331,55 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
     ))
 
 
-# ------------------------------------------------------------------ drivers
-def run_sharded_fedsikd(mesh, shards, init_fn, fwd, opt, cluster_of,
-                        *, rounds: int, steps_per_round: int,
-                        batch_size: int, algorithm: str = "fedsikd",
-                        seed: int = 0):
-    """Plain-CE convenience driver (no distillation): returns final
-    (per-client) params after ``rounds``.  pack=1 layout (one client per
-    device)."""
-    n = len(shards)
-    groups = cc.cluster_groups(cluster_of)
-    params = replicate_params(init_fn(jax.random.PRNGKey(seed)), n)
-    opt_state = jax.vmap(opt.init)(params)
-    sizes = jnp.asarray([s.num_examples for s in shards], jnp.float32)
-    round_fn = make_sharded_round(mesh, fwd, opt, groups, algorithm=algorithm)
-    losses = []
-    for r in range(rounds):
-        x, y = stack_client_data(shards, steps_per_round, batch_size,
-                                 seed=seed + r)
-        params, opt_state, loss = round_fn(params, opt_state,
-                                           jnp.asarray(x), jnp.asarray(y), sizes)
-        losses.append(float(loss))
-    return params, losses
+# -------------------------------------------- FedAvg/FedProx packed engine
+def make_packed_baseline_round(mesh, pack: int, fwd: Callable,
+                               opt: Optimizer, *, prox_mu: float = 0.0):
+    """One FedAvg (``prox_mu=0``) or FedProx round as ONE jitted collective
+    program over the packed client mesh:
 
+      1. plain-CE local steps on every participating slot's batches, with
+         FedProx's proximal term ``(mu/2)||w - w_g||^2`` computed against
+         the broadcast ROUND-START global params (replicated input, P()
+         spec) — per slot, masked like every other step quantity (idle
+         slots' frozen carries never contribute);
+      2. one all-clients grouped aggregation: the runtime (S,) example-
+         weighted row (``RoundPlan.example_row``) contracted by
+         ``cluster_collectives.packed_weighted_mean`` — a single group
+         spanning every active slot, mirroring the loop engine's
+         ``aggregation.fedavg(locals, sizes)``.
 
-def run_sharded_fedsikd_kd(mesh, shards, cluster_of, *,
-                           t_model, s_model, t_opt: Optimizer,
-                           s_opt: Optimizer, rounds: int,
-                           scheduler: Optional[RoundScheduler] = None,
-                           pack: int = 1,
-                           local_epochs: int = 1, warmup_epochs: int = 0,
-                           batch_size: int = 64, kd_temperature: float = 2.0,
-                           kd_alpha: float = 0.5,
-                           teacher_data: str = "leader",
-                           cluster_weighting: str = "size",
-                           kd_impl: str = "fused", leaders=None,
-                           ckpt_dir=None, ckpt_every: int = 1,
-                           ckpt_keep: Optional[int] = None,
-                           resume: bool = False, fingerprint=None,
-                           seed: int = 0, eval_fn=None, progress: bool = False):
-    """Full FedSiKD (Alg. 1) on the packed device mesh; the scalable twin of
-    the ``rounds.py`` loop engine's ``fedsikd`` branch.
+    Returns round_fn(p, s, xs, ys, n_steps, rng, agg_row, global_p) ->
+    (p, s, train_loss); params/opt-state carry a leading (S,) slot axis,
+    batch stacks are (S, steps, B, ...).  ``agg_row`` is a traced input, so
+    sampled participation and dropout never recompile.  After the call
+    every slot holds the aggregated global model."""
 
-    ``t_model``/``s_model`` are (init_fn, fwd_fn) pairs; ``leaders`` is one
-    client index per cluster (defaults to the most-data member, DESIGN.md
-    §7).  ``scheduler`` (a ``fed.schedule.RoundScheduler``) owns per-round
-    participation and the packed slot layout; when omitted, a
-    full-participation scheduler matching the mesh (``pack`` lanes per
-    device) is built.  ``eval_fn(params) -> (acc, loss)``, if given, is
-    called on the aggregated student after every round.  Returns
-    (global_student_params, history) with history matching the loop engine's
-    schema plus ``pack`` / ``participation`` / per-round participant counts.
+    def baseline_round(p, s, xs, ys, n_steps, rng, agg_row, global_p):
+        def lane(p, s, xs, ys, n, rng):
+            def step(carry, batch):
+                p, s = carry
+                x, y, i = batch
+                k = jax.random.fold_in(rng, i)
 
-    State layout (DESIGN.md §8): teachers are canonical per CLUSTER — a
-    (K, ...) stacked pytree gathered onto the plan's slots each round and
-    scattered back from each cluster's first active slot (with
-    ``teacher_data="cluster"`` and unequal member budgets that slot's Adam
-    step count becomes the cluster's; replicas re-sync next round anyway).
-    Clusters with no sampled member keep their teacher untouched.
+                def loss_fn(p):
+                    loss = softmax_cross_entropy(
+                        fwd(p, x, train=True, key=k), y)
+                    if prox_mu:
+                        loss = loss + fedprox_penalty(p, global_p, prox_mu)
+                    return loss
 
-    Fault tolerance (DESIGN.md §9): with ``ckpt_dir`` set, the canonical
-    host-side state — the global student plus the (K, ...) per-cluster
-    teacher/opt stacks, i.e. exactly what survives between rounds — is
-    saved every ``ckpt_every`` rounds via ``fed.fedstate``; ``resume=True``
-    restores the latest snapshot (skipping the already-banked warm-up) and
-    the next round's ``slot_state`` gather re-scatters it onto the plan's
-    slots.  Resumed runs are bit-identical to uninterrupted ones."""
-    n = len(shards)
-    if scheduler is None:
-        scheduler = RoundScheduler(
-            cluster_of, participation="full", pack=pack,
-            n_devices=int(np.prod(mesh.devices.shape)),
-            weighting=cluster_weighting, seed=seed)
-    pack = scheduler.pack
-    n_dev = int(np.prod(mesh.devices.shape))
-    if n_dev != scheduler.n_devices:
-        raise ValueError(f"mesh has {n_dev} devices but the scheduler laid "
-                         f"out {scheduler.n_devices}")
-    S = scheduler.n_slots
-    cluster_idx = scheduler.cluster_idx          # (C,) cluster index/client
-    groups = scheduler.groups
-    K = len(groups)
-    if leaders is None:
-        leaders = [int(max(g, key=lambda i: shards[i].num_examples))
-                   for g in groups]
-    # per-client teacher feed (DESIGN.md §7): "leader" streams the cluster
-    # leader's shard to every slot (identical batches -> replicas stay in
-    # sync between collectives); "cluster" streams each client's OWN shard,
-    # which teacher_sync turns into data-parallel training over the union
-    if teacher_data == "leader":
-        t_src = [shards[leaders[cluster_idx[i]]] for i in range(n)]
-    elif teacher_data == "cluster":
-        t_src = list(shards)
-    else:
-        raise ValueError(
-            f"teacher_data must be 'leader' or 'cluster', got {teacher_data!r}")
+                loss, g = jax.value_and_grad(loss_fn)(p)
+                u, s = opt.update(g, s, p)
+                return (apply_updates(p, u), s), loss
 
-    t_init, t_fwd = t_model
-    s_init, s_fwd = s_model
-    key = jax.random.PRNGKey(seed)
+            return _masked_scan_steps(step, (p, s), xs, ys, n)
 
-    # canonical per-cluster teacher state: (K, ...) stacked pytrees
-    single_teachers = [t_init(jax.random.fold_in(key, 100 + k))
-                       for k in range(K)]
-    tp_k = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *single_teachers)
-    ts_k = jax.vmap(t_opt.init)(tp_k)
-    sp_global = s_init(key)
+        (p, s), loss = jax.vmap(lane)(p, s, xs, ys, n_steps, rng)
+        p = cc.packed_weighted_mean(p, AXIS, agg_row, pack=pack)
+        return p, s, _active_mean(loss, n_steps, AXIS)
 
-    # static per-client step budgets (mirror the loop engine's batch counts)
-    # and the one-off (C, steps, B, ...) staging of every client's batches
-    t_steps_all = client_step_counts(t_src, batch_size, local_epochs)
-    s_steps_all = client_step_counts(shards, batch_size, local_epochs)
-    tx_all, ty_all = stack_client_data(t_src, int(t_steps_all.max()),
-                                       batch_size, seed=seed)
-    sx_all, sy_all = stack_client_data(shards, int(s_steps_all.max()),
-                                       batch_size, seed=seed)
-
-    def stage(plan: RoundPlan, *arrays):
-        """Row-gather this round's participants onto mesh slots and place
-        the (S, ...) stacks with the packed client-axis sharding."""
-        cid = np.where(plan.active, plan.slot_client, 0)
-        stacks = tuple(jnp.asarray(a[cid]) for a in arrays)
-        return jax.device_put(stacks, named(mesh, client_stack_specs(
-            stacks, mesh, axis=AXIS)))
-
-    def slot_state(plan: RoundPlan):
-        """Gather canonical per-cluster teacher state onto the plan's slots
-        (idle slots carry cluster 0's state; they never train)."""
-        kidx = np.where(plan.active, plan.slot_cluster, 0)
-        tp = jax.tree_util.tree_map(lambda a: a[kidx], tp_k)
-        ts = jax.tree_util.tree_map(lambda a: a[kidx], ts_k)
-        return tp, ts
-
-    def scatter_teachers(plan: RoundPlan, tp_s, ts_s):
-        """Write each refreshed cluster teacher back from its first active
-        slot; untouched clusters keep their previous state."""
-        src = np.full(K, -1, np.int64)
-        for s in range(S - 1, -1, -1):
-            if plan.slot_client[s] >= 0:
-                src[plan.slot_cluster[s]] = s
-        refreshed = src >= 0
-        safe = np.where(refreshed, src, 0)
-
-        def upd(new, old):
-            mask = jnp.asarray(refreshed).reshape((K,) + (1,) * (old.ndim - 1))
-            return jnp.where(mask, new[safe], old)
-
-        return (jax.tree_util.tree_map(upd, tp_s, tp_k),
-                jax.tree_util.tree_map(upd, ts_s, ts_k))
-
-    def student_keys(salt: int, plan: RoundPlan):
-        """One training-mode PRNG key per slot, folded by CLIENT id so key
-        streams are stable under re-assignment across rounds."""
-        base = jax.random.fold_in(key, salt)
-        cid = np.where(plan.active, plan.slot_client, 0)
-        return jnp.stack([jax.random.fold_in(base, int(c)) for c in cid])
-
-    def teacher_keys(salt: int, plan: RoundPlan):
-        """Teacher-step keys.  Leader mode: slots of a cluster share one key
-        (identical batches + identical dropout masks -> replicas stay
-        bitwise in sync between sync collectives).  Cluster mode: per-client
-        keys (each slot steps on its own client's shard anyway)."""
-        base = jax.random.fold_in(key, salt)
-        if teacher_data == "leader":
-            kidx = np.where(plan.active, plan.slot_cluster, 0)
-            return jnp.stack([jax.random.fold_in(base, int(k)) for k in kidx])
-        cid = np.where(plan.active, plan.slot_client, 0)
-        return jnp.stack([jax.random.fold_in(base, 10_000 + int(c))
-                          for c in cid])
-
-    history = {"acc": [], "loss": [], "round": [],
-               "teacher_loss": [], "student_loss": [],
-               "participants": [],
-               "num_clusters": K, "engine": "sharded",
-               "pack": pack, "participation": scheduler.participation}
-
-    # ---- resume from the latest round checkpoint (canonical host state:
-    # global student + stacked per-cluster teachers/opt states)
-    start_round = 0
-    resumed = False
-    if resume and ckpt_dir and fedstate.latest_round(ckpt_dir) is not None:
-        st = fedstate.restore_run(
-            ckpt_dir, {"student": sp_global, "teachers": tp_k, "t_opts": ts_k},
-            expect_meta=fingerprint)
-        sp_global = st.arrays["student"]
-        tp_k = st.arrays["teachers"]
-        ts_k = st.arrays["t_opts"]
-        history.update(st.history)
-        start_round = st.round_index
-        resumed = True
-        if progress:
-            print(f"  resumed from round {start_round} ({ckpt_dir})")
-
-    # ---- Alg. 1 KD-establishment: teacher warm-up before round 1 (a
-    # checkpoint's teacher state already includes it, so resume skips)
-    if warmup_epochs > 0 and not resumed:
-        w_steps_all = ((t_steps_all // max(local_epochs, 1))
-                       * warmup_epochs).astype(np.int32)
-        wx_all, wy_all = stack_client_data(t_src, int(w_steps_all.max()),
-                                           batch_size, seed=seed)
-        planw = scheduler.warmup_plan()
-        warm = make_packed_teacher_phase(mesh, pack, t_fwd, t_opt)
-        tp_s, ts_s = slot_state(planw)
-        wx, wy = stage(planw, wx_all, wy_all)
-        tp_s, ts_s, wloss = warm(
-            tp_s, ts_s, wx, wy, jnp.asarray(planw.steps_for(w_steps_all)),
-            teacher_keys(9001, planw), jnp.asarray(planw.sync_matrix()))
-        tp_k, ts_k = scatter_teachers(planw, tp_s, ts_s)
-        if progress:
-            print(f"  warmup  teacher_loss={float(wloss):.4f}")
-
-    round_fn = make_packed_kd_round(
-        mesh, pack, t_fwd, s_fwd, t_opt, s_opt,
-        kd_temperature=kd_temperature, kd_alpha=kd_alpha, kd_impl=kd_impl)
-
-    staged_key = None                      # slot assignment of the staged data
-    for rnd in range(start_round + 1, rounds + 1):
-        plan = scheduler.plan(rnd)
-        if plan.active.any():
-            tp_s, ts_s = slot_state(plan)
-            sp_s = replicate_params(sp_global, S)
-            ss_s = jax.vmap(s_opt.init)(sp_s)  # fresh student opt (loop too)
-            # restage batches only when the slot->client assignment changed
-            # (with participation="full" it never does: one upload total)
-            if plan.slot_client.tobytes() != staged_key:
-                tx, ty, sx, sy = stage(plan, tx_all, ty_all, sx_all, sy_all)
-                staged_key = plan.slot_client.tobytes()
-            # disjoint even/odd salts keep teacher and student PRNG streams
-            # from colliding on clients whose id equals their cluster index
-            tp_s, ts_s, sp_s, ss_s, t_loss, s_loss = round_fn(
-                tp_s, ts_s, sp_s, ss_s, tx, ty,
-                jnp.asarray(plan.steps_for(t_steps_all)), sx, sy,
-                jnp.asarray(plan.steps_for(s_steps_all)),
-                teacher_keys(2 * rnd, plan), student_keys(2 * rnd + 1, plan),
-                jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
-            tp_k, ts_k = scatter_teachers(plan, tp_s, ts_s)
-            # every slot holds the aggregated student after the weighted mean
-            sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
-            t_loss, s_loss = float(t_loss), float(s_loss)
-        else:
-            # every invited client dropped out: a no-op round — canonical
-            # state untouched, metrics still recorded (loop engine ditto)
-            t_loss = s_loss = 0.0
-        history["teacher_loss"].append(t_loss)
-        history["student_loss"].append(s_loss)
-        history["round"].append(rnd)
-        history["participants"].append(int(plan.active.sum()))
-        if eval_fn is not None:
-            acc, loss = eval_fn(sp_global)
-            history["acc"].append(acc)
-            history["loss"].append(loss)
-            if progress:
-                print(f"  round {rnd:3d}  acc={acc:.4f}  loss={loss:.4f}  "
-                      f"clients={int(plan.active.sum())}")
-        elif progress:
-            print(f"  round {rnd:3d}  student_loss={s_loss:.4f}  "
-                  f"clients={int(plan.active.sum())}")
-        if ckpt_dir and (rnd % ckpt_every == 0 or rnd == rounds):
-            fedstate.save_round(ckpt_dir, fedstate.FedState(
-                round_index=rnd,
-                arrays={"student": sp_global, "teachers": tp_k,
-                        "t_opts": ts_k},
-                history=history, meta=fingerprint or {}),
-                keep_last=ckpt_keep)
-    return sp_global, history
+    return jax.jit(shard_map(
+        baseline_round, mesh,
+        in_specs=(P(AXIS),) * 6 + (P(), P()),
+        out_specs=(P(AXIS), P(AXIS), P()),
+    ))

@@ -32,7 +32,7 @@ from repro.models import transformer as tf
 def run_fl(args):
     ds = load_dataset(args.dataset, small=args.small)
     cfg = FedConfig(algorithm=args.algorithm, engine=args.engine,
-                    num_clients=args.clients,
+                    num_clients=args.clients, pack=args.pack,
                     alpha=args.alpha, rounds=args.rounds,
                     local_epochs=args.local_epochs, seed=args.seed,
                     num_clusters=args.clusters,
@@ -103,8 +103,14 @@ def main():
 
     fl = sub.add_parser("fl")
     fl.add_argument("--dataset", default="mnist")
-    fl.add_argument("--algorithm", default="fedsikd")
+    fl.add_argument("--algorithm", default="fedsikd",
+                    help="fedsikd | random | fedavg | fedprox | flhc (all "
+                         "run on --engine loop; all but flhc also on "
+                         "--engine sharded)")
     fl.add_argument("--engine", default="loop", choices=["loop", "sharded"])
+    fl.add_argument("--pack", type=int, default=1,
+                    help="client lanes per device in the sharded engine "
+                         "(C = devices x pack clients in one jitted program)")
     fl.add_argument("--alpha", type=float, default=0.5)
     fl.add_argument("--rounds", type=int, default=5)
     fl.add_argument("--clients", type=int, default=16)

@@ -1,0 +1,73 @@
+"""Baselines on the packed mesh (fed/algorithms/baselines.py): loop vs
+sharded parity for fedavg and fedprox on 8 host devices with pack > 1,
+through full participation, stratified sampling, AND client dropout — plus
+a kill-and-resume round-trip on the packed engine, exercising the ONE copy
+of checkpoint/resume in fed/driver.py.
+
+Both engines need their own XLA_FLAGS (set pre-import, DESIGN.md §6), so
+each algorithm runs in a subprocess.  The acceptance bound mirrors the
+FedSiKD parity tests: per-round accuracy within 1 point.  (On the MNIST
+CNN — no dropout layers — the engines typically agree exactly: same batch
+sequences, same step budgets, same round-start params, same example
+weights; the bound absorbs vmap/scan float reassociation.)
+"""
+import textwrap
+
+from _subproc import run_script
+
+_PARITY_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm={alg!r}, num_clients=16, alpha=1.0, rounds=2,
+                  local_epochs=1, batch_size=32, seed=0)
+    # full participation AND stratified sampling + dropout: both engines
+    # consume the same deterministic RoundPlans
+    scenarios = [
+        dict(),
+        dict(participation="stratified", clients_per_round=8,
+             dropout_rate=0.25),
+    ]
+    for extra in scenarios:
+        h_loop = run_federated(ds, FedConfig(engine="loop", **common,
+                                             **extra))
+        h_pack = run_federated(ds, FedConfig(engine="sharded", pack=2,
+                                             **common, **extra))
+        assert h_pack["engine"] == "sharded" and h_pack["pack"] == 2
+        assert h_pack["participants"] == h_loop["participants"], (
+            extra, h_pack["participants"], h_loop["participants"])
+        assert len(h_pack["acc"]) == len(h_loop["acc"]) == 2
+        for rnd, (a, b) in enumerate(zip(h_loop["acc"], h_pack["acc"]), 1):
+            assert abs(a - b) <= 0.01, (extra, rnd, h_loop["acc"],
+                                        h_pack["acc"])
+
+    # kill-and-resume on the packed engine, hardest scheduling on: the
+    # driver's single checkpoint/resume path must be bit-identical here too
+    common = dict(algorithm={alg!r}, engine="sharded", pack=2,
+                  num_clients=16, alpha=1.0, rounds=4, local_epochs=1,
+                  batch_size=32, participation="stratified",
+                  clients_per_round=8, dropout_rate=0.25, seed=0)
+    h_full = run_federated(ds, FedConfig(**common))
+    d = tempfile.mkdtemp()
+    run_federated(ds, FedConfig(**{{**common, "rounds": 2}},
+                                ckpt_dir=d, ckpt_every=1))
+    h_res = run_federated(ds, FedConfig(**common, ckpt_dir=d, resume=True))
+    assert h_res["acc"] == h_full["acc"], (h_res["acc"], h_full["acc"])
+    assert h_res["loss"] == h_full["loss"]
+    assert h_res["participants"] == h_full["participants"]
+    assert h_res["round"] == [1, 2, 3, 4]
+    print("BASELINE-PARITY-OK", h_full["acc"])
+""")
+
+
+def test_fedavg_loop_vs_packed_parity_and_resume():
+    r = run_script(_PARITY_SCRIPT.format(alg="fedavg"), timeout=900)
+    assert "BASELINE-PARITY-OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_fedprox_loop_vs_packed_parity_and_resume():
+    r = run_script(_PARITY_SCRIPT.format(alg="fedprox"), timeout=900)
+    assert "BASELINE-PARITY-OK" in r.stdout, r.stdout + r.stderr

@@ -132,6 +132,37 @@ def test_fedavg_resume_and_config_fingerprint_guard(tmp_path):
     assert len(h_fresh["acc"]) == 1
 
 
+def test_flhc_resume_is_bit_identical(tmp_path):
+    """FL+HC rides the shared RoundDriver since the algorithm-strategy
+    layer, so checkpoint/resume (plus partial participation and dropout)
+    now covers it: 4 rounds straight == 2 rounds + kill + resume 2, bit
+    for bit.  Round 1 is the clustering pre-round (setup_rounds=1); on
+    resume the deterministic pre-round is recomputed to rebuild the
+    cluster structure and re-validate the fingerprint, then the restored
+    cluster models overwrite it."""
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="flhc", num_clients=6, alpha=1.0, rounds=4,
+                  local_epochs=1, batch_size=64, num_clusters=2,
+                  participation="uniform", clients_per_round=4,
+                  dropout_rate=0.25, seed=0)
+    h_full = run_federated(ds, FedConfig(**common))
+    assert h_full["round"] == [1, 2, 3, 4]
+    assert h_full["participants"][0] == 6      # pre-round trains everyone
+    d = str(tmp_path / "ck")
+    run_federated(ds, FedConfig(**{**common, "rounds": 2},
+                                ckpt_dir=d, ckpt_every=1))
+    assert fedstate.latest_round(d) == 2
+    h_res = run_federated(ds, FedConfig(**common, ckpt_dir=d, resume=True))
+    assert h_res["acc"] == h_full["acc"]          # bit-identical floats
+    assert h_res["loss"] == h_full["loss"]
+    assert h_res["participants"] == h_full["participants"]
+    assert h_res["round"] == [1, 2, 3, 4]
+    # resuming under a changed config must refuse (labels fingerprinted)
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_federated(ds, FedConfig(**{**common, "seed": 1},
+                                    ckpt_dir=d, resume=True))
+
+
 # -------------------------------------------- sharded engine resume parity
 _SHARDED_RESUME_SCRIPT = textwrap.dedent("""
     import os, tempfile

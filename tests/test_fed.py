@@ -1,5 +1,6 @@
-"""Federated runtime: all five round engines end-to-end on tiny data, plus
-the shard_map cluster-collective runtime (subprocess with 8 host devices).
+"""Federated runtime: all five algorithms end-to-end through the shared
+RoundDriver on tiny data, plus the shard_map cluster-collective operators
+and the packed baseline engine (subprocess with 8 host devices).
 """
 import textwrap
 
@@ -85,25 +86,17 @@ _SHARDED_SCRIPT = textwrap.dedent("""
         mesh=mesh, in_specs=P("clients"), out_specs=P("clients")))
     np.testing.assert_allclose(np.asarray(b(x)), [0,0,0,3,3,5,5,5])
 
-    # end-to-end sharded FedSiKD round on the paper's CNN
+    # end-to-end packed baseline round on the paper's CNN (the mesh entry
+    # point for the fedavg/fedprox family, fed/algorithms/baselines.py)
     from repro.data.synthetic import load_dataset
-    from repro.data.pipeline import make_client_shards
-    from repro.models.cnn import make_model
-    from repro.optim import adamw
+    from repro.fed.rounds import FedConfig, run_federated
     ds = load_dataset("mnist", small=True)
-    shards = make_client_shards(ds, 8, 1.0, seed=0)
-    init, fwd = make_model("mnist", student=True)
-    params, losses = sh.run_sharded_fedsikd(
-        mesh, shards, init, fwd, adamw(3e-3), [0,0,0,1,1,2,2,2],
-        rounds=2, steps_per_round=3, batch_size=32)
-    assert all(np.isfinite(l) for l in losses), losses
-    assert losses[-1] < losses[0] * 1.5
-    # after the final global mean, all replicas agree
-    leaves = jax.tree_util.tree_leaves(params)
-    for leaf in leaves:
-        arr = np.asarray(leaf)
-        np.testing.assert_allclose(arr, np.broadcast_to(arr[:1], arr.shape),
-                                   rtol=2e-4, atol=2e-4)
+    h = run_federated(ds, FedConfig(
+        algorithm="fedavg", engine="sharded", num_clients=16, pack=2,
+        alpha=1.0, rounds=2, local_epochs=1, batch_size=32, seed=0))
+    assert h["engine"] == "sharded" and h["pack"] == 2
+    assert len(h["acc"]) == 2 and all(0.0 <= a <= 1.0 for a in h["acc"])
+    assert all(np.isfinite(l) for l in h["train_loss"]), h["train_loss"]
     print("SHARDED-OK")
 """)
 

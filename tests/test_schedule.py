@@ -185,10 +185,45 @@ def test_fedconfig_validation():
         FedConfig(ckpt_dir="x", ckpt_every=0)
     with pytest.raises(ValueError):
         FedConfig(ckpt_dir="x", ckpt_keep=0)
-    with pytest.raises(ValueError):
-        FedConfig(algorithm="flhc", ckpt_dir="x")    # not checkpointable
-    with pytest.raises(ValueError):
-        FedConfig(algorithm="flhc", dropout_rate=0.1)
+    # since the algorithm-strategy layer FL+HC rides the shared driver:
+    # checkpoint/resume, dropout and partial participation all apply to it
+    FedConfig(algorithm="flhc", ckpt_dir="x")
+    FedConfig(algorithm="flhc", dropout_rate=0.1)
+    FedConfig(algorithm="flhc", participation="uniform", clients_per_round=5,
+              num_clients=8)
+    # every knob fails at CONSTRUCTION, not minutes into a run
+    with pytest.raises(ValueError, match="algorithm"):
+        FedConfig(algorithm="fedavg2")
+    with pytest.raises(ValueError, match="engine"):
+        FedConfig(engine="gpu")
+    with pytest.raises(ValueError, match="kd_impl"):
+        FedConfig(kd_impl="triton")
+    with pytest.raises(ValueError, match="teacher_data"):
+        FedConfig(teacher_data="everyone")
+    with pytest.raises(ValueError, match="cluster_weighting"):
+        FedConfig(cluster_weighting="sqrt")
+    # engine x algorithm compatibility matrix: the packed mesh runs every
+    # algorithm except FL+HC (host-sequential clustering pre-round)
+    for alg in ("fedsikd", "random", "fedavg", "fedprox"):
+        FedConfig(algorithm=alg, engine="sharded")
+    with pytest.raises(ValueError, match="sharded"):
+        FedConfig(algorithm="flhc", engine="sharded")
+
+
+def test_example_row_is_fedavg_weighting():
+    s = RoundScheduler(LABELS, participation="stratified",
+                       clients_per_round=5, pack=2, seed=0)
+    p = s.plan(1)
+    sizes = np.arange(12) * 10 + 20
+    row = p.example_row(sizes)
+    assert row.shape == (s.n_slots,)
+    np.testing.assert_allclose(row.sum(), 1.0, rtol=1e-6)
+    assert row[~p.active].sum() == 0.0
+    active = np.flatnonzero(p.active)
+    tot = sizes[p.slot_client[active]].sum()
+    for a in active:
+        np.testing.assert_allclose(row[a], sizes[p.slot_client[a]] / tot,
+                                   rtol=1e-6)
 
 
 # ------------------------------------------- packed engine acceptance test

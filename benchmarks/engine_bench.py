@@ -47,13 +47,16 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  clients: int = 8, pack: int = 1,
                  kd_impl: str = "fused", rounds: int = 3,
                  participation: str = "full",
-                 clients_per_round=None, dropout_rate: float = 0.0) -> dict:
+                 clients_per_round=None, dropout_rate: float = 0.0,
+                 join_schedule=None, recluster_every: int = 0) -> dict:
     cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
                     num_clusters=3, participation=participation,
                     clients_per_round=clients_per_round,
-                    dropout_rate=dropout_rate, seed=0)
+                    dropout_rate=dropout_rate,
+                    join_schedule=join_schedule,
+                    recluster_every=recluster_every, seed=0)
     t0 = time.perf_counter()
     h = run_federated(ds, cfg)
     total = time.perf_counter() - t0
@@ -62,6 +65,9 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
     t0 = time.perf_counter()
     h2 = run_federated(ds, cfg)
     rerun = time.perf_counter() - t0
+    churn = ("-" if not cfg.lifecycle_enabled else
+             "+".join([f"j{r}:{c}" for r, c in cfg.join_schedule or ()]
+                      + ([f"re{recluster_every}"] if recluster_every else [])))
     return {"engine": engine, "algorithm": algorithm,
             "kd_impl": kd_impl if algorithm in ("fedsikd", "random") else "-",
             "clients": clients,
@@ -69,6 +75,7 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
             "participation": participation,
             "clients_per_round": clients_per_round,
             "dropout_rate": dropout_rate,
+            "churn": churn,
             "rounds": rounds, "total_s": round(total, 3),
             "rerun_s_per_round": round(rerun / rounds, 4),
             "final_acc": h2["acc"][-1], "acc_curve": h["acc"]}
@@ -98,6 +105,9 @@ def main():
                          rounds=rounds),
             bench_engine(ds, "sharded", algorithm="fedavg", clients=8,
                          pack=2, rounds=rounds),
+            # churn scenario smoke: one join event + a periodic re-cluster
+            bench_engine(ds, "loop", clients=8, rounds=max(rounds, 2),
+                         join_schedule=((2, 2),), recluster_every=2),
         ]
     else:
         rounds = args.rounds or 3
@@ -133,21 +143,31 @@ def main():
                          pack=4, rounds=rounds,
                          participation="stratified", clients_per_round=16,
                          dropout_rate=0.2),
+            # churn scenario (DESIGN.md §11): 32 clients on the packed mesh,
+            # joins at rounds 3 and 6, re-clustering every 3 rounds — tracks
+            # the cost of the lifecycle path (batched stats front-end,
+            # warm-started k-means, teacher migration, feed re-staging)
+            # against the static rows above
+            bench_engine(ds, "loop", clients=32, rounds=max(rounds, 6),
+                         join_schedule=((3, 4), (6, 4)), recluster_every=3),
+            bench_engine(ds, "sharded", clients=32, pack=4,
+                         rounds=max(rounds, 6),
+                         join_schedule=((3, 4), (6, 4)), recluster_every=3),
         ]
 
     print(f"{'engine':8s} {'alg':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
-          f"{'part':>10s} {'drop':>5s} {'cold total':>11s} "
+          f"{'part':>10s} {'drop':>5s} {'churn':>13s} {'cold total':>11s} "
           f"{'rerun s/round':>14s} {'final acc':>10s}")
     for r in rows:
         print(f"{r['engine']:8s} {r['algorithm']:8s} {r['kd_impl']:10s} "
               f"{r['clients']:3d} "
               f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
-              f"{r['dropout_rate']:5.2f} "
+              f"{r['dropout_rate']:5.2f} {r['churn']:>13s} "
               f"{r['total_s']:10.1f}s {r['rerun_s_per_round']:13.2f}s "
               f"{r['final_acc']:10.3f}")
     spread = [r["final_acc"] for r in rows
               if r["clients"] == 8 and r["participation"] == "full"
-              and r["algorithm"] == "fedsikd"]
+              and r["algorithm"] == "fedsikd" and r["churn"] == "-"]
     if len(spread) > 1:
         print(f"engine agreement (C=8, full): max final-acc spread "
               f"{max(spread) - min(spread):.4f}")

@@ -2,7 +2,17 @@
 plus the three cluster-quality metrics the paper uses to pick K:
 Silhouette coefficient, Calinski-Harabasz index, Davies-Bouldin index.
 
-Pure JAX (jax.lax control flow) so the whole selection procedure jits.
+Pure JAX (jax.lax control flow) so the whole selection procedure jits.  Two
+entry points matter for the lifecycle subsystem (DESIGN.md §11):
+
+- ``select_k`` runs the WHOLE K sweep (k-means++ seeding, Lloyd iterations,
+  all three quality metrics, every candidate K) as ONE jitted program: each
+  candidate K is a masked instance of the same ``k_cap``-wide computation
+  (invalid centroid slots carry +inf distance), vmapped over the K values —
+  so periodic re-clustering pays one compile per stats-matrix shape, not one
+  per (shape, K).
+- ``kmeans_warm`` re-runs Lloyd from a previous result's centroids (no
+  seeding pass): the cheap path for per-event re-clustering with a fixed K.
 """
 from __future__ import annotations
 
@@ -29,11 +39,15 @@ def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
     return jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)
 
 
-def _plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """k-means++ seeding, fori_loop over the K-1 remaining centroids."""
+def _plus_plus_init(key: jax.Array, x: jax.Array, k: jax.Array,
+                    k_cap: int) -> jax.Array:
+    """k-means++ seeding into a ``(k_cap, F)`` centroid buffer of which only
+    the first ``k`` rows (``k`` may be traced) are ever populated — the
+    masked form that lets ``select_k`` vmap one program over every candidate
+    K.  For ``k == k_cap`` this is plain k-means++."""
     n = x.shape[0]
     first = jax.random.randint(key, (), 0, n)
-    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+    cents = jnp.zeros((k_cap, x.shape[1]), x.dtype).at[0].set(x[first])
 
     def body(i, carry):
         cents, key = carry
@@ -41,47 +55,80 @@ def _plus_plus_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
         d = _sq_dists(x, cents)
         # distance to nearest chosen centroid; un-chosen slots masked out by
         # giving them +inf distance contribution via the iota mask.
-        valid = jnp.arange(k) < i
+        valid = jnp.arange(k_cap) < jnp.minimum(i, k)
         d = jnp.where(valid[None, :], d, jnp.inf).min(axis=1)
-        probs = d / jnp.maximum(d.sum(), _EPS)
+        total = d.sum()
+        # Zero-mass guard: with duplicate stats rows (identical clients, or
+        # heavy DP clipping collapsing everyone to the clip boundary) every
+        # point can sit exactly on an already-chosen centroid, so all
+        # distances — and the sampling weights — are 0.  ``d / max(sum, eps)``
+        # then hands ``jax.random.choice`` an all-zero probability vector,
+        # which degenerates to always picking index 0.  Fall back to uniform
+        # sampling over the points instead (sklearn's convention).
+        probs = jnp.where(total > _EPS, d / jnp.maximum(total, _EPS),
+                          jnp.full((n,), 1.0 / n, x.dtype))
         idx = jax.random.choice(sub, n, p=probs)
-        return cents.at[i].set(x[idx]), key
+        cents = jnp.where(i < k, cents.at[i].set(x[idx]), cents)
+        return cents, key
 
-    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    cents, _ = jax.lax.fori_loop(1, k_cap, body, (cents, key))
     return cents
+
+
+def _lloyd(x: jax.Array, cents0: jax.Array, k: jax.Array, k_cap: int,
+           iters: int) -> KMeansResult:
+    """Lloyd's algorithm minimising Eq. (2) over the first ``k`` of
+    ``k_cap`` centroid slots (invalid slots never win an assignment)."""
+    kmask = jnp.arange(k_cap) < k                            # (k_cap,)
+
+    def masked_dists(cents):
+        return jnp.where(kmask[None, :], _sq_dists(x, cents), jnp.inf)
+
+    def step(_, cents):
+        assign = jnp.argmin(masked_dists(cents), axis=1)
+        onehot = jax.nn.one_hot(assign, k_cap, dtype=x.dtype)   # (N,k_cap)
+        counts = onehot.sum(axis=0)                              # (k_cap,)
+        sums = onehot.T @ x                                      # (k_cap,F)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep old centroid for empty clusters
+        return jnp.where((counts > 0)[:, None] & kmask[:, None], new, cents)
+
+    cents = jax.lax.fori_loop(0, iters, step, cents0)
+    d = masked_dists(cents)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    inertia = jnp.sum(jnp.take_along_axis(d, assign[:, None], 1))
+    return KMeansResult(cents, assign, inertia)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "iters"))
 def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int = 50) -> KMeansResult:
-    """Lloyd's algorithm minimising Eq. (2): J = sum_k sum_{x in C_k} ||x-mu_k||^2."""
-    cents0 = _plus_plus_init(key, x, k)
+    """k-means++ seeding + Lloyd's algorithm (Eq. 2)."""
+    return _lloyd(x, _plus_plus_init(key, x, k, k), k, k, iters)
 
-    def step(_, cents):
-        assign = jnp.argmin(_sq_dists(x, cents), axis=1)
-        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)       # (N,K)
-        counts = onehot.sum(axis=0)                              # (K,)
-        sums = onehot.T @ x                                      # (K,F)
-        new = sums / jnp.maximum(counts, 1.0)[:, None]
-        # keep old centroid for empty clusters
-        return jnp.where(counts[:, None] > 0, new, cents)
 
-    cents = jax.lax.fori_loop(0, iters, step, cents0)
-    assign = jnp.argmin(_sq_dists(x, cents), axis=1).astype(jnp.int32)
-    inertia = jnp.sum(jnp.take_along_axis(_sq_dists(x, cents), assign[:, None], 1))
-    return KMeansResult(cents, assign, inertia)
+@functools.partial(jax.jit, static_argnames=("iters",))
+def kmeans_warm(x: jax.Array, centroids: jax.Array,
+                iters: int = 50) -> KMeansResult:
+    """Lloyd's algorithm warm-started from ``centroids`` ((K, F), e.g. the
+    previous re-clustering's result) — no seeding pass, K fixed by shape.
+    Deterministic in its inputs, which is what makes mid-lifecycle resume
+    bit-identical (DESIGN.md §11): the recluster at round r is a pure
+    function of (stats at r, previous centroids)."""
+    k = centroids.shape[0]
+    return _lloyd(x, centroids, k, k, iters)
 
 
 # --------------------------------------------------------------------------
 # Cluster-quality metrics (paper cites Rousseeuw '87, Calinski-Harabasz '74,
 # Davies-Bouldin '79).  All are O(N^2 F) at FL-client scale (N ~ 40) — cheap.
+# The ``_impl`` forms take the (possibly traced) actual K separately from the
+# static one-hot width ``k_cap`` so the select_k sweep can vmap them.
 # --------------------------------------------------------------------------
 
-def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
-    """Mean silhouette coefficient; higher is better."""
-    n = x.shape[0]
+def _silhouette_impl(x: jax.Array, assign: jax.Array, k_cap: int) -> jax.Array:
     d = jnp.sqrt(_sq_dists(x, x))                                  # (N,N)
     same = assign[:, None] == assign[None, :]                      # (N,N)
-    onehot = jax.nn.one_hot(assign, k)                             # (N,K)
+    onehot = jax.nn.one_hot(assign, k_cap)                         # (N,K)
     counts = onehot.sum(axis=0)                                    # (K,)
     # mean distance from i to every cluster c: (N,K)
     sums = d @ onehot
@@ -90,7 +137,7 @@ def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
                   jnp.sum(jnp.where(same, d, 0.0), axis=1) / jnp.maximum(own - 1, 1),
                   0.0)
     mean_to = sums / jnp.maximum(counts[None, :], 1.0)
-    other = jnp.where(jax.nn.one_hot(assign, k, dtype=bool), jnp.inf, mean_to)
+    other = jnp.where(jax.nn.one_hot(assign, k_cap, dtype=bool), jnp.inf, mean_to)
     b = jnp.where(counts[None, :] > 0, other, jnp.inf).min(axis=1)
     # Empty-cluster guard: when every OTHER cluster is empty (all points in
     # one cluster, or k larger than the number of occupied clusters), ``b``
@@ -99,25 +146,34 @@ def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
     # singleton clusters), keeping the score finite in [-1, 1].
     s = jnp.where((own > 1) & jnp.isfinite(b),
                   (b - a) / jnp.maximum(jnp.maximum(a, b), _EPS), 0.0)
-    del n
     return s.mean()
 
 
-def calinski_harabasz(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
-    """Between/within dispersion ratio; higher is better."""
+def silhouette_score(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Mean silhouette coefficient; higher is better."""
+    return _silhouette_impl(x, assign, k)
+
+
+def _calinski_impl(x: jax.Array, assign: jax.Array, k: jax.Array,
+                   k_cap: int) -> jax.Array:
     n = x.shape[0]
-    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    onehot = jax.nn.one_hot(assign, k_cap, dtype=x.dtype)
     counts = onehot.sum(axis=0)
     cents = (onehot.T @ x) / jnp.maximum(counts, 1.0)[:, None]
     overall = x.mean(axis=0)
     ssb = jnp.sum(counts * jnp.sum((cents - overall) ** 2, axis=1))
     ssw = jnp.sum((x - cents[assign]) ** 2)
-    return (ssb / jnp.maximum(k - 1, 1)) / jnp.maximum(ssw / jnp.maximum(n - k, 1), _EPS)
+    return (ssb / jnp.maximum(k - 1, 1)) / jnp.maximum(
+        ssw / jnp.maximum(n - k, 1), _EPS)
 
 
-def davies_bouldin(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
-    """Mean worst-case cluster similarity; LOWER is better."""
-    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+def calinski_harabasz(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Between/within dispersion ratio; higher is better."""
+    return _calinski_impl(x, assign, k, k)
+
+
+def _davies_impl(x: jax.Array, assign: jax.Array, k_cap: int) -> jax.Array:
+    onehot = jax.nn.one_hot(assign, k_cap, dtype=x.dtype)
     counts = onehot.sum(axis=0)
     cents = (onehot.T @ x) / jnp.maximum(counts, 1.0)[:, None]
     # mean intra-cluster distance to centroid
@@ -125,11 +181,33 @@ def davies_bouldin(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
     s = (onehot.T @ dist) / jnp.maximum(counts, 1.0)               # (K,)
     m = jnp.sqrt(_sq_dists(cents, cents))                          # (K,K)
     ratio = (s[:, None] + s[None, :]) / jnp.maximum(m, _EPS)
-    ratio = jnp.where(jnp.eye(k, dtype=bool), -jnp.inf, ratio)
+    ratio = jnp.where(jnp.eye(k_cap, dtype=bool), -jnp.inf, ratio)
     valid = (counts[:, None] > 0) & (counts[None, :] > 0)
     ratio = jnp.where(valid, ratio, -jnp.inf)
     return jnp.where(counts > 0, ratio.max(axis=1), 0.0).sum() / jnp.maximum(
         jnp.sum(counts > 0), 1)
+
+
+def davies_bouldin(x: jax.Array, assign: jax.Array, k: int) -> jax.Array:
+    """Mean worst-case cluster similarity; LOWER is better."""
+    return _davies_impl(x, assign, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k_cap", "iters"))
+def _select_k_sweep(key: jax.Array, x: jax.Array, ks: jax.Array,
+                    k_cap: int, iters: int):
+    """The whole K sweep as one jitted program: vmap of the masked
+    (k_cap-wide) k-means + all three metrics over the candidate K values."""
+
+    def one(k):
+        res = _lloyd(x, _plus_plus_init(jax.random.fold_in(key, k), x, k, k_cap),
+                     k, k_cap, iters)
+        return (_silhouette_impl(x, res.assignments, k_cap),
+                _calinski_impl(x, res.assignments, k, k_cap),
+                _davies_impl(x, res.assignments, k_cap),
+                res.inertia)
+
+    return jax.vmap(one)(ks)
 
 
 def select_k(
@@ -143,17 +221,31 @@ def select_k(
 
     Each metric votes for its best K (max silhouette, max CH, min DB); ties go
     to the smaller K.  Returns (chosen_k, per-k metric table).
+
+    With fewer than ``k_min + 1`` points there is no sweepable K at all
+    (K = N is a cluster per point, useless); the degenerate-but-well-defined
+    answer is a single cluster, so K=1 is returned with its inertia — the
+    2-3-client edge a shrinking lifecycle roster can reach.
     """
-    table: dict[int, dict[str, float]] = {}
-    ks = list(range(k_min, min(k_max, x.shape[0] - 1) + 1))
-    for k in ks:
-        res = kmeans(jax.random.fold_in(key, k), x, k, iters)
-        table[k] = {
-            "silhouette": float(silhouette_score(x, res.assignments, k)),
-            "calinski_harabasz": float(calinski_harabasz(x, res.assignments, k)),
-            "davies_bouldin": float(davies_bouldin(x, res.assignments, k)),
-            "inertia": float(res.inertia),
-        }
+    n = x.shape[0]
+    if n < 1:
+        raise ValueError("select_k needs at least one point")
+    if k_max < k_min:
+        # a config typo, not a small-roster edge — don't fall through to
+        # the degenerate K=1 path below
+        raise ValueError(f"k_max ({k_max}) < k_min ({k_min})")
+    ks = list(range(k_min, min(k_max, n - 1) + 1))
+    if not ks:
+        res = kmeans(key, x, 1, iters)
+        return 1, {1: {"silhouette": 0.0, "calinski_harabasz": 0.0,
+                       "davies_bouldin": 0.0, "inertia": float(res.inertia)}}
+    sil, ch, db, inertia = _select_k_sweep(key, x, jnp.asarray(ks),
+                                           k_cap=max(ks), iters=iters)
+    table = {k: {"silhouette": float(sil[i]),
+                 "calinski_harabasz": float(ch[i]),
+                 "davies_bouldin": float(db[i]),
+                 "inertia": float(inertia[i])}
+             for i, k in enumerate(ks)}
     votes = [
         max(ks, key=lambda k: table[k]["silhouette"]),
         max(ks, key=lambda k: table[k]["calinski_harabasz"]),

@@ -9,6 +9,7 @@ applied to this shared information".
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -96,9 +97,72 @@ def stack_stats(all_stats: list[ClientStats]) -> jax.Array:
     return jnp.stack([s.vector() for s in all_stats], axis=0)
 
 
+# ------------------------------------------------------ batched front-end
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def batched_moments(x: jax.Array, client_ids: jax.Array, num_segments: int):
+    """All clients' (mu, sigma, gamma) in ONE device program (DESIGN.md §11).
+
+    ``x`` is the (N_total, F) concatenation of every roster client's
+    flattened examples, ``client_ids`` the (N_total,) row owner in
+    [0, num_segments).  Two-pass segment reductions (mean first, then
+    centered second/third moments — same formulation as ``compute_stats``,
+    so no raw-moment cancellation) replace the per-client Python loop the
+    clustering front-end used to run, which is what makes re-clustering
+    every R rounds cheap at C >> devices.  Returns (mean, std, skew), each
+    (num_segments, F).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    cnt = jax.ops.segment_sum(jnp.ones(x.shape[0], x.dtype), client_ids,
+                              num_segments)
+    denom = jnp.maximum(cnt, 1.0)[:, None]
+    mean = jax.ops.segment_sum(x, client_ids, num_segments) / denom
+    centered = x - mean[client_ids]
+    var = jax.ops.segment_sum(centered**2, client_ids, num_segments) / denom
+    third = jax.ops.segment_sum(centered**3, client_ids, num_segments) / denom
+    std = jnp.sqrt(var)
+    skew = third / jnp.maximum(std, _EPS) ** 3
+    return mean, std, skew
+
+
+@functools.partial(jax.jit, static_argnames=("noise_multiplier", "clip"))
+def privatize_batched(mean: jax.Array, std: jax.Array, skew: jax.Array, *,
+                      noise_multiplier: float, clip: float = 10.0,
+                      keys: jax.Array):
+    """``privatize`` vmapped over the client axis: per-client PRNG ``keys``
+    (one per row) draw the per-client loop's noise from the same streams
+    (values agree to float32 rounding; XLA may fuse the batched arithmetic
+    differently), so the batched front-end reproduces the sequential one's
+    clustering."""
+
+    def one(m, s, g, k):
+        ks = jax.random.split(k, 3)
+        sigma = noise_multiplier * clip
+
+        def noisy(x, kk):
+            return jnp.clip(x, -clip, clip) + sigma * jax.random.normal(
+                kk, x.shape)
+
+        return (noisy(m, ks[0]), jnp.maximum(noisy(s, ks[1]), 0.0),
+                noisy(g, ks[2]))
+
+    return jax.vmap(one)(mean, std, skew, keys)
+
+
+def standardize_params(features: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Column (mu, sd) of the stats matrix — computed once over a reference
+    roster so re-clustering events share ONE feature space (warm-started
+    centroids and teacher-migration distances stay comparable across
+    lifecycle events; DESIGN.md §11)."""
+    return (features.mean(axis=0, keepdims=True),
+            features.std(axis=0, keepdims=True))
+
+
+def apply_standardize(features: jax.Array, mu: jax.Array,
+                      sd: jax.Array) -> jax.Array:
+    return (features - mu) / jnp.maximum(sd, _EPS)
+
+
 def standardize(features: jax.Array) -> jax.Array:
     """Column-standardise the stats matrix so k-means treats mu/sigma/gamma
     on equal footing (the three statistics live on very different scales)."""
-    mu = features.mean(axis=0, keepdims=True)
-    sd = features.std(axis=0, keepdims=True)
-    return (features - mu) / jnp.maximum(sd, _EPS)
+    return apply_standardize(features, *standardize_params(features))

@@ -1,6 +1,8 @@
 from repro.fed.fedstate import FedState, latest_round, restore_run, save_round
+from repro.fed.lifecycle import ClientLifecycle, LifecycleEvent
 from repro.fed.rounds import FedConfig, run_federated
 from repro.fed.schedule import RoundPlan, RoundScheduler
 
 __all__ = ["FedConfig", "run_federated", "RoundPlan", "RoundScheduler",
-           "FedState", "save_round", "restore_run", "latest_round"]
+           "FedState", "save_round", "restore_run", "latest_round",
+           "ClientLifecycle", "LifecycleEvent"]

@@ -34,6 +34,12 @@ Lifecycle (driven by ``RoundDriver.run``):
 ``setup_rounds`` (default 0) is the number of rounds consumed by ``setup``
 itself: FL+HC's clustering pre-round IS its round 1, so the driver records
 an eval for it and starts the plan loop at round 2.
+
+Lifecycle hook (DESIGN.md §11): when the run has a ``ClientLifecycle`` the
+driver sets ``alg.lifecycle`` BEFORE ``setup`` (so setup clusters the
+initial roster only) and calls ``apply_lifecycle(event)`` at the start of
+every event round — the strategy re-clusters/migrates state and rebuilds
+its ``scheduler`` for the new roster, returning per-round metrics.
 """
 from __future__ import annotations
 
@@ -44,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import ClientShard
+from repro.fed.lifecycle import ClientLifecycle, LifecycleEvent
 from repro.fed.schedule import RoundPlan, RoundScheduler
 
 
@@ -58,12 +65,45 @@ class Algorithm:
     labels: Optional[np.ndarray] = None
     # set by the driver before setup():
     progress: bool = False
+    lifecycle: Optional[ClientLifecycle] = None
 
     def setup(self, ds, shards: list[ClientShard], cfg, key) -> None:
         raise NotImplementedError
 
     def warmup(self) -> None:
         """Pre-round establishment (checkpointed state; skipped on resume)."""
+
+    def apply_lifecycle(self, event: LifecycleEvent) -> dict:
+        """React to a roster change / re-cluster cadence hit: re-cluster the
+        active clients, migrate cross-round state, rebuild ``scheduler``.
+        Returns per-round metrics (driver keeps them round-aligned)."""
+        raise NotImplementedError(
+            f"algorithm {self.name!r} does not support the client lifecycle")
+
+    # --------------------------------------------------- lifecycle helpers
+    def initial_active(self, cfg) -> np.ndarray:
+        """(num_clients,) bool roster before round 1."""
+        if self.lifecycle is None:
+            return np.ones(cfg.num_clients, bool)
+        return self.lifecycle.initial_active()
+
+    def clamped_clients_per_round(self, cfg, labels) -> Optional[int]:
+        """``clients_per_round`` clamped to the current roster size (a
+        shrinking roster must not make the scheduler unsatisfiable)."""
+        if cfg.participation == "full" or cfg.clients_per_round is None:
+            return None
+        return min(cfg.clients_per_round, int((np.asarray(labels) >= 0).sum()))
+
+    def forced_devices(self, cfg) -> Optional[int]:
+        """Mesh size pinned to the client UNIVERSE when a lifecycle is on:
+        the packed mesh (and every rebuilt scheduler's slot layout) must
+        host the largest roster any join can produce, so re-clustering
+        never changes the compiled programs' slot count."""
+        if self.lifecycle is None:
+            return None
+        from repro.launch.mesh import fed_mesh_layout
+        cap = cfg.clients_per_round or cfg.num_clients
+        return fed_mesh_layout(cap, pack=cfg.pack)[0]
 
     def run_round(self, plan: RoundPlan, rnd: int) -> dict:
         raise NotImplementedError

@@ -43,7 +43,8 @@ class _BaselineBase(Algorithm):
         self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
         self.name = cfg.algorithm
         self.is_prox = cfg.algorithm == "fedprox"
-        self.scheduler = self._make_scheduler(cfg)
+        self.roster_labels = self._roster_labels(self.initial_active(cfg))
+        self.scheduler = self._make_scheduler(cfg, self.roster_labels)
         self.opt = adamw(cfg.lr)
         t_init, t_fwd = make_model(ds.name, student=False)
         self.t_fwd = t_fwd
@@ -52,11 +53,23 @@ class _BaselineBase(Algorithm):
         self.sizes = np.asarray([sh.num_examples for sh in shards])
         self._setup_engine()
 
-    def _make_scheduler(self, cfg):
+    def _roster_labels(self, active) -> np.ndarray:
+        """Single pseudo-cluster label array over the CURRENT roster (-1
+        marks off-roster clients, fed/lifecycle.py)."""
+        return np.where(np.asarray(active), 0, -1).astype(np.int32)
+
+    def apply_lifecycle(self, event):
+        """No cluster structure to migrate: a roster change just rebuilds
+        the scheduler over the active clients (periodic re-cluster cadence
+        hits are no-ops beyond that)."""
+        self.roster_labels = self._roster_labels(event.active)
+        self.scheduler = self._make_scheduler(self.cfg, self.roster_labels)
+        return {"active_clients": float(event.active.sum())}
+
+    def _make_scheduler(self, cfg, labels):
         return schedule.RoundScheduler(
-            np.zeros(cfg.num_clients, np.int32),
-            participation=cfg.participation,
-            clients_per_round=cfg.clients_per_round,
+            labels, participation=cfg.participation,
+            clients_per_round=self.clamped_clients_per_round(cfg, labels),
             dropout_rate=cfg.dropout_rate, seed=cfg.seed)
 
     def _setup_engine(self):
@@ -67,10 +80,16 @@ class _BaselineBase(Algorithm):
                         self.ds.x_test, self.ds.y_test)
 
     def checkpoint_arrays(self):
-        return {"student": self.global_params}
+        # the roster rides the checkpoint: a resume past a lifecycle event
+        # must rebuild the scheduler for the roster AS OF the checkpoint
+        # round, not the initial one
+        return {"student": self.global_params,
+                "labels": jnp.asarray(self.roster_labels, jnp.int32)}
 
     def restore_arrays(self, arrays):
         self.global_params = arrays["student"]
+        self.roster_labels = np.asarray(arrays["labels"])
+        self.scheduler = self._make_scheduler(self.cfg, self.roster_labels)
 
 
 # ---------------------------------------------------------------- loop engine
@@ -115,11 +134,11 @@ class PackedBaseline(_BaselineBase):
 
     engine = "sharded"
 
-    def _make_scheduler(self, cfg):
+    def _make_scheduler(self, cfg, labels):
         return schedule.RoundScheduler(
-            np.zeros(cfg.num_clients, np.int32),
-            participation=cfg.participation,
-            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
+            labels, participation=cfg.participation,
+            clients_per_round=self.clamped_clients_per_round(cfg, labels),
+            pack=cfg.pack, n_devices=self.forced_devices(cfg),
             dropout_rate=cfg.dropout_rate, seed=cfg.seed)
 
     def _setup_engine(self):

@@ -9,10 +9,24 @@ replicas, packed teacher sync, fused Pallas KD student steps inside
 deterministic ``RoundPlan``s, so loop/sharded parity extends to sampled
 rounds and dropout (tests/test_schedule.py, tests/test_sharded_kd.py).
 
+Client lifecycle (DESIGN.md §11): the stats front-end is batched (ONE
+jitted segment-sum program for the whole roster's (mu, sigma, gamma), one
+vmapped DP-noise program), so ``apply_lifecycle`` can re-cluster cheaply on
+every join/leave event and on the periodic cadence.  Re-clustering keeps
+the teacher count K fixed at its setup value: k-means is warm-started from
+the previous centroids (``kmeans_warm``), each post-event cluster j adopts
+the teacher of the nearest previously-OCCUPIED centroid (usually itself —
+warm starts drift, they don't jump), and the scheduler/teacher-feed/slot
+staging are rebuilt for the new roster.  Fixing K keeps every checkpoint
+array shape stable across events, which is what lets a mid-lifecycle
+resume restore into the same structure.
+
 Checkpoint payload (both engines, same keys): the global student, the
 per-cluster teachers WITH their optimizer states — the loop engine as
 lists, the sharded engine as ``(K, ...)`` stacked host pytrees (packed slot
-state is derived, never persisted: the next round's gather re-scatters).
+state is derived, never persisted: the next round's gather re-scatters) —
+plus the CURRENT cluster labels (and, for FedSiKD, centroids), because
+lifecycle re-clustering evolves them past what setup can recompute.
 """
 from __future__ import annotations
 
@@ -30,18 +44,35 @@ from repro.models.cnn import make_model
 from repro.optim import adamw
 
 
+def stat_features(shards, cfg, roster=None) -> jax.Array:
+    """Alg. 1 phase 1, batched: the (R, 3F) raw statistics matrix for the
+    ``roster`` clients (global ids; None = everyone) via ONE jitted
+    segment-sum program plus one vmapped DP-noise program — no per-client
+    Python loop.  DP keys fold the GLOBAL client id, so a client's noise is
+    identical no matter when it joins or how often the server re-clusters."""
+    if roster is None:
+        roster = np.arange(len(shards))
+    roster = np.asarray(roster)
+    xs = [shards[int(i)].x.reshape(shards[int(i)].num_examples, -1)
+          for i in roster]
+    sizes = [len(x) for x in xs]
+    x_cat = jnp.asarray(np.concatenate(xs, axis=0), jnp.float32)
+    cid = jnp.asarray(np.repeat(np.arange(len(roster)), sizes))
+    mean, std, skew = stats.batched_moments(x_cat, cid,
+                                            num_segments=len(roster))
+    if cfg.dp_noise > 0:
+        key = jax.random.PRNGKey(cfg.seed + 17)
+        keys = jnp.stack([jax.random.fold_in(key, int(i)) for i in roster])
+        mean, std, skew = stats.privatize_batched(
+            mean, std, skew, noise_multiplier=cfg.dp_noise, keys=keys)
+    return jnp.concatenate([mean, std, skew], axis=1)
+
+
 def cluster_by_stats(shards, cfg) -> np.ndarray:
-    """Alg. 1 phases 1-2: client statistics sharing (+ optional DP noise)
-    -> k-means cluster formation with metric-voted K."""
+    """Alg. 1 phases 1-2 over the full roster: client statistics sharing
+    (+ optional DP noise) -> k-means cluster formation with metric-voted K."""
     key = jax.random.PRNGKey(cfg.seed + 17)
-    all_stats = []
-    for i, sh in enumerate(shards):
-        s = stats.compute_stats(sh.x.reshape(sh.num_examples, -1))
-        if cfg.dp_noise > 0:
-            s = stats.privatize(s, noise_multiplier=cfg.dp_noise,
-                                key=jax.random.fold_in(key, i))
-        all_stats.append(s)
-    feats = stats.standardize(stats.stack_stats(all_stats))
+    feats = stats.standardize(stat_features(shards, cfg))
     if cfg.num_clusters is None:
         k, _ = kmeans.select_k(key, feats, *cfg.k_range)
     else:
@@ -50,40 +81,125 @@ def cluster_by_stats(shards, cfg) -> np.ndarray:
     return np.asarray(res.assignments)
 
 
-def _assign_clusters(shards, cfg) -> np.ndarray:
-    if cfg.algorithm == "fedsikd":
-        return cluster_by_stats(shards, cfg)
-    rng = np.random.default_rng(cfg.seed + 3)          # random baseline
-    k = cfg.num_clusters or 4
-    return rng.integers(0, k, cfg.num_clients)
-
-
 class _ClusteredKDBase(Algorithm):
     """Shared setup: clustering, leaders, scheduler, models/optimizers."""
 
     def setup(self, ds, shards, cfg, key):
         self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
         self.name = cfg.algorithm
-        labels = _assign_clusters(shards, cfg)
-        self.labels = labels
-        self.clusters = [np.flatnonzero(labels == c)
-                         for c in np.unique(labels)]
-        # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
-        self.leaders = [int(c[np.argmax([shards[i].num_examples for i in c])])
-                        for c in self.clusters]
-        self.scheduler = schedule.RoundScheduler(
-            labels, participation=cfg.participation,
-            clients_per_round=cfg.clients_per_round, pack=cfg.pack,
-            weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
-            seed=cfg.seed)
+        self._stats_key = jax.random.PRNGKey(cfg.seed + 17)
+        active0 = self.initial_active(cfg)
+        roster = np.flatnonzero(active0)
+        if cfg.algorithm == "fedsikd":
+            raw = stat_features(shards, cfg, roster)
+            # ONE standardization space (initial-roster statistics) for the
+            # whole run: warm-started centroids and teacher-migration
+            # distances stay comparable across re-clustering events
+            self._feat_mu, self._feat_sd = stats.standardize_params(raw)
+            feats = stats.apply_standardize(raw, self._feat_mu, self._feat_sd)
+            if cfg.num_clusters is None:
+                k, _ = kmeans.select_k(self._stats_key, feats, *cfg.k_range)
+            else:
+                k = cfg.num_clusters
+            res = kmeans.kmeans(self._stats_key, feats, k)
+            lab = np.asarray(res.assignments)
+            occ = np.unique(lab)
+            # compact to the OCCUPIED clusters: exactly one teacher per
+            # occupied cluster, K fixed for the rest of the run
+            self.K0 = len(occ)
+            self.centroids = np.asarray(res.centroids)[occ]
+            self._base_labels = None
+            lab = np.searchsorted(occ, lab)
+        else:                          # random-cluster ablation baseline
+            rng = np.random.default_rng(cfg.seed + 3)
+            k = cfg.num_clusters or 4
+            base = rng.integers(0, k, cfg.num_clients)
+            occ = np.unique(base)      # teachers for universe-occupied values
+            base = np.searchsorted(occ, base)
+            self.K0 = len(occ)
+            self.centroids = None
+            self._base_labels = base
+            lab = base[roster]
+        labels_full = np.full(cfg.num_clients, -1, np.int64)
+        labels_full[roster] = lab
+        self._rebuild_structures(labels_full)
         self.opt = adamw(cfg.lr)
         self.s_opt = adamw(cfg.student_lr)
         self.t_model = make_model(ds.name, student=False)
         self.s_model = make_model(ds.name, student=True)
         self._setup_engine()
 
+    # ------------------------------------------------------ roster plumbing
+    def _rebuild_structures(self, labels_full) -> None:
+        """Derive every roster-dependent structure from the (C,) label
+        array: cluster membership, leaders, compact->teacher-row map, and a
+        fresh ``RoundScheduler``.  Called at setup, on every lifecycle
+        event, and on checkpoint restore."""
+        cfg = self.cfg
+        self.labels = np.asarray(labels_full)
+        occ = np.unique(self.labels[self.labels >= 0])
+        # scheduler cluster index i (compact, occupied only) hosts teacher
+        # row cluster_ids[i] — a re-clustered roster can leave teacher rows
+        # temporarily empty, and those keep their state untouched
+        self.cluster_ids = occ.astype(np.int64)
+        self.clusters = [np.flatnonzero(self.labels == c) for c in occ]
+        # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
+        self.leaders = [int(c[np.argmax([self.shards[i].num_examples
+                                         for i in c])])
+                        for c in self.clusters]
+        self.scheduler = schedule.RoundScheduler(
+            self.labels, participation=cfg.participation,
+            clients_per_round=self.clamped_clients_per_round(cfg, self.labels),
+            pack=cfg.pack, n_devices=self.forced_devices(cfg),
+            weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
+            seed=cfg.seed)
+
+    def apply_lifecycle(self, event):
+        cfg = self.cfg
+        old_labels = self.labels
+        roster = np.flatnonzero(event.active)
+        migrate = np.arange(self.K0)
+        if cfg.algorithm == "fedsikd":
+            raw = stat_features(self.shards, cfg, roster)
+            feats = stats.apply_standardize(raw, self._feat_mu, self._feat_sd)
+            res = kmeans.kmeans_warm(feats, jnp.asarray(self.centroids))
+            new_cent = np.asarray(res.centroids)
+            lab = np.asarray(res.assignments)
+            # teacher migration: cluster j warm-starts from the teacher of
+            # the nearest previously-OCCUPIED centroid (identity for
+            # clusters that merely drifted)
+            occupied_old = np.unique(old_labels[old_labels >= 0])
+            d = ((new_cent[:, None, :] - self.centroids[None, :, :]) ** 2
+                 ).sum(-1)
+            penalty = np.full(self.K0, np.inf)
+            penalty[occupied_old] = 0.0
+            migrate = np.argmin(d + penalty[None, :], axis=1)
+            self._migrate_teachers(migrate)
+            self.centroids = new_cent
+        else:                          # random baseline: labels are sticky
+            lab = self._base_labels[roster]
+        labels_full = np.full(cfg.num_clients, -1, np.int64)
+        labels_full[roster] = lab
+        both = (old_labels >= 0) & (labels_full >= 0)
+        shift = (float(np.mean(old_labels[both] != labels_full[both]))
+                 if both.any() else 0.0)
+        self._rebuild_structures(labels_full)
+        self._post_lifecycle()
+        return {"recluster": 1.0, "cluster_shift": shift,
+                "active_clients": float(event.active.sum()),
+                "migrated_teachers": float(
+                    int((migrate != np.arange(self.K0)).sum()))}
+
+    # ----------------------------------------------------------- engine API
     def _setup_engine(self):
         raise NotImplementedError
+
+    def _migrate_teachers(self, migrate: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def _post_lifecycle(self) -> None:
+        """Engine hook after a roster rebuild (packed engine re-stages the
+        teacher feed; the loop engine reads ``clusters``/``leaders`` live)."""
 
     def history_extras(self):
         return {"num_clusters": len(self.clusters)}
@@ -106,8 +222,14 @@ class LoopClusteredKD(_ClusteredKDBase):
         self.distill_step = self.student_steps["make_distill"](t_fwd)
         self.global_student = s_init(key)
         self.teachers = [t_init(jax.random.fold_in(key, 100 + k))
-                         for k in range(len(self.clusters))]
+                         for k in range(self.K0)]
         self.t_opts = [self.opt.init(t) for t in self.teachers]
+
+    def _migrate_teachers(self, migrate):
+        if np.array_equal(migrate, np.arange(self.K0)):
+            return
+        self.teachers = [self.teachers[int(m)] for m in migrate]
+        self.t_opts = [self.t_opts[int(m)] for m in migrate]
 
     def _teacher_shards(self, ci, members=None):
         # "cluster" mode pools the round's SAMPLED members only (None =
@@ -125,8 +247,9 @@ class LoopClusteredKD(_ClusteredKDBase):
             return
         # KD establishment phase (pre-round teacher warm-up, Alg. 1)
         for ci in range(len(self.clusters)):
-            self.teachers[ci], self.t_opts[ci] = cluster_epochs(
-                self._teacher_shards(ci), self.teachers[ci], self.t_opts[ci],
+            t = int(self.cluster_ids[ci])
+            self.teachers[t], self.t_opts[t] = cluster_epochs(
+                self._teacher_shards(ci), self.teachers[t], self.t_opts[t],
                 jax.random.fold_in(key, 9000 + ci), cfg,
                 step_fn=self.teacher_steps["ce"],
                 epochs=cfg.teacher_warmup_epochs)
@@ -140,10 +263,11 @@ class LoopClusteredKD(_ClusteredKDBase):
             sel = [i for i in members if int(i) in part]
             if not sel:
                 continue           # no sampled member: teacher untouched
+            t = int(self.cluster_ids[ci])
             # Alg.1 line 12: teacher trains on (sampled) cluster data
-            self.teachers[ci], self.t_opts[ci] = cluster_epochs(
-                self._teacher_shards(ci, sel), self.teachers[ci],
-                self.t_opts[ci], jax.random.fold_in(key, rnd * 1000 + ci),
+            self.teachers[t], self.t_opts[t] = cluster_epochs(
+                self._teacher_shards(ci, sel), self.teachers[t],
+                self.t_opts[t], jax.random.fold_in(key, rnd * 1000 + ci),
                 cfg, step_fn=self.teacher_steps["ce"], epochs=cfg.local_epochs)
             for i in sel:
                 sp = tree_copy(self.global_student)
@@ -151,7 +275,7 @@ class LoopClusteredKD(_ClusteredKDBase):
                 sp, _ = local_epochs(
                     self.shards[i], sp, so,
                     jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
-                    step_fn=self.distill_step, extra=(self.teachers[ci],))
+                    step_fn=self.distill_step, extra=(self.teachers[t],))
                 new_params.append(sp)
                 weights.append(weight_of[int(i)])
         # the plan's weights ARE the two-level FedSiKD mean, extended
@@ -166,13 +290,21 @@ class LoopClusteredKD(_ClusteredKDBase):
                         self.ds.x_test, self.ds.y_test)
 
     def checkpoint_arrays(self):
-        return {"student": self.global_student, "teachers": self.teachers,
-                "t_opts": self.t_opts}
+        arrs = {"student": self.global_student, "teachers": self.teachers,
+                "t_opts": self.t_opts,
+                "labels": jnp.asarray(self.labels, jnp.int32)}
+        if self.centroids is not None:
+            arrs["centroids"] = jnp.asarray(self.centroids, jnp.float32)
+        return arrs
 
     def restore_arrays(self, arrays):
         self.global_student = arrays["student"]
         self.teachers = arrays["teachers"]
         self.t_opts = arrays["t_opts"]
+        if "centroids" in arrays:
+            self.centroids = np.asarray(arrays["centroids"])
+        self._rebuild_structures(np.asarray(arrays["labels"]))
+        self._post_lifecycle()
 
 
 # ------------------------------------------------------------- sharded engine
@@ -185,7 +317,14 @@ class ShardedClusteredKD(_ClusteredKDBase):
     gathers it onto the plan's slots, runs the collective program, and
     scatters the refreshed teachers back from each cluster's first active
     slot.  Clusters with no sampled member keep their teacher untouched —
-    exactly like the loop engine skipping them (DESIGN.md §8)."""
+    exactly like the loop engine skipping them (DESIGN.md §8).
+
+    Lifecycle events re-scatter slot state for free — slot state is derived
+    per round from the canonical (K, ...) stacks — so ``_post_lifecycle``
+    only has to re-stage the teacher feed (leaders may have changed) and
+    refresh the slot stager.  The mesh itself is sized for the client
+    UNIVERSE at setup (``Algorithm.forced_devices``), so the compiled round
+    program survives every join."""
 
     engine = "sharded"
 
@@ -199,19 +338,7 @@ class ShardedClusteredKD(_ClusteredKDBase):
                                          pack=cfg.pack,
                                          n_devices=scheduler.n_devices)
         self.S = scheduler.n_slots
-        self.K = len(self.clusters)
-        cluster_idx = scheduler.cluster_idx        # (C,) cluster index/client
-        # per-client teacher feed (DESIGN.md §7): "leader" streams the
-        # cluster leader's shard to every slot (identical batches ->
-        # replicas stay in sync between collectives); "cluster" streams each
-        # client's OWN shard, which teacher_sync turns into data-parallel
-        # training over the union
-        if cfg.teacher_data == "leader":
-            t_src = [shards[self.leaders[cluster_idx[i]]]
-                     for i in range(len(shards))]
-        else:
-            t_src = list(shards)
-        self.t_src = t_src
+        self.K = self.K0
 
         t_init, t_fwd = self.t_model
         s_init, s_fwd = self.s_model
@@ -228,27 +355,78 @@ class ShardedClusteredKD(_ClusteredKDBase):
 
         # static per-client step budgets (mirror the loop engine's batch
         # counts) and the one-off (C, steps, B, ...) staging of batches
-        self.t_steps_all = sh.client_step_counts(t_src, cfg.batch_size,
-                                                 cfg.local_epochs)
         self.s_steps_all = sh.client_step_counts(shards, cfg.batch_size,
                                                  cfg.local_epochs)
-        self.tx_all, self.ty_all = sh.stack_client_data(
-            t_src, int(self.t_steps_all.max()), cfg.batch_size, seed=cfg.seed)
         self.sx_all, self.sy_all = sh.stack_client_data(
-            shards, int(self.s_steps_all.max()), cfg.batch_size, seed=cfg.seed)
+            shards, int(self.s_steps_all.max()), cfg.batch_size,
+            seed=cfg.seed)
+        # teacher-feed staging width: with a lifecycle on, pad to the
+        # universe-max step budget so a leader change never changes the
+        # compiled scan length (static runs keep today's exact-max width)
+        self._t_cap = (int(self.s_steps_all.max())
+                       if self.lifecycle is not None else None)
+        self._restage_teacher_feed()
 
         self.round_fn = sh.make_packed_kd_round(
             self.mesh, cfg.pack, t_fwd, s_fwd, self.opt, self.s_opt,
             kd_temperature=cfg.kd_temperature, kd_alpha=cfg.kd_alpha,
             kd_impl=cfg.kd_impl)
+
+    def _restage_teacher_feed(self):
+        """(Re)build the per-client teacher source, its step budgets, and
+        the slot stager — at setup and after every roster rebuild.  Skipped
+        when the feed is unchanged: "cluster" mode always streams each
+        client's own shard, and in "leader" mode a re-clustering that keeps
+        every client's leader (the common drift case) changes nothing —
+        re-staging is O(total dataset) host work + a full device transfer."""
+        cfg, sh, shards = self.cfg, self.sh, self.shards
+        # per-client teacher feed (DESIGN.md §7): "leader" streams the
+        # cluster leader's shard to every slot (identical batches ->
+        # replicas stay in sync between collectives); "cluster" streams each
+        # client's OWN shard, which teacher_sync turns into data-parallel
+        # training over the union.  Off-roster clients keep their own shard
+        # (their rows are only ever staged on idle slots, which never train).
+        if cfg.teacher_data == "leader":
+            cidx = self.scheduler.cluster_idx
+            feed_of = np.asarray([self.leaders[cidx[i]] if cidx[i] >= 0
+                                  else i for i in range(len(shards))])
+        else:
+            feed_of = np.arange(len(shards))
+        if getattr(self, "_feed_of", None) is not None \
+                and np.array_equal(feed_of, self._feed_of):
+            return
+        self._feed_of = feed_of
+        t_src = [shards[i] for i in feed_of]
+        self.t_src = t_src
+        self.t_steps_all = sh.client_step_counts(t_src, cfg.batch_size,
+                                                 cfg.local_epochs)
+        cap = self._t_cap or int(self.t_steps_all.max())
+        self.tx_all, self.ty_all = sh.stack_client_data(
+            t_src, cap, cfg.batch_size, seed=cfg.seed)
         self.stager = sh.SlotStager(self.mesh, self.tx_all, self.ty_all,
                                     self.sx_all, self.sy_all)
 
+    def _post_lifecycle(self):
+        self._restage_teacher_feed()
+
+    def _migrate_teachers(self, migrate):
+        if np.array_equal(migrate, np.arange(self.K0)):
+            return
+        idx = jnp.asarray(migrate)
+        self.tp_k = jax.tree_util.tree_map(lambda a: a[idx], self.tp_k)
+        self.ts_k = jax.tree_util.tree_map(lambda a: a[idx], self.ts_k)
+
     # ------------------------------------------------- slot gather/scatter
+    def _teacher_row(self, plan):
+        """(S,) teacher row hosted by each slot: the scheduler's compact
+        cluster index mapped through ``cluster_ids`` (idle slots row 0)."""
+        comp = np.where(plan.active, plan.slot_cluster, 0)
+        return np.where(plan.active, self.cluster_ids[comp], 0)
+
     def _slot_state(self, plan):
         """Gather canonical per-cluster teacher state onto the plan's slots
-        (idle slots carry cluster 0's state; they never train)."""
-        kidx = np.where(plan.active, plan.slot_cluster, 0)
+        (idle slots carry row 0's state; they never train)."""
+        kidx = self._teacher_row(plan)
         tp = jax.tree_util.tree_map(lambda a: a[kidx], self.tp_k)
         ts = jax.tree_util.tree_map(lambda a: a[kidx], self.ts_k)
         return tp, ts
@@ -257,10 +435,11 @@ class ShardedClusteredKD(_ClusteredKDBase):
         """Write each refreshed cluster teacher back from its first active
         slot; untouched clusters keep their previous state."""
         K, S = self.K, self.S
+        row = self._teacher_row(plan)
         src = np.full(K, -1, np.int64)
         for s in range(S - 1, -1, -1):
             if plan.slot_client[s] >= 0:
-                src[plan.slot_cluster[s]] = s
+                src[row[s]] = s
         refreshed = src >= 0
         safe = np.where(refreshed, src, 0)
 
@@ -340,13 +519,21 @@ class ShardedClusteredKD(_ClusteredKDBase):
                         self.ds.x_test, self.ds.y_test)
 
     def checkpoint_arrays(self):
-        return {"student": self.sp_global, "teachers": self.tp_k,
-                "t_opts": self.ts_k}
+        arrs = {"student": self.sp_global, "teachers": self.tp_k,
+                "t_opts": self.ts_k,
+                "labels": jnp.asarray(self.labels, jnp.int32)}
+        if self.centroids is not None:
+            arrs["centroids"] = jnp.asarray(self.centroids, jnp.float32)
+        return arrs
 
     def restore_arrays(self, arrays):
         self.sp_global = arrays["student"]
         self.tp_k = arrays["teachers"]
         self.ts_k = arrays["t_opts"]
+        if "centroids" in arrays:
+            self.centroids = np.asarray(arrays["centroids"])
+        self._rebuild_structures(np.asarray(arrays["labels"]))
+        self._post_lifecycle()
 
     def history_extras(self):
         return {"num_clusters": self.K, "pack": self.scheduler.pack,

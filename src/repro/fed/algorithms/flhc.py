@@ -7,6 +7,14 @@ shared ``RoundDriver``, which gives FL+HC what the inlined implementation
 never had: partial participation, client dropout, unified acc+loss
 progress reporting, and checkpoint/resume.
 
+Lifecycle note: FL+HC is the one algorithm WITHOUT a client-lifecycle path
+(``FedConfig`` rejects join_schedule/leave_rate/recluster_every for it at
+construction): its cluster assignment is a function of every client's
+FIRST-round model update, so a mid-run joiner has no update to cluster —
+re-clustering would mean re-running the full pre-round, which is the
+run's round 1 by definition.  The stats-based strategies re-cluster from
+shareable statistics instead (DESIGN.md §11).
+
 Resume note: ``setup`` re-runs the (deterministic) pre-round on restart —
 the cluster assignment must be recomputed to rebuild the scheduler and to
 re-validate the checkpoint fingerprint against silent data/config drift,

@@ -1,4 +1,4 @@
-"""RoundDriver: the ONE federated round skeleton (DESIGN.md §10).
+"""RoundDriver: the ONE federated round skeleton (DESIGN.md §10, §11).
 
 Every algorithm runs through this driver, which owns exactly the things
 that used to be triplicated across the clustered-KD, fedavg/fedprox, and
@@ -6,16 +6,25 @@ sharded paths of the old ``rounds.py`` monolith:
 
 - the per-round ``RoundPlan`` (participation sampling + client dropout) —
   pulled from the strategy's ``RoundScheduler``;
+- the client lifecycle (``fed/lifecycle.py``): deterministic join/leave
+  events and the re-clustering cadence.  On an event round the driver hands
+  the strategy the new roster (``Algorithm.apply_lifecycle``) BEFORE
+  planning, and records the evolving cluster assignment in the history's
+  ``labels_history`` (one ``[round, labels]`` entry per re-clustering);
 - eval/record: after every round, acc AND loss on the test set, printed
   identically for every algorithm under ``progress=True``;
 - the running history (one schema for all algorithms/engines, plus the
-  strategy's ``history_extras`` and per-round ``run_round`` metrics);
+  strategy's ``history_extras`` and per-round ``run_round`` metrics).
+  Per-round metric lists stay ROUND-ALIGNED even when a strategy emits a
+  metric only in some rounds (e.g. re-cluster metrics): rounds without the
+  metric get an explicit ``None`` entry;
 - checkpoint/save/resume (`fed/fedstate.py`, DESIGN.md §9): the SINGLE
   copy of the save-cadence, restore, fingerprint-validation and
   skip-warmup-on-resume logic.  Resumed runs are bit-identical to
-  uninterrupted ones for every checkpointable algorithm
-  (tests/test_fault_tolerance.py covers a clustered-KD run on both
-  engines, a baseline, and FL+HC).
+  uninterrupted ones for every checkpointable algorithm — including across
+  a re-clustering boundary, because lifecycle events replay from (seed,
+  round) and the evolved labels/centroids ride the checkpoint arrays
+  (tests/test_fault_tolerance.py, tests/test_lifecycle.py).
 
 The driver is engine-agnostic: strategies hide whether a round is a Python
 loop over clients or one jitted collective program on the packed mesh.
@@ -26,6 +35,18 @@ import jax
 
 from repro.data.pipeline import make_client_shards
 from repro.fed import fedstate
+from repro.fed.lifecycle import ClientLifecycle
+
+# History keys the driver appends itself (or that are not one-entry-per-
+# round); everything else list-valued is a per-round metric and must stay
+# round-aligned by _append_metrics.
+_NON_METRIC_KEYS = frozenset({"acc", "loss", "round", "participants",
+                              "labels_history"})
+
+# Bumped whenever the fingerprint schema changes meaning: v2 added ``pack``,
+# ``k_range`` and the lifecycle knobs — a v1 checkpoint resuming under code
+# that would silently run a different slot layout must refuse instead.
+FINGERPRINT_VERSION = 2
 
 
 def fingerprint(cfg, labels=None) -> dict:
@@ -34,15 +55,23 @@ def fingerprint(cfg, labels=None) -> dict:
     resumed tail a DIFFERENT run — sampling identity, data/model identity,
     and training hyperparameters.  Deliberately absent: ``rounds`` (resuming
     with a higher target is the point) and ``ckpt_every``/``ckpt_keep``
-    (cadence is not identity).  ``labels`` (the cluster assignment) is
-    recomputed deterministically at startup, so comparing it also catches
-    silent data/config drift between save and resume."""
-    fp = {"algorithm": cfg.algorithm, "engine": cfg.engine,
+    (cadence is not identity).  ``labels`` (the INITIAL cluster assignment)
+    is recomputed deterministically at startup, so comparing it also catches
+    silent data/config drift between save and resume; labels evolved by
+    lifecycle re-clustering live in the checkpoint ARRAYS instead."""
+    fp = {"fingerprint_version": FINGERPRINT_VERSION,
+          "algorithm": cfg.algorithm, "engine": cfg.engine,
           "seed": cfg.seed, "num_clients": cfg.num_clients,
           "alpha": cfg.alpha, "num_clusters": cfg.num_clusters,
           "participation": cfg.participation,
           "clients_per_round": cfg.clients_per_round,
           "dropout_rate": cfg.dropout_rate,
+          # pack changes the packed-mesh slot layout (and with it the
+          # collective numerics): a pack=4 checkpoint silently resuming
+          # under pack=1 is a different run
+          "pack": cfg.pack,
+          "join_schedule": cfg.join_schedule, "leave_rate": cfg.leave_rate,
+          "recluster_every": cfg.recluster_every,
           "local_epochs": cfg.local_epochs, "batch_size": cfg.batch_size,
           "lr": cfg.lr, "student_lr": cfg.student_lr,
           "kd_temperature": cfg.kd_temperature, "kd_alpha": cfg.kd_alpha,
@@ -51,6 +80,9 @@ def fingerprint(cfg, labels=None) -> dict:
           "teacher_data": cfg.teacher_data,
           "cluster_weighting": cfg.cluster_weighting,
           "dp_noise": cfg.dp_noise}
+    if cfg.num_clusters is None:
+        # with metric-voted K the sweep bounds decide the cluster count
+        fp["k_range"] = cfg.k_range
     if labels is not None:
         fp["labels"] = [int(l) for l in labels]
     return fp
@@ -68,6 +100,8 @@ class RoundDriver:
         alg.progress = self.progress
         shards = make_client_shards(ds, cfg.num_clients, cfg.alpha,
                                     seed=cfg.seed)
+        lc = ClientLifecycle.from_config(cfg)
+        alg.lifecycle = lc
         alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))
         fp = fingerprint(cfg, labels=alg.labels)
 
@@ -75,6 +109,8 @@ class RoundDriver:
                    "algorithm": cfg.algorithm, "engine": cfg.engine,
                    "participation": cfg.participation,
                    "dropout_rate": cfg.dropout_rate}
+        if lc is not None and alg.labels is not None:
+            history["labels_history"] = [[0, [int(l) for l in alg.labels]]]
         history.update(alg.history_extras())
 
         # ---- resume-or-warmup: a checkpoint's state already includes the
@@ -102,16 +138,46 @@ class RoundDriver:
             start_round = min(alg.setup_rounds, cfg.rounds)
 
         for rnd in range(start_round + 1, cfg.rounds + 1):
+            metrics = {}
+            if lc is not None:
+                ev = lc.event(rnd)
+                if ev.recluster:
+                    metrics.update(alg.apply_lifecycle(ev) or {})
+                    if alg.labels is not None:
+                        history["labels_history"].append(
+                            [rnd, [int(l) for l in alg.labels]])
+                    if self.progress and ev.changed:
+                        print(f"  round {rnd:3d}  lifecycle: "
+                              f"+{len(ev.joins)} joined, "
+                              f"-{len(ev.leaves)} left, "
+                              f"{int(ev.active.sum())} active")
             plan = alg.scheduler.plan(rnd)
-            metrics = alg.run_round(plan, rnd)
-            for k, v in metrics.items():
-                history.setdefault(k, []).append(v)
+            metrics.update(alg.run_round(plan, rnd))
+            self._append_metrics(history, metrics)
             history["participants"].append(int(plan.active.sum()))
             self._record(history, rnd)
             self._save(history, fp, rnd)
         return history
 
     # ------------------------------------------------------------ internals
+    def _append_metrics(self, history, metrics):
+        """Append this round's metrics, keeping every per-round metric list
+        the same length: a metric a strategy emits only in SOME rounds (a
+        re-cluster metric, say) gets explicit ``None`` entries for the
+        others, instead of silently compacting against earlier rounds."""
+        # run_round records so far = recorded rounds minus setup's own
+        # evals (FL+HC's clustering pre-round never calls run_round)
+        n_prev = max(0, len(history["round"])
+                     - min(self.alg.setup_rounds, self.cfg.rounds))
+        keys = set(metrics) | {k for k, v in history.items()
+                               if k not in _NON_METRIC_KEYS
+                               and isinstance(v, list)}
+        for k in sorted(keys):
+            lst = history.setdefault(k, [])
+            if len(lst) < n_prev:
+                lst.extend([None] * (n_prev - len(lst)))
+            lst.append(metrics.get(k))
+
     def _record(self, history, rnd):
         acc, loss = self.alg.eval()
         history["acc"].append(acc)

@@ -8,9 +8,16 @@ between-round state of a federated run and its on-disk format, built on
 
 - ``FedState`` — everything a resumed run needs: the array pytree (global
   student + per-cluster teachers + teacher optimizer states, in whichever
-  layout the engine keeps canonical state), the number of completed rounds,
-  the running history, and a JSON ``meta`` fingerprint of the run
-  configuration (seed, algorithm, engine, cluster labels, ...).
+  layout the engine keeps canonical state — plus, since the lifecycle
+  subsystem, the CURRENT cluster labels/centroids: re-clustering evolves
+  them past what setup can recompute, DESIGN.md §11), the number of
+  completed rounds, the running history (whose ``labels_history`` entry
+  records the full ``[round, labels]`` re-clustering timeline), and a JSON
+  ``meta`` fingerprint of the run configuration (seed, algorithm, engine,
+  INITIAL cluster labels, lifecycle knobs, ...).  The fingerprint carries a
+  ``fingerprint_version`` (fed/driver.py) so checkpoints written under an
+  older fingerprint schema refuse to resume instead of silently passing a
+  weaker identity check.
 - ``save_round`` — one ``round_NNNNN.npz`` + ``.meta.json`` pair per
   checkpointed round under ``ckpt_dir``; history and fingerprint ride in
   the meta JSON, arrays in the npz.

@@ -64,6 +64,21 @@ class FedConfig:
     # Client lanes per device in the sharded engine: C = devices x pack
     # clients run in one jitted program (ignored by the loop engine).
     pack: int = 1
+    # Client lifecycle (fed/lifecycle.py, DESIGN.md §11).  ``num_clients``
+    # stays the FULL client universe; lifecycle knobs control who is online:
+    #   join_schedule   — ((round, count), ...): count clients come online at
+    #                     the start of that round (ids dealt from the top of
+    #                     the universe, so the initial roster is the low ids)
+    #   leave_rate      — per-round probability an active client leaves FOR
+    #                     GOOD (vs dropout_rate's transient one-round failure)
+    #   recluster_every — also re-cluster every N rounds (0: only on
+    #                     membership events)
+    # Any knob on => the driver re-clusters on every membership change,
+    # warm-starting k-means from the previous centroids and migrating each
+    # cluster's teacher from the nearest surviving centroid's teacher.
+    join_schedule: Optional[tuple] = None
+    leave_rate: float = 0.0
+    recluster_every: int = 0
     num_clients: int = 40
     alpha: float = 0.5                # Dirichlet skew
     rounds: int = 5
@@ -158,6 +173,34 @@ class FedConfig:
                 f"ckpt_keep must be >= 1 or None, got {self.ckpt_keep}")
         if self.resume and not self.ckpt_dir:
             raise ValueError("resume=True needs ckpt_dir")
+        # lifecycle knobs (fed/lifecycle.py validates the schedule's shape;
+        # normalising here keeps the fingerprint canonical)
+        from repro.fed.lifecycle import normalize_join_schedule
+        self.join_schedule = normalize_join_schedule(self.join_schedule)
+        if not 0.0 <= self.leave_rate < 1.0:
+            raise ValueError(
+                f"leave_rate must be in [0, 1), got {self.leave_rate}")
+        if self.recluster_every < 0:
+            raise ValueError(
+                f"recluster_every must be >= 0, got {self.recluster_every}")
+        if self.lifecycle_enabled:
+            if self.algorithm == "flhc":
+                raise ValueError(
+                    "algorithm='flhc' clusters once on a pre-round of local "
+                    "updates and has no re-clustering path; lifecycle knobs "
+                    "(join_schedule/leave_rate/recluster_every) need "
+                    "fedsikd | random | fedavg | fedprox")
+            total = sum(c for _, c in self.join_schedule or ())
+            if total >= self.num_clients:
+                raise ValueError(
+                    f"join_schedule brings in {total} clients but "
+                    f"num_clients={self.num_clients}; at least one client "
+                    f"must be present from round 1")
+
+    @property
+    def lifecycle_enabled(self) -> bool:
+        return bool(self.join_schedule) or self.leave_rate > 0 \
+            or self.recluster_every > 0
 
 
 def run_federated(ds: Dataset, cfg: FedConfig, *, progress: bool = False) -> dict:

@@ -149,7 +149,11 @@ class RoundScheduler:
 
     Parameters
     ----------
-    cluster_of : (C,) cluster label per client (any hashable labels).
+    cluster_of : (C,) integer cluster label per client (values need not be
+        contiguous).  A NEGATIVE label marks a client that is not currently
+        part of the roster (not yet joined, or permanently left —
+        ``fed/lifecycle.py``); such clients belong to no group and are
+        never sampled.
     participation : ``full`` (everyone, every round), ``uniform``
         (``clients_per_round`` sampled uniformly without replacement), or
         ``stratified`` (per-cluster proportional allocation with a floor of
@@ -171,10 +175,19 @@ class RoundScheduler:
                  weighting: str = "size", dropout_rate: float = 0.0,
                  seed: int = 0):
         labels = np.asarray(cluster_of)
-        self.n_clients = len(labels)
-        uniq = np.unique(labels)
-        # cluster INDEX (0..K-1) per client — the one id space plans use
-        self.cluster_idx = np.searchsorted(uniq, labels).astype(np.int32)
+        member = labels >= 0
+        self.client_ids = np.flatnonzero(member)   # the active roster
+        self.n_clients = len(self.client_ids)
+        if self.n_clients == 0:
+            raise ValueError("scheduler needs at least one active client "
+                             "(every label is negative)")
+        uniq = np.unique(labels[member])
+        # cluster INDEX (0..K-1) per client — the one id space plans use;
+        # off-roster clients keep -1 and belong to no group
+        cluster_idx = np.full(len(labels), -1, np.int32)
+        cluster_idx[member] = np.searchsorted(
+            uniq, labels[member]).astype(np.int32)
+        self.cluster_idx = cluster_idx
         self.groups = [np.flatnonzero(self.cluster_idx == k)
                        for k in range(len(uniq))]
         self.n_clusters = len(self.groups)
@@ -251,7 +264,7 @@ class RoundScheduler:
             return [g.copy() for g in self.groups]
         rng = self._rng(round_index)
         if self.participation == "uniform":
-            chosen = rng.choice(self.n_clients, self.clients_per_round,
+            chosen = rng.choice(self.client_ids, self.clients_per_round,
                                 replace=False)
             return [np.sort(chosen[np.isin(chosen, g)]) for g in self.groups]
         caps = np.asarray([len(g) for g in self.groups])

@@ -29,6 +29,19 @@ from repro.models import encdec as ed
 from repro.models import transformer as tf
 
 
+def parse_join_schedule(spec):
+    """``"3:2,6:2"`` -> ((3, 2), (6, 2)): count clients join at that round."""
+    if not spec:
+        return None
+    try:
+        return tuple((int(r), int(c)) for r, c in
+                     (tok.split(":") for tok in spec.split(",")))
+    except ValueError as e:
+        raise SystemExit(
+            f"--join-schedule wants 'round:count[,round:count...]', "
+            f"got {spec!r} ({e})")
+
+
 def run_fl(args):
     ds = load_dataset(args.dataset, small=args.small)
     cfg = FedConfig(algorithm=args.algorithm, engine=args.engine,
@@ -39,6 +52,9 @@ def run_fl(args):
                     participation=args.participation,
                     clients_per_round=args.clients_per_round,
                     dropout_rate=args.dropout_rate,
+                    join_schedule=parse_join_schedule(args.join_schedule),
+                    leave_rate=args.leave_rate,
+                    recluster_every=args.recluster_every,
                     # --ckpt doubles as the round-checkpoint dir: a killed
                     # run restarts with --resume (fed/fedstate.py)
                     ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
@@ -121,6 +137,15 @@ def main():
     fl.add_argument("--clients-per-round", type=int, default=None)
     fl.add_argument("--dropout-rate", type=float, default=0.0,
                     help="per-round client failure probability")
+    fl.add_argument("--join-schedule", default=None,
+                    help="client lifecycle: 'round:count,...' clients come "
+                         "online at that round (fed/lifecycle.py)")
+    fl.add_argument("--leave-rate", type=float, default=0.0,
+                    help="per-round probability an active client leaves "
+                         "FOR GOOD (vs --dropout-rate's one-round failure)")
+    fl.add_argument("--recluster-every", type=int, default=0,
+                    help="also re-cluster every N rounds (0: only on "
+                         "join/leave events)")
     fl.add_argument("--small", action="store_true")
     fl.add_argument("--seed", type=int, default=0)
     fl.add_argument("--ckpt", default=None,

@@ -102,6 +102,112 @@ def test_silhouette_empty_cluster_stays_finite():
     assert all(np.isfinite(row["silhouette"]) for row in table.values())
 
 
+def test_plus_plus_zero_mass_falls_back_to_uniform():
+    """Regression: with duplicate stats rows (identical clients, or heavy DP
+    clipping), every point can sit exactly on an already-chosen centroid —
+    all candidate distances are 0 and the old ``d / max(d.sum(), eps)``
+    handed ``jax.random.choice`` an all-zero probability vector, which
+    degenerates to always picking index 0.  The fix samples uniformly."""
+    from repro.core.kmeans import _plus_plus_init
+    # rows: one copy of A at index 0, then 15 copies of B.  After picking
+    # both distinct values, the 3rd draw has zero mass everywhere: the old
+    # code then ALWAYS took x[0] == A; uniform sampling almost surely picks
+    # a B row within a handful of keys.
+    x = jnp.asarray(np.concatenate([np.zeros((1, 3)),
+                                    np.ones((15, 3))]), jnp.float32)
+    third_is_b = []
+    for t in range(16):
+        cents = np.asarray(_plus_plus_init(jax.random.PRNGKey(t), x, 3, 3))
+        assert np.isfinite(cents).all()
+        counts = {0.0: 0, 1.0: 0}
+        for row in cents:
+            counts[float(row[0])] += 1
+        third_is_b.append(counts[1.0] == 2)     # the duplicate slot chose B
+    assert any(third_is_b), "zero-mass fallback still always picks index 0"
+    # and end-to-end: k-means on fully duplicated rows stays finite
+    res = kmeans.kmeans(jax.random.PRNGKey(0), jnp.ones((6, 4)), 3)
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    assert float(res.inertia) == 0.0
+
+
+def test_select_k_degenerates_gracefully_below_k_min():
+    """Regression: for N <= k_min the sweep list was empty and the metric
+    vote crashed with an opaque ``max() arg is an empty sequence`` — the
+    2-3-client edge a shrinking lifecycle roster can reach."""
+    two = jnp.asarray(np.random.default_rng(0).normal(size=(2, 4)),
+                      jnp.float32)
+    k, table = kmeans.select_k(jax.random.PRNGKey(0), two, 2, 8)
+    assert k == 1 and 1 in table
+    assert np.isfinite(table[1]["inertia"])
+    # N == 3 still sweeps K=2 normally
+    three = jnp.asarray(np.random.default_rng(1).normal(size=(3, 4)),
+                        jnp.float32)
+    k3, table3 = kmeans.select_k(jax.random.PRNGKey(0), three, 2, 8)
+    assert k3 == 2 and list(table3) == [2]
+    with pytest.raises(ValueError, match="at least one point"):
+        kmeans.select_k(jax.random.PRNGKey(0), jnp.zeros((0, 4)), 2, 8)
+    # an inverted sweep range is a config typo, not a small-roster edge —
+    # it must fail loudly instead of quietly degrading to K=1
+    with pytest.raises(ValueError, match="k_max"):
+        kmeans.select_k(jax.random.PRNGKey(0), three, 5, 2)
+
+
+def test_kmeans_warm_start_refines_previous_centroids():
+    rng = np.random.default_rng(4)
+    a = rng.normal(0, 0.3, (20, 4))
+    b = rng.normal(5, 0.3, (20, 4))
+    x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    cold = kmeans.kmeans(jax.random.PRNGKey(0), x, 2, iters=30)
+    # perturb the converged centroids, warm-start: same partition comes back
+    warm = kmeans.kmeans_warm(x, cold.centroids + 0.05, iters=30)
+    np.testing.assert_array_equal(np.asarray(warm.assignments),
+                                  np.asarray(cold.assignments))
+    np.testing.assert_allclose(np.asarray(warm.centroids),
+                               np.asarray(cold.centroids), atol=1e-4)
+    # and it is deterministic (no seeding pass at all)
+    again = kmeans.kmeans_warm(x, cold.centroids + 0.05, iters=30)
+    np.testing.assert_array_equal(np.asarray(warm.centroids),
+                                  np.asarray(again.centroids))
+
+
+def test_batched_moments_match_per_client_stats():
+    """The lifecycle front-end's one-program segment reduction must agree
+    with the sequential per-client ``compute_stats`` loop."""
+    rng = np.random.default_rng(7)
+    sizes = [33, 80, 12]
+    xs = [rng.normal(i, 1.0 + i, size=(n, 5)).astype(np.float32)
+          for i, n in enumerate(sizes)]
+    mean, std, skew = stats.batched_moments(
+        jnp.asarray(np.concatenate(xs)),
+        jnp.asarray(np.repeat(np.arange(3), sizes)), num_segments=3)
+    for i, x in enumerate(xs):
+        ref = stats.compute_stats(x)
+        np.testing.assert_allclose(mean[i], ref.mean, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(std[i], ref.std, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(skew[i], ref.skewness, rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_privatize_batched_matches_per_client_privatize():
+    rng = np.random.default_rng(9)
+    mats = [rng.normal(size=(4,)).astype(np.float32) for _ in range(9)]
+    mean, std, skew = (jnp.stack(mats[0:3]), jnp.abs(jnp.stack(mats[3:6])),
+                       jnp.stack(mats[6:9]))
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), i)
+                      for i in range(3)])
+    bm, bs, bg = stats.privatize_batched(mean, std, skew,
+                                         noise_multiplier=0.5, keys=keys)
+    for i in range(3):
+        ref = stats.privatize(
+            stats.ClientStats(mean[i], std[i], skew[i]),
+            noise_multiplier=0.5, key=keys[i])
+        # same per-client PRNG streams; values agree to f32 rounding (XLA
+        # may fuse the vmapped arithmetic differently than the scalar path)
+        np.testing.assert_allclose(bm[i], ref.mean, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(bs[i], ref.std, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(bg[i], ref.skewness, rtol=1e-6, atol=1e-6)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_kmeans_permutation_invariant_inertia(seed):

@@ -34,6 +34,21 @@ def test_min_per_client_respected():
     assert min(len(p) for p in parts) >= 8
 
 
+def test_infeasible_min_per_client_raises_not_silently_returns():
+    """Regression: when all 100 retries failed the min_per_client check the
+    partitioner silently returned the LAST attempt's shards — downstream
+    training then crashed (or worse, trained) on a near-empty client.  At
+    extreme skew with more clients than examples-per-min the draw is
+    infeasible and must refuse, naming the numbers that make it so."""
+    labels = np.random.default_rng(5).integers(0, 10, 100)
+    # 100 examples / 50 clients = 2 each on average << min_per_client=8
+    with pytest.raises(ValueError, match=r"alpha=0.01.*num_clients=50"):
+        dirichlet_partition(labels, 50, 0.01, seed=0, min_per_client=8)
+    # feasible settings still return a partition, not an error
+    parts = dirichlet_partition(labels, 2, 10.0, seed=0, min_per_client=8)
+    assert sum(len(p) for p in parts) == 100
+
+
 def test_twins_shapes_and_determinism():
     a = make_mnist_twin(n_train=200, n_test=50, seed=7)
     b = make_mnist_twin(n_train=200, n_test=50, seed=7)

@@ -76,6 +76,42 @@ def test_resume_refuses_changed_hyperparameters(tmp_path):
     assert h["round"] == [1, 2]
 
 
+def test_fingerprint_covers_pack_and_k_range(tmp_path):
+    """Regression: ``pack`` was absent from the fingerprint, so a run
+    checkpointed at pack=4 silently resumed under pack=1 — a different
+    packed-mesh slot layout and different collective numerics.  Same for
+    ``k_range`` when the cluster count is metric-voted (num_clusters=None):
+    a different sweep bound can choose a different K."""
+    from repro.fed.driver import fingerprint
+    cfg4 = FedConfig(engine="sharded", pack=4, num_clients=8)
+    assert fingerprint(cfg4)["pack"] == 4
+    assert fingerprint(cfg4)["k_range"] == (2, 5)       # num_clusters=None
+    assert "k_range" not in fingerprint(FedConfig(num_clusters=3))
+    arrays = {"student": {"w": jnp.zeros(2)}}
+    fedstate.save_round(tmp_path, fedstate.FedState(
+        round_index=1, arrays=arrays, history={}, meta=fingerprint(cfg4)))
+    cfg1 = FedConfig(engine="sharded", pack=1, num_clients=8)
+    with pytest.raises(ValueError, match="pack"):
+        fedstate.restore_run(tmp_path, arrays, expect_meta=fingerprint(cfg1))
+    with pytest.raises(ValueError, match="k_range"):
+        fedstate.restore_run(
+            tmp_path, arrays,
+            expect_meta=fingerprint(FedConfig(engine="sharded", pack=4,
+                                              num_clients=8,
+                                              k_range=(2, 8))))
+    # ...and end-to-end: a loop fedsikd run refuses a changed k_range
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedsikd", num_clients=4, alpha=1.0, rounds=1,
+                  local_epochs=1, teacher_warmup_epochs=0, batch_size=64,
+                  k_range=(2, 3), seed=5)
+    d = str(tmp_path / "ck")
+    run_federated(ds, FedConfig(**common, ckpt_dir=d))
+    with pytest.raises(ValueError, match="k_range"):
+        run_federated(ds, FedConfig(**{**common, "k_range": (2, 4),
+                                       "rounds": 2},
+                                    ckpt_dir=d, resume=True))
+
+
 def test_restore_refuses_mismatched_fingerprint(tmp_path):
     arrays = {"student": {"w": jnp.zeros(2)}}
     fedstate.save_round(tmp_path, fedstate.FedState(

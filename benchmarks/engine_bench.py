@@ -48,7 +48,9 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  kd_impl: str = "fused", rounds: int = 3,
                  participation: str = "full",
                  clients_per_round=None, dropout_rate: float = 0.0,
-                 join_schedule=None, recluster_every: int = 0) -> dict:
+                 join_schedule=None, recluster_every: int = 0,
+                 async_mode: bool = False, straggler_frac: float = 0.0,
+                 max_staleness: int = 2) -> dict:
     cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
@@ -56,7 +58,9 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                     clients_per_round=clients_per_round,
                     dropout_rate=dropout_rate,
                     join_schedule=join_schedule,
-                    recluster_every=recluster_every, seed=0)
+                    recluster_every=recluster_every,
+                    async_mode=async_mode, straggler_frac=straggler_frac,
+                    max_staleness=max_staleness, seed=0)
     t0 = time.perf_counter()
     h = run_federated(ds, cfg)
     total = time.perf_counter() - t0
@@ -68,6 +72,7 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
     churn = ("-" if not cfg.lifecycle_enabled else
              "+".join([f"j{r}:{c}" for r, c in cfg.join_schedule or ()]
                       + ([f"re{recluster_every}"] if recluster_every else [])))
+    asyn = (f"f{straggler_frac:.1f}/s{max_staleness}" if async_mode else "-")
     return {"engine": engine, "algorithm": algorithm,
             "kd_impl": kd_impl if algorithm in ("fedsikd", "random") else "-",
             "clients": clients,
@@ -75,7 +80,9 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
             "participation": participation,
             "clients_per_round": clients_per_round,
             "dropout_rate": dropout_rate,
-            "churn": churn,
+            "churn": churn, "async": asyn,
+            "stale_merged": sum(h.get("stale_merged", [])),
+            "stale_dropped": sum(h.get("stale_dropped", [])),
             "rounds": rounds, "total_s": round(total, 3),
             "rerun_s_per_round": round(rerun / rounds, 4),
             "final_acc": h2["acc"][-1], "acc_curve": h["acc"]}
@@ -108,6 +115,10 @@ def main():
             # churn scenario smoke: one join event + a periodic re-cluster
             bench_engine(ds, "loop", clients=8, rounds=max(rounds, 2),
                          join_schedule=((2, 2),), recluster_every=2),
+            # semi-async smoke: stragglers buffered + staleness-merged
+            bench_engine(ds, "sharded", clients=8, pack=2,
+                         rounds=max(rounds, 2), async_mode=True,
+                         straggler_frac=0.4),
         ]
     else:
         rounds = args.rounds or 3
@@ -153,21 +164,32 @@ def main():
             bench_engine(ds, "sharded", clients=32, pack=4,
                          rounds=max(rounds, 6),
                          join_schedule=((3, 4), (6, 4)), recluster_every=3),
+            # semi-async rounds (DESIGN.md §12): 40% stragglers under the
+            # bounded-staleness buffer, on both engines — tracks the cost
+            # of the split merge (host-side add_scaled folds) against the
+            # synchronous rows above
+            bench_engine(ds, "loop", clients=32, rounds=max(rounds, 4),
+                         async_mode=True, straggler_frac=0.4),
+            bench_engine(ds, "sharded", clients=32, pack=4,
+                         rounds=max(rounds, 4),
+                         async_mode=True, straggler_frac=0.4),
         ]
 
     print(f"{'engine':8s} {'alg':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
-          f"{'part':>10s} {'drop':>5s} {'churn':>13s} {'cold total':>11s} "
-          f"{'rerun s/round':>14s} {'final acc':>10s}")
+          f"{'part':>10s} {'drop':>5s} {'churn':>13s} {'async':>9s} "
+          f"{'cold total':>11s} {'rerun s/round':>14s} {'final acc':>10s}")
     for r in rows:
         print(f"{r['engine']:8s} {r['algorithm']:8s} {r['kd_impl']:10s} "
               f"{r['clients']:3d} "
               f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
               f"{r['dropout_rate']:5.2f} {r['churn']:>13s} "
+              f"{r['async']:>9s} "
               f"{r['total_s']:10.1f}s {r['rerun_s_per_round']:13.2f}s "
               f"{r['final_acc']:10.3f}")
     spread = [r["final_acc"] for r in rows
               if r["clients"] == 8 and r["participation"] == "full"
-              and r["algorithm"] == "fedsikd" and r["churn"] == "-"]
+              and r["algorithm"] == "fedsikd" and r["churn"] == "-"
+              and r["async"] == "-"]
     if len(spread) > 1:
         print(f"engine agreement (C=8, full): max final-acc spread "
               f"{max(spread) - min(spread):.4f}")

@@ -4,6 +4,14 @@ FedAvg:        w_g = sum_i (d_i / d) w_i                        (McMahan '17)
 FedSiKD (Alg. 1, lines 16-18):
                wbar_k = (1/|C_k|) sum_{i in C_k} w_i
                w_g    = (1/K)    sum_k          wbar_k
+Staleness (semi-async rounds, DESIGN.md §12): an update computed against
+the round-r global model but merged at round r + s contributes with its
+base weight decayed polynomially,
+               w_i(s) ∝ base_i * (1 + s)^(-a)
+renormalised over the round's contributing updates — the standard bounded-
+staleness rule (FedAsync / async-FL literature), composed with whatever
+base weights the algorithm already uses (plan weights or example counts).
+``s = 0`` for every contributor reduces exactly to the synchronous rule.
 
 All operators act on arbitrary parameter pytrees.
 """
@@ -60,6 +68,56 @@ def hierarchical_average(params: Sequence, cluster_of: Sequence[int],
         raise ValueError(
             f"weighting must be 'uniform' or 'size', got {weighting!r}")
     return weighted_average(cluster_means, [float(s) for s in sizes])
+
+
+def staleness_factor(staleness, decay: float):
+    """Polynomial staleness decay ``(1 + s)^(-decay)`` — 1.0 at ``s = 0``
+    for any decay, and flat (1.0 everywhere) at ``decay = 0``."""
+    s = np.asarray(staleness, np.float64)
+    if np.any(s < 0):
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if decay < 0:
+        raise ValueError(f"staleness decay must be >= 0, got {decay}")
+    return (1.0 + s) ** (-decay)
+
+
+def staleness_weights(base_weights, staleness, decay: float) -> np.ndarray:
+    """Normalised merge weights for one round's contributing updates: each
+    base weight decayed by its update's staleness, renormalised to sum to 1
+    (the survivor renormalisation the schedule already applies to sampling
+    and dropout, extended to late arrivals).  All-``s=0`` contributions
+    whose base weights already sum to 1 come back unchanged up to float
+    rounding; an empty contribution set returns an empty array."""
+    w = np.asarray(base_weights, np.float64)
+    if w.size == 0:
+        return w.astype(np.float32)
+    if np.any(w < 0):
+        raise ValueError(f"base weights must be >= 0, got {base_weights}")
+    w = w * staleness_factor(staleness, decay)
+    total = w.sum()
+    if total <= 0:
+        raise ValueError("no contributing update has positive weight")
+    return (w / total).astype(np.float32)
+
+
+def staleness_weighted_average(params: Sequence, base_weights,
+                               staleness, *, decay: float):
+    """Bounded-staleness merge: ``weighted_average`` under the decayed,
+    renormalised weights (loop engines; the packed engines split the same
+    weights between the on-mesh contraction row and the host-side stale
+    additions — fed/algorithms/)."""
+    return weighted_average(params,
+                            staleness_weights(base_weights, staleness, decay))
+
+
+def add_scaled(acc, params, scale: float):
+    """``acc + scale * params`` over pytrees (float32 accumulation, cast
+    back to each leaf's dtype) — how the packed engines fold host-buffered
+    stale updates into the program's on-time aggregate."""
+    return jax.tree_util.tree_map(
+        lambda a, p: (a.astype(jnp.float32)
+                      + scale * p.astype(jnp.float32)).astype(a.dtype),
+        acc, params)
 
 
 def tree_sub(a, b):

@@ -40,6 +40,18 @@ driver sets ``alg.lifecycle`` BEFORE ``setup`` (so setup clusters the
 initial roster only) and calls ``apply_lifecycle(event)`` at the start of
 every event round — the strategy re-clusters/migrates state and rebuilds
 its ``scheduler`` for the new roster, returning per-round metrics.
+
+Semi-async hook (DESIGN.md §12): with ``cfg.async_mode`` on, the driver
+sets ``alg.buffer`` (the one ``StalenessBuffer``) after setup and
+``alg.arrivals`` (this round's due updates) before each ``run_round``.  A
+strategy then (a) excludes the plan's straggler participants from the
+round's merge, pushing their trained updates into the buffer with their
+birth-round base weight, and (b) merges on-time updates together with the
+arrivals under the staleness-decayed weights — via ``staleness_merge`` on
+the loop engines, or ``packed_async_row``'s split (on-mesh contraction row
++ host-side ``add_scaled`` factors) on the packed engines.  With no
+stragglers and no arrivals the strategies take their synchronous fast
+path, bit-identical to ``async_mode=False``.
 """
 from __future__ import annotations
 
@@ -49,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aggregation as agg
 from repro.data.pipeline import ClientShard
 from repro.fed.lifecycle import ClientLifecycle, LifecycleEvent
 from repro.fed.schedule import RoundPlan, RoundScheduler
@@ -66,6 +79,9 @@ class Algorithm:
     # set by the driver before setup():
     progress: bool = False
     lifecycle: Optional[ClientLifecycle] = None
+    # semi-async (driver-set; None/() when cfg.async_mode is off):
+    buffer = None            # the driver's StalenessBuffer
+    arrivals: tuple = ()     # AsyncUpdates merging this round
 
     def setup(self, ds, shards: list[ClientShard], cfg, key) -> None:
         raise NotImplementedError
@@ -121,6 +137,43 @@ class Algorithm:
         """Algorithm-specific history fields (scalars, or [] lists that
         ``run_round`` metrics append into)."""
         return {}
+
+
+# -------------------------------------------------- shared semi-async helpers
+def staleness_merge(on_params, on_weights, arrivals, decay: float):
+    """One round's merged global model on a LOOP engine: the on-time updates
+    (staleness 0) and the buffered ``arrivals`` combined under the decayed,
+    renormalised weights of ``aggregation.staleness_weights``.  The caller
+    guarantees the merge set is non-empty."""
+    params = list(on_params) + [u.params for u in arrivals]
+    base = list(on_weights) + [float(u.weight) for u in arrivals]
+    stale = [0] * len(on_params) + [u.staleness for u in arrivals]
+    return agg.staleness_weighted_average(params, base, stale, decay=decay)
+
+
+def packed_async_row(w_slot, on_time, arrivals, decay: float):
+    """The PACKED engines' split of the same merge: ``(row, scales)`` where
+    ``row`` is the (S,) on-mesh contraction row (on-time slots' base weights
+    over the grand total) and ``scales`` are the per-arrival host-side
+    ``aggregation.add_scaled`` factors (decayed weight over the same total).
+    Works because ``cluster_collectives.packed_weighted_mean`` computes the
+    UNNORMALISED sum ``sum_i row_i x_i`` — the program contracts the on-time
+    lanes, the host folds the arrivals, and together they reproduce
+    ``staleness_weights`` exactly (stale lanes are zero-weighted, so the
+    fixed-shape program never recompiles)."""
+    w = np.where(np.asarray(on_time), np.asarray(w_slot, np.float64), 0.0)
+    f = agg.staleness_factor([u.staleness for u in arrivals], decay)
+    total = w.sum() + sum(float(u.weight) * float(fi)
+                          for u, fi in zip(arrivals, f))
+    scales = [float(u.weight) * float(fi) / total
+              for u, fi in zip(arrivals, f)]
+    return (w / total).astype(np.float32), scales
+
+
+def merge_arrivals_only(arrivals, decay: float):
+    """A round with arrivals but NO on-time participant (every invitee a
+    straggler or a dropout): the merge is the arrivals alone."""
+    return staleness_merge([], [], arrivals, decay)
 
 
 # ------------------------------------------------ shared loop-engine helpers

@@ -28,7 +28,10 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.fed import schedule
-from repro.fed.algorithms.base import Algorithm, local_epochs, tree_copy
+from repro.fed.algorithms.base import (Algorithm, local_epochs,
+                                       merge_arrivals_only, packed_async_row,
+                                       staleness_merge, tree_copy)
+from repro.fed.driver import AsyncUpdate
 from repro.fed.client import evaluate, make_steps
 from repro.models.cnn import make_model
 from repro.optim import adamw
@@ -70,7 +73,10 @@ class _BaselineBase(Algorithm):
         return schedule.RoundScheduler(
             labels, participation=cfg.participation,
             clients_per_round=self.clamped_clients_per_round(cfg, labels),
-            dropout_rate=cfg.dropout_rate, seed=cfg.seed)
+            dropout_rate=cfg.dropout_rate, seed=cfg.seed,
+            async_mode=cfg.async_mode, round_deadline=cfg.round_deadline,
+            straggler_frac=cfg.straggler_frac,
+            latency_dist=cfg.latency_dist)
 
     def _setup_engine(self):
         pass
@@ -101,6 +107,7 @@ class LoopBaseline(_BaselineBase):
 
     def run_round(self, plan, rnd):
         cfg, key = self.cfg, self.key
+        delay_of = plan.delay_of()
         locals_, sizes = [], []
         for i in (int(i) for i in plan.participants):
             sh = self.shards[i]
@@ -115,9 +122,21 @@ class LoopBaseline(_BaselineBase):
                 p, _ = local_epochs(sh, p, o,
                                     jax.random.fold_in(key, rnd * 31 + i),
                                     cfg, step_fn=self.steps["ce"])
-            locals_.append(p)
-            sizes.append(sh.num_examples)
-        if locals_:
+            d = delay_of[i]
+            if d > 0:              # straggler: update lands d rounds late
+                self.buffer.push(AsyncUpdate(
+                    client=i, birth=rnd, arrival=rnd + d,
+                    weight=float(sh.num_examples), params=p))
+            else:
+                locals_.append(p)
+                sizes.append(sh.num_examples)
+        if self.arrivals or plan.stragglers.any():
+            # semi-async merge under staleness-decayed example weights
+            if locals_ or self.arrivals:
+                self.global_params = staleness_merge(
+                    locals_, [float(n) for n in sizes], self.arrivals,
+                    cfg.staleness_decay)
+        elif locals_:
             self.global_params = agg.fedavg(locals_, sizes)
         # else: an all-dropout round is a no-op (params unchanged)
         return {}
@@ -139,7 +158,10 @@ class PackedBaseline(_BaselineBase):
             labels, participation=cfg.participation,
             clients_per_round=self.clamped_clients_per_round(cfg, labels),
             pack=cfg.pack, n_devices=self.forced_devices(cfg),
-            dropout_rate=cfg.dropout_rate, seed=cfg.seed)
+            dropout_rate=cfg.dropout_rate, seed=cfg.seed,
+            async_mode=cfg.async_mode, round_deadline=cfg.round_deadline,
+            straggler_frac=cfg.straggler_frac,
+            latency_dist=cfg.latency_dist)
 
     def _setup_engine(self):
         from repro.fed import sharded as sh
@@ -170,18 +192,54 @@ class PackedBaseline(_BaselineBase):
             jax.random.fold_in(self.key, 40_000 + rnd), plan)
 
     def run_round(self, plan, rnd):
-        sh = self.sh
+        cfg, sh = self.cfg, self.sh
+        arrivals = self.arrivals
         if not plan.active.any():
-            return {"train_loss": 0.0}      # all invitees dropped out: no-op
+            # all invitees dropped out: no-op — unless buffered updates
+            # arrive, which merge host-side alone
+            if arrivals:
+                self.global_params = merge_arrivals_only(
+                    arrivals, cfg.staleness_decay)
+            return {"train_loss": 0.0}
+        has_async = bool(arrivals) or bool(plan.stragglers.any())
+        if not has_async:
+            row, scales = plan.example_row(self.sizes), []
+        elif plan.on_time.any() or arrivals:
+            # split merge over raw example counts: on-time lanes contract
+            # on-mesh, arrivals fold host-side (same units as the buffered
+            # entries' ``weight = num_examples``)
+            safe = np.where(plan.active, plan.slot_client, 0)
+            n_slot = np.where(plan.active, self.sizes[safe], 0)
+            row, scales = packed_async_row(n_slot, plan.on_time, arrivals,
+                                           cfg.staleness_decay)
+        else:
+            row, scales = np.zeros(self.S, np.float32), []
         p_s = sh.replicate_params(self.global_params, self.S)
         s_s = jax.vmap(self.opt.init)(p_s)  # fresh local opt (loop too)
         xs, ys = self.stager.stage(plan)
-        p_s, _s_s, loss = self.round_fn(
+        p_s, p_local, _s_s, loss = self.round_fn(
             p_s, s_s, xs, ys, jnp.asarray(plan.steps_for(self.steps_all)),
             self._slot_keys(rnd, plan),
-            jnp.asarray(plan.example_row(self.sizes)), self.global_params)
-        # every slot holds the aggregated model after the weighted mean
-        self.global_params = jax.tree_util.tree_map(lambda a: a[0], p_s)
+            jnp.asarray(row), self.global_params)
+        if not has_async:
+            # every slot holds the aggregated model after the weighted mean
+            self.global_params = jax.tree_util.tree_map(lambda a: a[0], p_s)
+            return {"train_loss": float(loss)}
+        for t in np.flatnonzero(plan.stragglers):
+            self.buffer.push(AsyncUpdate(
+                client=int(plan.slot_client[t]), birth=rnd,
+                arrival=rnd + int(plan.delays[t]),
+                weight=float(self.sizes[int(plan.slot_client[t])]),
+                params=jax.tree_util.tree_map(lambda a: a[t], p_local)))
+        if plan.on_time.any():
+            acc = jax.tree_util.tree_map(lambda a: a[0], p_s)
+            for u, sc in zip(arrivals, scales):
+                acc = agg.add_scaled(acc, u.params, sc)
+            self.global_params = acc
+        elif arrivals:
+            self.global_params = merge_arrivals_only(arrivals,
+                                                     cfg.staleness_decay)
+        # else: all-straggler round, empty buffer — params unchanged
         return {"train_loss": float(loss)}
 
     def history_extras(self):

@@ -38,7 +38,10 @@ from repro.core import aggregation as agg
 from repro.core import kmeans, stats
 from repro.fed import schedule
 from repro.fed.algorithms.base import (Algorithm, cluster_epochs,
-                                       local_epochs, tree_copy)
+                                       local_epochs, merge_arrivals_only,
+                                       packed_async_row, staleness_merge,
+                                       tree_copy)
+from repro.fed.driver import AsyncUpdate
 from repro.fed.client import evaluate, make_steps
 from repro.models.cnn import make_model
 from repro.optim import adamw
@@ -152,7 +155,10 @@ class _ClusteredKDBase(Algorithm):
             clients_per_round=self.clamped_clients_per_round(cfg, self.labels),
             pack=cfg.pack, n_devices=self.forced_devices(cfg),
             weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
-            seed=cfg.seed)
+            seed=cfg.seed, async_mode=cfg.async_mode,
+            round_deadline=cfg.round_deadline,
+            straggler_frac=cfg.straggler_frac,
+            latency_dist=cfg.latency_dist)
 
     def apply_lifecycle(self, event):
         cfg = self.cfg
@@ -258,13 +264,16 @@ class LoopClusteredKD(_ClusteredKDBase):
         cfg, key = self.cfg, self.key
         part = set(int(i) for i in plan.participants)
         weight_of = plan.weight_of()
+        delay_of = plan.delay_of()
         new_params, weights = [], []
         for ci, members in enumerate(self.clusters):
             sel = [i for i in members if int(i) in part]
             if not sel:
                 continue           # no sampled member: teacher untouched
             t = int(self.cluster_ids[ci])
-            # Alg.1 line 12: teacher trains on (sampled) cluster data
+            # Alg.1 line 12: teacher trains on (sampled) cluster data —
+            # teachers are edge-hosted, so they stay SYNCHRONOUS even when
+            # a member's student update straggles (DESIGN.md §12)
             self.teachers[t], self.t_opts[t] = cluster_epochs(
                 self._teacher_shards(ci, sel), self.teachers[t],
                 self.t_opts[t], jax.random.fold_in(key, rnd * 1000 + ci),
@@ -276,11 +285,23 @@ class LoopClusteredKD(_ClusteredKDBase):
                     self.shards[i], sp, so,
                     jax.random.fold_in(key, rnd * 1000 + 500 + i), cfg,
                     step_fn=self.distill_step, extra=(self.teachers[t],))
-                new_params.append(sp)
-                weights.append(weight_of[int(i)])
-        # the plan's weights ARE the two-level FedSiKD mean, extended
-        # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
-        if new_params:
+                d = delay_of[int(i)]
+                if d > 0:          # straggler: update lands d rounds late
+                    self.buffer.push(AsyncUpdate(
+                        client=int(i), birth=rnd, arrival=rnd + d,
+                        weight=weight_of[int(i)], params=sp))
+                else:
+                    new_params.append(sp)
+                    weights.append(weight_of[int(i)])
+        if self.arrivals or plan.stragglers.any():
+            # semi-async merge: on-time + buffered arrivals under the
+            # staleness-decayed, renormalised weights
+            if new_params or self.arrivals:
+                self.global_student = staleness_merge(
+                    new_params, weights, self.arrivals, cfg.staleness_decay)
+        elif new_params:
+            # the plan's weights ARE the two-level FedSiKD mean, extended
+            # unbiasedly to the sampled subset (schedule.RoundPlan docstring)
             self.global_student = agg.weighted_average(new_params, weights)
         # else: every invited client dropped out — a no-op round
         return {}
@@ -493,25 +514,62 @@ class ShardedClusteredKD(_ClusteredKDBase):
 
     def run_round(self, plan, rnd):
         cfg, sh, S = self.cfg, self.sh, self.S
+        arrivals = self.arrivals
         if not plan.active.any():
-            # every invited client dropped out: a no-op round — canonical
-            # state untouched, metrics still recorded (loop engine ditto)
+            # every invited client dropped out: canonical state untouched —
+            # unless buffered updates arrive, which merge host-side alone
+            if arrivals:
+                self.sp_global = merge_arrivals_only(arrivals,
+                                                     cfg.staleness_decay)
             return {"teacher_loss": 0.0, "student_loss": 0.0}
+        has_async = bool(arrivals) or bool(plan.stragglers.any())
+        if not has_async:
+            row, scales = plan.agg_row(), []
+        elif plan.on_time.any() or arrivals:
+            # split merge: the program contracts the on-time lanes with
+            # ``row``; the host folds each arrival with its ``scale``
+            row, scales = packed_async_row(plan.slot_weight, plan.on_time,
+                                           arrivals, cfg.staleness_decay)
+        else:
+            # every active slot straggled and nothing arrived: zero row —
+            # the program still trains the stragglers (buffered below), but
+            # its aggregate is discarded and the global student holds
+            row, scales = np.zeros(S, np.float32), []
         tp_s, ts_s = self._slot_state(plan)
         sp_s = sh.replicate_params(self.sp_global, S)
         ss_s = jax.vmap(self.s_opt.init)(sp_s)   # fresh student opt (loop too)
         tx, ty, sx, sy = self.stager.stage(plan)
         # disjoint even/odd salts keep teacher and student PRNG streams
         # from colliding on clients whose id equals their cluster index
-        tp_s, ts_s, sp_s, _ss_s, t_loss, s_loss = self.round_fn(
+        tp_s, ts_s, sp_s, sp_local, _ss_s, t_loss, s_loss = self.round_fn(
             tp_s, ts_s, sp_s, ss_s, tx, ty,
             jnp.asarray(plan.steps_for(self.t_steps_all)), sx, sy,
             jnp.asarray(plan.steps_for(self.s_steps_all)),
             self._teacher_keys(2 * rnd, plan), self._student_keys(2 * rnd + 1, plan),
-            jnp.asarray(plan.sync_matrix()), jnp.asarray(plan.agg_row()))
+            jnp.asarray(plan.sync_matrix()), jnp.asarray(row))
         self._scatter_teachers(plan, tp_s, ts_s)
-        # every slot holds the aggregated student after the weighted mean
-        self.sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+        if not has_async:
+            # every slot holds the aggregated student after the weighted mean
+            self.sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+            return {"teacher_loss": float(t_loss),
+                    "student_loss": float(s_loss)}
+        # straggler lanes: pre-aggregation students into the buffer, each
+        # with its birth-round plan weight
+        for t in np.flatnonzero(plan.stragglers):
+            self.buffer.push(AsyncUpdate(
+                client=int(plan.slot_client[t]), birth=rnd,
+                arrival=rnd + int(plan.delays[t]),
+                weight=float(plan.slot_weight[t]),
+                params=jax.tree_util.tree_map(lambda a: a[t], sp_local)))
+        if plan.on_time.any():
+            acc = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+            for u, sc in zip(arrivals, scales):
+                acc = agg.add_scaled(acc, u.params, sc)
+            self.sp_global = acc
+        elif arrivals:
+            self.sp_global = merge_arrivals_only(arrivals,
+                                                 cfg.staleness_decay)
+        # else: all-straggler round with an empty buffer — student holds
         return {"teacher_loss": float(t_loss), "student_loss": float(s_loss)}
 
     def eval(self):

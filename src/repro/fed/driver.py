@@ -24,12 +24,28 @@ sharded paths of the old ``rounds.py`` monolith:
   uninterrupted ones for every checkpointable algorithm — including across
   a re-clustering boundary, because lifecycle events replay from (seed,
   round) and the evolved labels/centroids ride the checkpoint arrays
-  (tests/test_fault_tolerance.py, tests/test_lifecycle.py).
+  (tests/test_fault_tolerance.py, tests/test_lifecycle.py);
+- the bounded-staleness buffer (semi-async rounds, DESIGN.md §12): with
+  ``cfg.async_mode`` on, the schedule's speed model marks some participants
+  as stragglers whose updates land ``d >= 1`` rounds late
+  (``RoundPlan.slot_delay``).  The driver owns the ONE ``StalenessBuffer``
+  holding those in-flight updates: before each round it pops the updates
+  arriving this round — merged by the strategy under the staleness-decayed
+  weights of ``core.aggregation.staleness_weights`` if their staleness
+  ``s <= cfg.max_staleness``, dropped and counted otherwise — and after the
+  round it accounts stragglers/merges/drops/occupancy in the history.
+  Buffer contents ride the checkpoint (entry params as a ``_async_buffer``
+  sibling of the algorithm's arrays, entry metadata in the meta JSON), so
+  kill-and-resume is bit-identical even mid-buffer
+  (tests/test_async_rounds.py).
 
 The driver is engine-agnostic: strategies hide whether a round is a Python
 loop over clients or one jitted collective program on the packed mesh.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import jax
 
@@ -46,7 +62,86 @@ _NON_METRIC_KEYS = frozenset({"acc", "loss", "round", "participants",
 # Bumped whenever the fingerprint schema changes meaning: v2 added ``pack``,
 # ``k_range`` and the lifecycle knobs — a v1 checkpoint resuming under code
 # that would silently run a different slot layout must refuse instead.
-FINGERPRINT_VERSION = 2
+# v3 added the semi-async knobs (and the buffer riding the checkpoint).
+FINGERPRINT_VERSION = 3
+
+
+@dataclasses.dataclass
+class AsyncUpdate:
+    """One client update in flight between rounds: computed against round
+    ``birth``'s global model, reaching the server's merge at ``arrival``
+    (= birth + the speed model's delay).  ``weight`` is the update's
+    BIRTH-round base weight (the plan weight for clustered-KD strategies,
+    the client's example count for the baselines); the merge round decays it
+    by ``(1 + staleness)^-cfg.staleness_decay`` (core/aggregation.py).
+    ``params is None`` marks a tombstone: an update already known to exceed
+    ``max_staleness`` at arrival — its params are never stored, but the
+    entry still rides the buffer so the arrival round counts the drop (and a
+    resumed run counts it identically)."""
+
+    client: int
+    birth: int
+    arrival: int
+    weight: float
+    params: Any = None
+
+    @property
+    def staleness(self) -> int:
+        return self.arrival - self.birth
+
+
+class StalenessBuffer:
+    """The driver's bounded-staleness buffer: every straggler update a
+    strategy produces is ``push``-ed here at its birth round, and
+    ``pop_due`` hands back the updates whose arrival round has come —
+    split into mergeable arrivals and the count of dropped-too-stale ones.
+    Entries with ``staleness > max_staleness`` are tombstoned at push time
+    (params discarded immediately) so the buffer never holds model copies
+    it will not merge."""
+
+    def __init__(self, max_staleness: int):
+        if max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {max_staleness}")
+        self.max_staleness = max_staleness
+        self.entries: list[AsyncUpdate] = []
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def push(self, update: AsyncUpdate) -> None:
+        if update.staleness > self.max_staleness:
+            update = dataclasses.replace(update, params=None)
+        self.entries.append(update)
+
+    def pop_due(self, round_index: int) -> tuple[list[AsyncUpdate], int]:
+        """(arrivals to merge this round, number dropped as too stale)."""
+        due = [u for u in self.entries if u.arrival <= round_index]
+        self.entries = [u for u in self.entries if u.arrival > round_index]
+        arrivals = [u for u in due if u.params is not None]
+        return arrivals, len(due) - len(arrivals)
+
+    # ------------------------------------------------- checkpoint plumbing
+    def meta(self) -> list[dict]:
+        """JSON-safe entry metadata, in buffer order (fedstate meta JSON)."""
+        return [{"client": int(u.client), "birth": int(u.birth),
+                 "arrival": int(u.arrival), "weight": float(u.weight),
+                 "has_params": u.params is not None}
+                for u in self.entries]
+
+    def params_list(self) -> list:
+        """Param pytrees of the NON-tombstone entries, in buffer order
+        (the ``_async_buffer`` array pytree of the checkpoint)."""
+        return [u.params for u in self.entries if u.params is not None]
+
+    def load(self, meta: list[dict], params: list) -> None:
+        """Rebuild the buffer from a checkpoint's (meta, params) pair."""
+        it = iter(params)
+        self.entries = [
+            AsyncUpdate(client=int(e["client"]), birth=int(e["birth"]),
+                        arrival=int(e["arrival"]), weight=float(e["weight"]),
+                        params=next(it) if e["has_params"] else None)
+            for e in meta]
 
 
 def fingerprint(cfg, labels=None) -> dict:
@@ -79,7 +174,14 @@ def fingerprint(cfg, labels=None) -> dict:
           "teacher_warmup_epochs": cfg.teacher_warmup_epochs,
           "teacher_data": cfg.teacher_data,
           "cluster_weighting": cfg.cluster_weighting,
-          "dp_noise": cfg.dp_noise}
+          "dp_noise": cfg.dp_noise,
+          # semi-async identity: the speed model reshapes every plan and the
+          # buffer's merge math — a sync checkpoint must not resume async
+          "async_mode": cfg.async_mode, "max_staleness": cfg.max_staleness,
+          "staleness_decay": cfg.staleness_decay,
+          "round_deadline": cfg.round_deadline,
+          "straggler_frac": cfg.straggler_frac,
+          "latency_dist": cfg.latency_dist}
     if cfg.num_clusters is None:
         # with metric-voted K the sweep bounds decide the cluster count
         fp["k_range"] = cfg.k_range
@@ -94,6 +196,7 @@ class RoundDriver:
     def __init__(self, ds, cfg, algorithm, *, progress: bool = False):
         self.ds, self.cfg, self.alg = ds, cfg, algorithm
         self.progress = progress
+        self.buffer: StalenessBuffer | None = None
 
     def run(self) -> dict:
         ds, cfg, alg = self.ds, self.cfg, self.alg
@@ -103,6 +206,9 @@ class RoundDriver:
         lc = ClientLifecycle.from_config(cfg)
         alg.lifecycle = lc
         alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))
+        if cfg.async_mode:
+            self.buffer = StalenessBuffer(cfg.max_staleness)
+        alg.buffer = self.buffer
         fp = fingerprint(cfg, labels=alg.labels)
 
         history = {"acc": [], "loss": [], "round": [], "participants": [],
@@ -119,9 +225,20 @@ class RoundDriver:
         resumed = False
         if (cfg.resume and cfg.ckpt_dir
                 and fedstate.latest_round(cfg.ckpt_dir) is not None):
-            st = fedstate.restore_run(cfg.ckpt_dir, alg.checkpoint_arrays(),
-                                      expect_meta=fp)
+            like = alg.checkpoint_arrays()
+            if self.buffer is not None:
+                # the buffer's param count is variable, so the restore
+                # template comes from the checkpoint's OWN entry metadata
+                # (each live entry is structurally a global-student copy)
+                n_live = sum(
+                    1 for e in fedstate.latest_meta(cfg.ckpt_dir).get(
+                        "buffer", []) if e.get("has_params"))
+                like["_async_buffer"] = [like["student"]] * n_live
+            st = fedstate.restore_run(cfg.ckpt_dir, like, expect_meta=fp)
+            buf_params = st.arrays.pop("_async_buffer", [])
             alg.restore_arrays(st.arrays)
+            if self.buffer is not None:
+                self.buffer.load(st.buffer_meta, buf_params)
             history.update(st.history)
             start_round = st.round_index
             resumed = True
@@ -152,7 +269,17 @@ class RoundDriver:
                               f"-{len(ev.leaves)} left, "
                               f"{int(ev.active.sum())} active")
             plan = alg.scheduler.plan(rnd)
-            metrics.update(alg.run_round(plan, rnd))
+            if self.buffer is not None:
+                arrivals, dropped = self.buffer.pop_due(rnd)
+                alg.arrivals = tuple(arrivals)
+                metrics.update(alg.run_round(plan, rnd))
+                alg.arrivals = ()
+                metrics["stragglers"] = int(plan.stragglers.sum())
+                metrics["stale_merged"] = len(arrivals)
+                metrics["stale_dropped"] = dropped
+                metrics["buffered"] = len(self.buffer)
+            else:
+                metrics.update(alg.run_round(plan, rnd))
             self._append_metrics(history, metrics)
             history["participants"].append(int(plan.active.sum()))
             self._record(history, rnd)
@@ -190,6 +317,14 @@ class RoundDriver:
     def _save(self, history, fp, rnd):
         cfg = self.cfg
         if cfg.ckpt_dir and (rnd % cfg.ckpt_every == 0 or rnd == cfg.rounds):
+            arrays = self.alg.checkpoint_arrays()
+            buffer_meta = []
+            if self.buffer is not None:
+                # in-flight updates cross the round boundary too: their
+                # params ride the array pytree, their (client, birth,
+                # arrival, weight) metadata the meta JSON
+                arrays["_async_buffer"] = self.buffer.params_list()
+                buffer_meta = self.buffer.meta()
             fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
-                round_index=rnd, arrays=self.alg.checkpoint_arrays(),
-                history=history, meta=fp), keep_last=cfg.ckpt_keep)
+                round_index=rnd, arrays=arrays, history=history, meta=fp,
+                buffer_meta=buffer_meta), keep_last=cfg.ckpt_keep)

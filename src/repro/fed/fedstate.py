@@ -70,6 +70,12 @@ class FedState:
     arrays: Any          # pytree: {"student": ..., "teachers": ..., "t_opts": ...}
     history: dict        # running history (JSON-safe after json_safe())
     meta: dict = dataclasses.field(default_factory=dict)   # run fingerprint
+    # semi-async staleness-buffer entry metadata (fed/driver.py
+    # StalenessBuffer.meta(); [] for synchronous runs).  The entries' param
+    # pytrees ride ``arrays["_async_buffer"]``; this list carries the
+    # (client, birth, arrival, weight, has_params) records that rebuild the
+    # buffer on resume.
+    buffer_meta: list = dataclasses.field(default_factory=list)
 
 
 def round_path(ckpt_dir: str | Path, round_index: int) -> Path:
@@ -95,7 +101,8 @@ def save_round(ckpt_dir: str | Path, state: FedState, *,
     path = round_path(ckpt_dir, state.round_index)
     ckpt.save(path, state.arrays, step=state.round_index,
               extra={"history": json_safe(state.history),
-                     "fingerprint": json_safe(state.meta)})
+                     "fingerprint": json_safe(state.meta),
+                     "buffer": json_safe(state.buffer_meta)})
     if keep_last is not None:
         rounds = sorted(int(m.group(1)) for p in Path(ckpt_dir).iterdir()
                         if (m := _ROUND_RE.match(p.name)))
@@ -104,6 +111,18 @@ def save_round(ckpt_dir: str | Path, state: FedState, *,
             stale.unlink(missing_ok=True)
             stale.with_suffix(".meta.json").unlink(missing_ok=True)
     return path
+
+
+def latest_meta(ckpt_dir: str | Path) -> dict:
+    """Meta JSON of the latest checkpointed round (step, history,
+    fingerprint, buffer).  The semi-async resume path reads this FIRST to
+    learn how many buffered param pytrees the ``like`` template must carry
+    before ``restore_run`` can validate the arrays."""
+    r = latest_round(ckpt_dir)
+    if r is None:
+        raise FileNotFoundError(
+            f"no round_*.npz checkpoint under {ckpt_dir!r}")
+    return ckpt.load_meta(round_path(ckpt_dir, r))
 
 
 def restore_run(ckpt_dir: str | Path, like, *,
@@ -130,4 +149,5 @@ def restore_run(ckpt_dir: str | Path, like, *,
                 f"configuration:\n  " + "\n  ".join(conflicts))
     arrays = ckpt.restore(path, like)
     return FedState(round_index=int(meta["step"]), arrays=arrays,
-                    history=meta.get("history", {}), meta=fingerprint)
+                    history=meta.get("history", {}), meta=fingerprint,
+                    buffer_meta=meta.get("buffer", []))

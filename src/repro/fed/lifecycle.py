@@ -160,11 +160,13 @@ class ClientLifecycle:
             r = len(self._active)
             cur = self._active[r - 1].copy()
             if self.leave_rate > 0.0:
-                # disjoint stream: 0x1F salt keeps permanent leaves away from
-                # the sampling (plain) and dropout (0xD0) streams of
-                # fed/schedule.py, so turning churn on never reshuffles them
+                # disjoint stream: the 0x1F salt keeps permanent leaves away
+                # from the sampling (plain), dropout (0xD0) and speed (0x5E)
+                # streams of fed/schedule.py, so turning churn on never
+                # reshuffles them (stream registry in schedule's docstring)
+                from repro.fed.schedule import SALT_LEAVE
                 rng = np.random.default_rng(np.random.SeedSequence(
-                    [self.seed & 0x7FFFFFFF, r, 0x1F]))
+                    [self.seed & 0x7FFFFFFF, r, SALT_LEAVE]))
                 ids = np.flatnonzero(cur)
                 gone = ids[rng.random(len(ids)) < self.leave_rate]
                 if len(gone) < len(ids):       # never empty the roster

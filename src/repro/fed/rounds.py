@@ -79,6 +79,21 @@ class FedConfig:
     join_schedule: Optional[tuple] = None
     leave_rate: float = 0.0
     recluster_every: int = 0
+    # Semi-async rounds (fed/schedule.py speed model + fed/driver.py
+    # StalenessBuffer, DESIGN.md §12).  With async_mode on, each
+    # participant's update either beats the round deadline (delay 0, merged
+    # as today) or lands d >= 1 rounds late — buffered, then merged with
+    # weight decayed by (1 + staleness)^-staleness_decay if staleness <=
+    # max_staleness, dropped (and counted) otherwise.  Teachers stay
+    # synchronous (edge-hosted: device stragglers delay only the student
+    # update's arrival).  With straggler_frac=0 every plan is all-on-time
+    # and both engines are bit-identical to async_mode=False.
+    async_mode: bool = False
+    max_staleness: int = 2            # arrivals older than this are dropped
+    staleness_decay: float = 0.5      # a in (1 + s)^-a; 0 = no decay
+    round_deadline: float = 1.0       # latency units per round
+    straggler_frac: float = 0.0       # fraction of clients that straggle
+    latency_dist: str = "lognormal"   # lognormal | exp | uniform
     num_clients: int = 40
     alpha: float = 0.5                # Dirichlet skew
     rounds: int = 5
@@ -183,6 +198,35 @@ class FedConfig:
         if self.recluster_every < 0:
             raise ValueError(
                 f"recluster_every must be >= 0, got {self.recluster_every}")
+        # semi-async knobs (the scheduler re-validates what it consumes)
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+        if self.staleness_decay < 0:
+            raise ValueError(
+                f"staleness_decay must be >= 0, got {self.staleness_decay}")
+        if self.round_deadline <= 0:
+            raise ValueError(
+                f"round_deadline must be > 0, got {self.round_deadline}")
+        if not 0.0 <= self.straggler_frac < 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1), got "
+                f"{self.straggler_frac}")
+        if self.latency_dist not in schedule.LATENCY_DISTS:
+            raise ValueError(
+                f"latency_dist must be one of {schedule.LATENCY_DISTS}, "
+                f"got {self.latency_dist!r}")
+        if self.async_mode:
+            if self.algorithm == "flhc":
+                raise ValueError(
+                    "async_mode needs a strategy with a staleness merge "
+                    "path; algorithm='flhc' keeps per-cluster models with "
+                    "no global merge — use fedsikd | random | fedavg | "
+                    "fedprox")
+        elif self.straggler_frac > 0:
+            raise ValueError(
+                "straggler_frac > 0 needs async_mode=True (a synchronous "
+                "run has no deadline for a straggler to miss)")
         if self.lifecycle_enabled:
             if self.algorithm == "flhc":
                 raise ValueError(

@@ -51,6 +51,42 @@ under ``uniform``.  Dropout can empty a round entirely; engines treat an
 all-idle plan as a no-op round (state unchanged, metrics still recorded).
 The warm-up plan never drops clients — the KD-establishment phase happens
 before deployment failures are in scope.
+
+Per-client speed model (``async_mode``, DESIGN.md §12): beside statistical
+skew, production FL faces SYSTEM heterogeneity — slow devices whose updates
+arrive rounds late (arXiv:2106.06843).  The scheduler models it
+deterministically: each client has a persistent speed profile drawn
+per-(seed, client) — with probability ``straggler_frac`` the client is a
+straggler — and each round draws a latency per-(seed, round, client) on
+the 0x5E speed stream (disjoint from sampling/dropout/lifecycle, so
+turning the speed model on never reshuffles WHO trains).  Latency is in
+units of the nominal round length: on-pace clients draw in (0, 1),
+stragglers draw ``1 + excess`` with the excess from ``latency_dist``
+(lognormal | exp | uniform).  The server's ``round_deadline`` then
+partitions participants: ``delay = ceil(latency / deadline) - 1`` rounds —
+``RoundPlan.slot_delay`` — with delay 0 arriving on time and delay ``d >=
+1`` landing ``d`` rounds late (the driver's bounded-staleness buffer,
+fed/driver.py).  A straggler still trains this round (the server cannot
+stop it); only its update's ARRIVAL is late.  The warm-up plan carries no
+delays — establishment happens before deployment timing is in scope.
+
+PRNG stream registry (fold-constant collision guard,
+tests/test_schedule.py): every scheduler stream is a ``SeedSequence`` over
+``[seed, ...]`` with a distinct tail —
+
+    sampling   [seed, round + 1]                  (legacy, unsalted)
+    dropout    [seed, round + 1, 0xD0]
+    leave      [seed, round, 0x1F]                (fed/lifecycle.py)
+    latency    [seed, round + 1, 0x5E, client]
+    profile    [seed, 0, 0x5E, client]            (round-free: slot 0)
+    warm-up    [seed, 0, 0xA0, 0]
+
+The warm-up stream HAD a collision: it reused ``_rng(0)`` — the sampling
+stream of round 0 — so a warm-up stratified slice and a hypothetical
+round-0 plan drew identical choices.  It now lives on its own salted
+stream; the regression test asserts pairwise disjointness of all six
+streams across an adversarial (seed, round, client) grid, including
+values that equal the salts themselves.
 """
 from __future__ import annotations
 
@@ -63,6 +99,15 @@ from repro.launch.mesh import fed_mesh_layout
 
 PARTICIPATION_MODES = ("full", "uniform", "stratified")
 WEIGHTINGS = ("uniform", "size")
+LATENCY_DISTS = ("lognormal", "exp", "uniform")
+
+# PRNG stream salts (module docstring: the stream registry).  New streams
+# MUST pick a fresh salt and keep the [seed, round-slot, salt, ...] shape —
+# the disjointness regression test in tests/test_schedule.py guards it.
+SALT_DROPOUT = 0xD0
+SALT_LEAVE = 0x1F          # owned by fed/lifecycle.py
+SALT_SPEED = 0x5E
+SALT_WARMUP = 0xA0
 
 
 # --------------------------------------------------------------- round plan
@@ -81,6 +126,10 @@ class RoundPlan:
     slot_client: np.ndarray    # (S,) int32 client id per slot; -1 = idle
     slot_cluster: np.ndarray   # (S,) int32 cluster INDEX per slot; -1 = idle
     slot_weight: np.ndarray    # (S,) float32 aggregation weight; sums to 1
+    # (S,) int32 arrival delay in rounds (speed model, module docstring):
+    # 0 = the update arrives before this round's deadline, d >= 1 = it lands
+    # d rounds late (a straggler).  None = synchronous plan (all on time).
+    slot_delay: Optional[np.ndarray] = None
 
     @property
     def n_slots(self) -> int:
@@ -90,6 +139,28 @@ class RoundPlan:
     def active(self) -> np.ndarray:
         """(S,) bool — slots that host a participating client."""
         return self.slot_client >= 0
+
+    @property
+    def delays(self) -> np.ndarray:
+        """(S,) int32 arrival delays (zeros for a synchronous plan)."""
+        if self.slot_delay is None:
+            return np.zeros(self.n_slots, np.int32)
+        return self.slot_delay
+
+    @property
+    def on_time(self) -> np.ndarray:
+        """(S,) bool — active slots whose update beats the round deadline."""
+        return self.active & (self.delays == 0)
+
+    @property
+    def stragglers(self) -> np.ndarray:
+        """(S,) bool — active slots whose update arrives >= 1 round late."""
+        return self.active & (self.delays > 0)
+
+    def delay_of(self) -> dict[int, int]:
+        """client id -> arrival delay in rounds (participants only)."""
+        return {int(c): int(d) for c, d in
+                zip(self.slot_client, self.delays) if c >= 0}
 
     @property
     def participants(self) -> np.ndarray:
@@ -165,6 +236,15 @@ class RoundScheduler:
         §IV-C.5) or ``uniform`` (1/K, Alg. 1 literal).
     dropout_rate : probability that an invited client fails mid-round
         (module docstring); 0 disables the failure scenario.
+    async_mode : turn the per-client speed model on — plans carry per-slot
+        arrival delays (``RoundPlan.slot_delay``, module docstring).
+    round_deadline : server cutoff per round in units of the nominal round
+        length; ``delay = ceil(latency / deadline) - 1``.  1.0 means every
+        on-pace client arrives on time; < 1 squeezes even on-pace clients.
+    straggler_frac : per-(seed, client) probability the client is a
+        persistent straggler (its per-round latency exceeds one round).
+    latency_dist : distribution of a straggler's excess latency —
+        ``lognormal`` | ``exp`` | ``uniform``.
     seed : plans are a pure function of (seed, round_index).
     """
 
@@ -173,6 +253,9 @@ class RoundScheduler:
                  clients_per_round: Optional[int] = None,
                  pack: int = 1, n_devices: Optional[int] = None,
                  weighting: str = "size", dropout_rate: float = 0.0,
+                 async_mode: bool = False, round_deadline: float = 1.0,
+                 straggler_frac: float = 0.0,
+                 latency_dist: str = "lognormal",
                  seed: int = 0):
         labels = np.asarray(cluster_of)
         member = labels >= 0
@@ -221,6 +304,19 @@ class RoundScheduler:
         if not 0.0 <= dropout_rate < 1.0:
             raise ValueError(
                 f"dropout_rate must be in [0, 1), got {dropout_rate}")
+        if not 0.0 <= straggler_frac < 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1), got {straggler_frac}")
+        if round_deadline <= 0.0:
+            raise ValueError(
+                f"round_deadline must be > 0, got {round_deadline}")
+        if latency_dist not in LATENCY_DISTS:
+            raise ValueError(f"latency_dist must be one of {LATENCY_DISTS}, "
+                             f"got {latency_dist!r}")
+        self.async_mode = bool(async_mode)
+        self.round_deadline = float(round_deadline)
+        self.straggler_frac = float(straggler_frac)
+        self.latency_dist = latency_dist
         self.participation = participation
         self.clients_per_round = clients_per_round
         self.weighting = weighting
@@ -236,6 +332,41 @@ class RoundScheduler:
     def _rng(self, round_index: int) -> np.random.Generator:
         return np.random.default_rng(
             np.random.SeedSequence([self.seed & 0x7FFFFFFF, round_index + 1]))
+
+    # ---------------------------------------------------------- speed model
+    def _is_straggler(self, client: int) -> bool:
+        """Persistent per-(seed, client) speed profile on the round-free
+        0x5E stream (round slot pinned to 0: per-round latency always uses
+        ``round + 1 >= 1``, so the streams never meet)."""
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [self.seed & 0x7FFFFFFF, 0, SALT_SPEED, int(client)]))
+        return bool(rng.random() < self.straggler_frac)
+
+    def latency(self, round_index: int, client: int) -> float:
+        """This round's completion latency for ``client``, in units of the
+        nominal round length — deterministic per (seed, round, client) and
+        independent of the cohort (who else was invited never shifts a
+        client's draw).  On-pace clients complete within the nominal round
+        (latency in (0.05, 0.95)); stragglers draw ``1 + excess`` from
+        ``latency_dist``."""
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [self.seed & 0x7FFFFFFF, round_index + 1, SALT_SPEED,
+             int(client)]))
+        if not self._is_straggler(client):
+            return float(rng.uniform(0.05, 0.95))
+        if self.latency_dist == "lognormal":
+            excess = rng.lognormal(mean=0.0, sigma=0.75)
+        elif self.latency_dist == "exp":
+            excess = rng.exponential(1.0)
+        else:                                          # uniform
+            excess = rng.uniform(0.0, 2.0)
+        return float(1.0 + excess)
+
+    def delay(self, round_index: int, client: int) -> int:
+        """Arrival delay in rounds under the server deadline: 0 = on time,
+        d >= 1 = the update lands d rounds late."""
+        lat = self.latency(round_index, client)
+        return max(0, int(np.ceil(lat / self.round_deadline)) - 1)
 
     def _stratified_counts(self, total: int, caps: np.ndarray) -> np.ndarray:
         """Largest-remainder apportionment of ``total`` over clusters,
@@ -279,7 +410,7 @@ class RoundScheduler:
         stream disjoint from the sampling stream (``_rng``), so turning
         dropout on never reshuffles WHO was invited."""
         rng = np.random.default_rng(np.random.SeedSequence(
-            [self.seed & 0x7FFFFFFF, round_index + 1, 0xD0]))
+            [self.seed & 0x7FFFFFFF, round_index + 1, SALT_DROPOUT]))
         return [sel[rng.random(len(sel)) >= self.dropout_rate]
                 for sel in per_cluster]
 
@@ -307,9 +438,16 @@ class RoundScheduler:
                 slot_cluster[s] = k
                 slot_weight[s] = w
                 s += 1
+        # speed model: per-slot arrival delays (warm-up — round 0 — stays
+        # synchronous: establishment precedes deployment timing)
+        slot_delay = None
+        if self.async_mode and round_index >= 1:
+            slot_delay = np.zeros(S, np.int32)
+            for t in range(s):
+                slot_delay[t] = self.delay(round_index, int(slot_client[t]))
         return RoundPlan(round_index=round_index, pack=self.pack,
                          slot_client=slot_client, slot_cluster=slot_cluster,
-                         slot_weight=slot_weight)
+                         slot_weight=slot_weight, slot_delay=slot_delay)
 
     def plan(self, round_index: int) -> RoundPlan:
         """The participation plan for round ``round_index`` (1-based by
@@ -338,7 +476,11 @@ class RoundScheduler:
                 f"(raise pack or n_devices)")
         caps = np.asarray([len(g) for g in self.groups])
         counts = self._stratified_counts(self.n_slots, caps)
-        rng = self._rng(0)
+        # own salted stream: ``_rng(0)`` — the old choice — IS the sampling
+        # stream of ``plan(0)``, a fold-constant collision (module
+        # docstring); the warm-up slice must not mirror any round's sample
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [self.seed & 0x7FFFFFFF, 0, SALT_WARMUP, 0]))
         sel = [np.sort(rng.choice(g, int(m), replace=False))
                for g, m in zip(self.groups, counts)]
         return self._build_plan(0, sel)

@@ -267,9 +267,13 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
          two-level mean collapsed into one contraction          (lines 16-18)
 
     Returns round_fn(tp, ts, sp, ss, tx, ty, t_n, sx, sy, s_n, t_rng, s_rng,
-    sync_mat, agg_row) -> (tp, ts, sp, ss, teacher_loss, student_loss); all
-    params/opt-state pytrees carry a leading (S,) slot axis (S = devices x
-    pack).  ``sync_mat`` (S, S) and ``agg_row`` (S,) come from the round's
+    sync_mat, agg_row) -> (tp, ts, sp, sp_local, ss, teacher_loss,
+    student_loss); all params/opt-state pytrees carry a leading (S,) slot
+    axis (S = devices x pack).  ``sp_local`` is each slot's student AFTER
+    its local steps but BEFORE aggregation — the semi-async path pulls
+    straggler lanes from it into the host-side staleness buffer while the
+    program itself stays fixed-shape (stale lanes are merely zero-weighted
+    in ``agg_row``, never recompiled; DESIGN.md §12).  ``sync_mat`` (S, S) and ``agg_row`` (S,) come from the round's
     ``RoundPlan`` — they are traced inputs, so sampled participation never
     recompiles.  ``t_rng`` / ``s_rng`` are one PRNG key per slot; they are
     separate inputs because their sharing patterns differ: student keys are
@@ -318,16 +322,19 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
 
         (sp, ss), s_loss = jax.vmap(s_lane)(sp, ss, sx, sy, s_n, s_rng, tp)
 
-        # ---- 4: grouped aggregation (plan-weighted mean -> every slot)
+        # ---- 4: grouped aggregation (plan-weighted mean -> every slot);
+        # the pre-aggregation per-slot students ride along so straggler
+        # lanes can be buffered host-side without a second program
+        sp_local = sp
         sp = cc.packed_weighted_mean(sp, AXIS, agg_row, pack=pack)
-        return (tp, ts, sp, ss,
+        return (tp, ts, sp, sp_local, ss,
                 _active_mean(t_loss, t_n, AXIS),
                 _active_mean(s_loss, s_n, AXIS))
 
     return jax.jit(shard_map(
         kd_round, mesh,
         in_specs=(P(AXIS),) * 12 + (P(), P()),
-        out_specs=(P(AXIS),) * 4 + (P(), P()),
+        out_specs=(P(AXIS),) * 5 + (P(), P()),
     ))
 
 
@@ -349,10 +356,13 @@ def make_packed_baseline_round(mesh, pack: int, fwd: Callable,
          ``aggregation.fedavg(locals, sizes)``.
 
     Returns round_fn(p, s, xs, ys, n_steps, rng, agg_row, global_p) ->
-    (p, s, train_loss); params/opt-state carry a leading (S,) slot axis,
-    batch stacks are (S, steps, B, ...).  ``agg_row`` is a traced input, so
-    sampled participation and dropout never recompile.  After the call
-    every slot holds the aggregated global model."""
+    (p, p_local, s, train_loss); params/opt-state carry a leading (S,) slot
+    axis, batch stacks are (S, steps, B, ...).  ``p_local`` is each slot's
+    params after local steps but before aggregation (straggler-lane capture
+    for the semi-async buffer, as in ``make_packed_kd_round``).
+    ``agg_row`` is a traced input, so sampled participation and dropout
+    never recompile.  After the call every slot holds the aggregated global
+    model."""
 
     def baseline_round(p, s, xs, ys, n_steps, rng, agg_row, global_p):
         def lane(p, s, xs, ys, n, rng):
@@ -375,11 +385,12 @@ def make_packed_baseline_round(mesh, pack: int, fwd: Callable,
             return _masked_scan_steps(step, (p, s), xs, ys, n)
 
         (p, s), loss = jax.vmap(lane)(p, s, xs, ys, n_steps, rng)
+        p_local = p
         p = cc.packed_weighted_mean(p, AXIS, agg_row, pack=pack)
-        return p, s, _active_mean(loss, n_steps, AXIS)
+        return p, p_local, s, _active_mean(loss, n_steps, AXIS)
 
     return jax.jit(shard_map(
         baseline_round, mesh,
         in_specs=(P(AXIS),) * 6 + (P(), P()),
-        out_specs=(P(AXIS), P(AXIS), P()),
+        out_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
     ))

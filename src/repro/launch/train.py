@@ -55,6 +55,12 @@ def run_fl(args):
                     join_schedule=parse_join_schedule(args.join_schedule),
                     leave_rate=args.leave_rate,
                     recluster_every=args.recluster_every,
+                    async_mode=args.async_mode,
+                    max_staleness=args.max_staleness,
+                    staleness_decay=args.staleness_decay,
+                    round_deadline=args.round_deadline,
+                    straggler_frac=args.straggler_frac,
+                    latency_dist=args.latency_dist,
                     # --ckpt doubles as the round-checkpoint dir: a killed
                     # run restarts with --resume (fed/fedstate.py)
                     ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
@@ -143,6 +149,20 @@ def main():
     fl.add_argument("--leave-rate", type=float, default=0.0,
                     help="per-round probability an active client leaves "
                          "FOR GOOD (vs --dropout-rate's one-round failure)")
+    fl.add_argument("--async-mode", action="store_true", dest="async_mode",
+                    help="semi-async rounds: stragglers' updates land late "
+                         "and merge staleness-weighted (fed/driver.py)")
+    fl.add_argument("--max-staleness", type=int, default=2,
+                    help="drop buffered updates older than this many rounds")
+    fl.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="a in the (1+s)^-a staleness weight decay")
+    fl.add_argument("--round-deadline", type=float, default=1.0,
+                    help="latency units per round (smaller => later arrivals)")
+    fl.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of clients with straggler latency")
+    fl.add_argument("--latency-dist", default="lognormal",
+                    choices=["lognormal", "exp", "uniform"],
+                    help="straggler excess-latency distribution")
     fl.add_argument("--recluster-every", type=int, default=0,
                     help="also re-cluster every N rounds (0: only on "
                          "join/leave events)")

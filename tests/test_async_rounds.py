@@ -1,0 +1,553 @@
+"""Semi-async rounds (DESIGN.md §12): speed model, staleness math, buffer,
+and both engines end to end.
+
+Host-side units cover the scheduler's deterministic speed model (and its
+stream disjointness from sampling/dropout), the staleness-weight algebra
+(including hypothesis-style property tests via ``_hypothesis_compat``), and
+the driver's bounded-staleness buffer.  The engine tests split by cost: the
+loop engine runs in-process (bitwise async-off equality, all-straggler
+no-op, conservation of pushed updates), while everything needing the packed
+mesh — async-off bit-identity, loop/packed parity under stragglers +
+sampling + dropout, and kill-and-resume across a round with a non-empty
+buffer — runs in subprocesses with their own XLA_FLAGS (DESIGN.md §6).
+"""
+import textwrap
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from _subproc import run_script
+
+from repro.core import aggregation as agg
+from repro.fed.algorithms.base import packed_async_row, staleness_merge
+from repro.fed.driver import AsyncUpdate, StalenessBuffer
+from repro.fed.schedule import RoundScheduler
+
+LABELS = np.array([0, 0, 0, 0, 0, 1, 1, 2, 2, 2, 2, 2])   # sizes 5, 2, 5
+
+
+def _sched(**kw):
+    base = dict(async_mode=True, straggler_frac=0.5, seed=0)
+    base.update(kw)
+    return RoundScheduler(LABELS, **base)
+
+
+# -------------------------------------------------------------- speed model
+def test_latency_is_deterministic_per_seed_round_client():
+    a, b = _sched(), _sched()
+    for rnd in (1, 2, 7):
+        for c in range(len(LABELS)):
+            assert a.latency(rnd, c) == b.latency(rnd, c)
+            assert a.delay(rnd, c) == max(
+                0, int(np.ceil(a.latency(rnd, c) / a.round_deadline)) - 1)
+    # latency varies per round and per client (fresh draw each round)
+    lats = [a.latency(r, 3) for r in range(1, 30)]
+    assert len(set(lats)) > 1
+
+
+def test_straggler_profile_is_persistent_and_respects_frac():
+    s = _sched(straggler_frac=0.5)
+    prof = [s._is_straggler(c) for c in range(len(LABELS))]
+    assert any(prof) and not all(prof)
+    # the profile is per-(seed, client): stable across rounds — a straggler
+    # draws latency >= 1 every round, an on-pace client always < 1
+    for rnd in range(1, 40):
+        for c in range(len(LABELS)):
+            assert (s.latency(rnd, c) >= 1.0) == prof[c], (rnd, c)
+    # the profile stream ignores the latency distribution
+    for dist in ("exp", "uniform"):
+        s2 = _sched(straggler_frac=0.5, latency_dist=dist)
+        assert [s2._is_straggler(c) for c in range(len(LABELS))] == prof
+    # frac=0 -> nobody straggles, every delay is 0 even with async on
+    s0 = _sched(straggler_frac=0.0)
+    for rnd in range(1, 20):
+        assert not s0.plan(rnd).stragglers.any()
+
+
+def test_speed_stream_is_disjoint_from_sampling_and_dropout():
+    """Turning the speed model on must never reshuffle WHO trains: the
+    0x5E latency/profile streams are disjoint from sampling (unsalted) and
+    dropout (0xD0), so async on/off plans pick identical participants."""
+    kw = dict(participation="stratified", clients_per_round=6,
+              dropout_rate=0.3, seed=11)
+    sync = RoundScheduler(LABELS, async_mode=False, **kw)
+    asyn = RoundScheduler(LABELS, async_mode=True, straggler_frac=0.6, **kw)
+    saw_delay = False
+    for rnd in range(1, 40):
+        p_s, p_a = sync.plan(rnd), asyn.plan(rnd)
+        np.testing.assert_array_equal(p_s.slot_client, p_a.slot_client)
+        np.testing.assert_array_equal(p_s.slot_weight, p_a.slot_weight)
+        assert p_s.slot_delay is None
+        saw_delay |= bool(p_a.stragglers.any())
+    assert saw_delay, "frac=0.6 should produce stragglers in 40 rounds"
+
+
+def test_warmup_and_round_zero_plans_stay_synchronous():
+    s = _sched(straggler_frac=0.8)
+    assert s.warmup_plan().slot_delay is None
+    assert s.plan(0).slot_delay is None        # establishment round
+    p1 = s.plan(1)
+    assert p1.slot_delay is not None
+    # delay accessors agree with the plan arrays
+    d = p1.delay_of()
+    for t in np.flatnonzero(p1.active):
+        assert d[int(p1.slot_client[t])] == int(p1.delays[t])
+    assert not p1.on_time[~p1.active].any()
+    assert not p1.stragglers[~p1.active].any()
+
+
+def test_round_deadline_is_monotone_in_delays():
+    """A laxer deadline can only shrink arrival delays; a huge deadline
+    absorbs every straggler."""
+    tight = _sched(straggler_frac=0.7, round_deadline=0.5)
+    nominal = _sched(straggler_frac=0.7, round_deadline=1.0)
+    lax = _sched(straggler_frac=0.7, round_deadline=100.0)
+    for rnd in range(1, 20):
+        for c in range(len(LABELS)):
+            assert tight.delay(rnd, c) >= nominal.delay(rnd, c)
+            assert lax.delay(rnd, c) == 0
+    # deadline < 1 can delay even on-pace clients (latency in (0.05, 0.95))
+    squeezed = _sched(straggler_frac=0.0, round_deadline=0.1)
+    assert any(squeezed.delay(1, c) > 0 for c in range(len(LABELS)))
+
+
+def test_scheduler_async_validation():
+    with pytest.raises(ValueError):
+        _sched(straggler_frac=1.0)
+    with pytest.raises(ValueError):
+        _sched(straggler_frac=-0.1)
+    with pytest.raises(ValueError):
+        _sched(round_deadline=0.0)
+    with pytest.raises(ValueError):
+        _sched(latency_dist="gamma")
+
+
+def test_fedconfig_async_validation():
+    from repro.fed.rounds import FedConfig
+    FedConfig(async_mode=True, straggler_frac=0.5)
+    with pytest.raises(ValueError):
+        FedConfig(async_mode=True, max_staleness=-1)
+    with pytest.raises(ValueError):
+        FedConfig(async_mode=True, staleness_decay=-0.5)
+    with pytest.raises(ValueError):
+        FedConfig(async_mode=True, round_deadline=0.0)
+    with pytest.raises(ValueError):
+        FedConfig(async_mode=True, latency_dist="gamma")
+    # stragglers without a deadline to miss make no sense
+    with pytest.raises(ValueError, match="async_mode"):
+        FedConfig(straggler_frac=0.5)
+    # FL+HC is loop-only AND synchronous-only
+    with pytest.raises(ValueError, match="flhc"):
+        FedConfig(algorithm="flhc", async_mode=True)
+
+
+# ---------------------------------------------------------- staleness math
+def test_staleness_factor_values():
+    np.testing.assert_allclose(agg.staleness_factor([0, 1, 3], 0.5),
+                               [1.0, 2.0 ** -0.5, 0.5])
+    np.testing.assert_allclose(agg.staleness_factor([0, 5, 9], 0.0), 1.0)
+    with pytest.raises(ValueError):
+        agg.staleness_factor([-1], 0.5)
+    with pytest.raises(ValueError):
+        agg.staleness_factor([0], -0.5)
+
+
+def test_fresh_staleness_weights_reduce_to_base_weights():
+    base = np.array([3.0, 1.0, 2.0])
+    w = agg.staleness_weights(base, [0, 0, 0], 0.9)
+    np.testing.assert_allclose(w, base / base.sum(), rtol=1e-6)
+    assert agg.staleness_weights([], [], 0.5).size == 0
+    with pytest.raises(ValueError):
+        agg.staleness_weights([0.0, 0.0], [1, 2], 0.5)
+    with pytest.raises(ValueError):
+        agg.staleness_weights([-1.0, 2.0], [0, 0], 0.5)
+
+
+def test_staler_updates_weigh_less():
+    w = agg.staleness_weights([1.0, 1.0, 1.0, 1.0], [0, 1, 2, 5], 1.0)
+    assert np.all(np.diff(w) < 0)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 50.0), min_size=1, max_size=8),
+       st.lists(st.integers(0, 6), min_size=8, max_size=8),
+       st.floats(0.0, 3.0))
+def test_staleness_weights_are_a_distribution(base, stale, decay):
+    """For ANY (participation weights, staleness, decay) combination the
+    merge weights are non-negative and sum to 1 — the renormalisation
+    survives dropout-shrunken cohorts and arbitrarily stale arrivals."""
+    stale = stale[:len(base)]
+    w = agg.staleness_weights(base, stale, decay)
+    assert w.shape == (len(base),)
+    assert np.all(w >= 0)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    # decayed ordering: equal base weights can only lose mass with staleness
+    if decay > 0 and len(base) >= 2 and base[0] == base[1]:
+        if stale[0] < stale[1]:
+            assert w[0] > w[1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=5),
+       st.lists(st.floats(0.1, 10.0), min_size=0, max_size=4),
+       st.lists(st.integers(1, 5), min_size=4, max_size=4),
+       st.floats(0.0, 2.0))
+def test_packed_async_row_conserves_total_weight(on_w, arr_w, arr_s, decay):
+    """The packed engines' split merge (on-mesh row + host-side scales)
+    must reproduce ``staleness_weights`` exactly: the row over on-time
+    lanes plus the arrival scales is the same distribution."""
+    arr_s = arr_s[:len(arr_w)]
+    arrivals = tuple(AsyncUpdate(client=i, birth=0, arrival=s, weight=w,
+                                 params={})
+                     for i, (w, s) in enumerate(zip(arr_w, arr_s)))
+    on_time = np.ones(len(on_w), bool)
+    row, scales = packed_async_row(np.asarray(on_w), on_time, arrivals, decay)
+    np.testing.assert_allclose(row.sum() + sum(scales), 1.0, rtol=1e-5)
+    ref = agg.staleness_weights(list(on_w) + list(arr_w),
+                                [0] * len(on_w) + list(arr_s), decay)
+    np.testing.assert_allclose(np.concatenate([row, scales]), ref, rtol=1e-5)
+    # masked (stale/idle) lanes get exactly zero row weight
+    if len(on_w) >= 2:
+        on_time2 = on_time.copy()
+        on_time2[0] = False
+        row2, _ = packed_async_row(np.asarray(on_w), on_time2, arrivals,
+                                   decay)
+        assert row2[0] == 0.0
+
+
+def test_staleness_merge_matches_reference_average():
+    rng = np.random.default_rng(0)
+    mk = lambda: {"w": rng.normal(size=(3, 2)).astype(np.float32),
+                  "b": rng.normal(size=(2,)).astype(np.float32)}
+    on = [mk(), mk()]
+    arrivals = (AsyncUpdate(client=5, birth=1, arrival=3, weight=4.0,
+                            params=mk()),)
+    got = staleness_merge(on, [1.0, 2.0], arrivals, 0.5)
+    ref = agg.staleness_weighted_average(on + [arrivals[0].params],
+                                         [1.0, 2.0, 4.0], [0, 0, 2],
+                                         decay=0.5)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(got[k], ref[k], rtol=1e-6)
+
+
+# ------------------------------------------------------------------- buffer
+def _upd(client, birth, arrival, weight=1.0, params="p"):
+    return AsyncUpdate(client=client, birth=birth, arrival=arrival,
+                       weight=weight, params=params)
+
+
+def test_buffer_pop_due_partitions_by_arrival_round():
+    buf = StalenessBuffer(max_staleness=2)
+    buf.push(_upd(0, birth=1, arrival=2))
+    buf.push(_upd(1, birth=1, arrival=3))
+    buf.push(_upd(2, birth=1, arrival=2))
+    assert len(buf) == 3
+    arrivals, dropped = buf.pop_due(2)
+    assert [u.client for u in arrivals] == [0, 2] and dropped == 0
+    assert len(buf) == 1                       # client 1 still in flight
+    arrivals, dropped = buf.pop_due(3)
+    assert [u.client for u in arrivals] == [1] and dropped == 0
+    assert len(buf) == 0
+
+
+def test_buffer_tombstones_too_stale_updates_at_push():
+    buf = StalenessBuffer(max_staleness=1)
+    buf.push(_upd(0, birth=1, arrival=2))      # s=1: kept
+    buf.push(_upd(1, birth=1, arrival=4))      # s=3 > 1: tombstoned NOW
+    assert buf.entries[1].params is None       # params freed immediately
+    assert len(buf) == 2                       # but the entry still rides
+    arrivals, dropped = buf.pop_due(2)
+    assert [u.client for u in arrivals] == [0] and dropped == 0
+    arrivals, dropped = buf.pop_due(4)
+    assert arrivals == [] and dropped == 1     # counted at ARRIVAL round
+    with pytest.raises(ValueError):
+        StalenessBuffer(max_staleness=-1)
+
+
+def test_buffer_checkpoint_roundtrip_preserves_order_and_tombstones():
+    buf = StalenessBuffer(max_staleness=1)
+    p0 = {"w": np.arange(4.0, dtype=np.float32)}
+    p1 = {"w": np.arange(4.0, 8.0, dtype=np.float32)}
+    buf.push(_upd(3, birth=2, arrival=3, weight=5.0, params=p0))
+    buf.push(_upd(1, birth=2, arrival=9, weight=2.0))   # tombstone
+    buf.push(_upd(4, birth=3, arrival=4, weight=1.0, params=p1))
+    meta, params = buf.meta(), buf.params_list()
+    assert [m["has_params"] for m in meta] == [True, False, True]
+    assert len(params) == 2                    # tombstones ship no arrays
+    fresh = StalenessBuffer(max_staleness=1)
+    fresh.load(meta, params)
+    assert fresh.meta() == meta
+    for a, b in zip(fresh.params_list(), params):
+        np.testing.assert_array_equal(a["w"], b["w"])
+    # staleness survives the round-trip (arrival - birth, not recomputed)
+    assert [u.staleness for u in fresh.entries] == [1, 7, 1]
+
+
+# ------------------------------------------------------- loop engine (fast)
+def _loop_cfg(**kw):
+    from repro.fed.rounds import FedConfig
+    base = dict(algorithm="fedavg", engine="loop", num_clients=6, alpha=1.0,
+                rounds=2, local_epochs=1, batch_size=32, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_async_mode_without_stragglers_is_bitwise_identical():
+    """The acceptance bar: async on + nobody straggles must take the
+    synchronous fast path — the SAME floats, not merely close ones."""
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import run_federated
+    ds = load_dataset("mnist", small=True)
+    h_sync = run_federated(ds, _loop_cfg())
+    h_asn = run_federated(ds, _loop_cfg(async_mode=True, straggler_frac=0.0))
+    assert h_asn["acc"] == h_sync["acc"]
+    assert h_asn["loss"] == h_sync["loss"]
+    assert h_asn["stragglers"] == [0, 0]
+    assert h_asn["stale_merged"] == [0, 0]
+    assert h_asn["stale_dropped"] == [0, 0]
+    assert h_asn["buffered"] == [0, 0]
+    assert "stragglers" not in h_sync          # sync history stays clean
+
+
+def _find_seed(n_clients, pred, **sched_kw):
+    labels = np.zeros(n_clients, int)
+    for seed in range(300):
+        if pred(RoundScheduler(labels, seed=seed, **sched_kw).plan(1)):
+            return seed
+    raise AssertionError("no matching seed in 300 tries")
+
+
+def _initial_eval(ds, cfg):
+    """(acc, loss) of the never-trained initial global model — what a
+    no-op first round must reproduce exactly."""
+    import jax
+
+    from repro.data.pipeline import make_client_shards
+    from repro.fed.algorithms import make_algorithm
+    alg = make_algorithm(cfg)
+    shards = make_client_shards(ds, cfg.num_clients, cfg.alpha, seed=cfg.seed)
+    alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))
+    return alg.eval()
+
+
+def test_all_straggler_round_leaves_the_global_model_untouched():
+    """Every participant missing the deadline with an empty buffer is a
+    no-op round: round 1's eval equals the initial model's eval, and every
+    update sits in the buffer."""
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import run_federated
+    seed = _find_seed(4, lambda p: p.active.all() and p.stragglers.all(),
+                      async_mode=True, straggler_frac=0.9)
+    ds = load_dataset("mnist", small=True)
+    cfg = _loop_cfg(num_clients=4, rounds=1, async_mode=True,
+                    straggler_frac=0.9, max_staleness=3, seed=seed)
+    acc0, loss0 = _initial_eval(ds, cfg)
+    h = run_federated(ds, cfg)
+    assert h["stragglers"] == [4]
+    assert h["stale_merged"] == [0] and h["stale_dropped"] == [0]
+    assert h["buffered"] == [4]
+    assert h["acc"][0] == acc0 and h["loss"][0] == loss0
+
+
+def test_all_dropout_async_round_is_a_noop():
+    """Every invitee failing mid-round (with nothing in flight) leaves the
+    async path's global model untouched too — the dropout no-op semantics
+    survive async_mode."""
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import run_federated
+    seed = _find_seed(4, lambda p: not p.active.any(), dropout_rate=0.9)
+    ds = load_dataset("mnist", small=True)
+    cfg = _loop_cfg(num_clients=4, rounds=1, async_mode=True,
+                    straggler_frac=0.3, dropout_rate=0.9, seed=seed)
+    acc0, loss0 = _initial_eval(ds, cfg)
+    h = run_federated(ds, cfg)
+    assert h["stragglers"] == [0]          # dropped clients never straggle
+    assert h["buffered"] == [0]
+    assert h["acc"][0] == acc0 and h["loss"][0] == loss0
+
+
+def test_straggler_updates_are_conserved_across_the_run():
+    """Every pushed update is merged, dropped, or still buffered at the
+    end — nothing vanishes, nothing is double-counted.  With
+    ``max_staleness=0`` every late arrival is dropped."""
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import run_federated
+    ds = load_dataset("mnist", small=True)
+    h = run_federated(ds, _loop_cfg(rounds=3, async_mode=True,
+                                    straggler_frac=0.5, max_staleness=2,
+                                    seed=3))
+    pushed = sum(h["stragglers"])
+    assert pushed > 0, "frac=0.5 should straggle someone in 3 rounds"
+    assert pushed == (sum(h["stale_merged"]) + sum(h["stale_dropped"])
+                      + h["buffered"][-1])
+    h0 = run_federated(ds, _loop_cfg(rounds=3, async_mode=True,
+                                     straggler_frac=0.5, max_staleness=0,
+                                     seed=3))
+    assert h0["stragglers"] == h["stragglers"]  # same speed model draws
+    assert sum(h0["stale_merged"]) == 0         # every arrival too stale
+    assert sum(h0["stale_dropped"]) + h0["buffered"][-1] == pushed
+
+
+# ------------------------------------------- packed engine acceptance tests
+_ASYNC_BASELINE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    from repro.data.synthetic import load_dataset
+    from repro.fed import fedstate
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedavg", num_clients=8, alpha=1.0, rounds=3,
+                  local_epochs=1, batch_size=32, seed=0)
+
+    # packed engine: async on + no stragglers == async off, bitwise
+    hp0 = run_federated(ds, FedConfig(engine="sharded", pack=2, **common))
+    hp1 = run_federated(ds, FedConfig(engine="sharded", pack=2,
+                                      async_mode=True, **common))
+    assert hp0["acc"] == hp1["acc"] and hp0["loss"] == hp1["loss"]
+
+    # loop/packed parity under stragglers, and identical accounting
+    acommon = dict(async_mode=True, straggler_frac=0.5, max_staleness=2,
+                   **common)
+    hl = run_federated(ds, FedConfig(engine="loop", **acommon))
+    hp = run_federated(ds, FedConfig(engine="sharded", pack=2, **acommon))
+    assert sum(hl["stragglers"]) > 0
+    assert hl["stragglers"] == hp["stragglers"]
+    assert hl["stale_merged"] == hp["stale_merged"]
+    assert hl["stale_dropped"] == hp["stale_dropped"]
+    assert hl["buffered"] == hp["buffered"]
+    for a, b in zip(hl["acc"], hp["acc"]):
+        assert abs(a - b) <= 0.01, (hl["acc"], hp["acc"])
+
+    # loop kill-and-resume across a round with a NON-EMPTY buffer
+    d = tempfile.mkdtemp()
+    h_full = hl
+    run_federated(ds, FedConfig(engine="loop", **{**acommon, "rounds": 2},
+                                ckpt_dir=d, ckpt_every=1))
+    assert fedstate.latest_meta(d)["buffer"], "want in-flight updates"
+    h_res = run_federated(ds, FedConfig(engine="loop", **acommon,
+                                        ckpt_dir=d, resume=True))
+    assert h_res["acc"] == h_full["acc"]
+    assert h_res["loss"] == h_full["loss"]
+    assert h_res["stale_merged"] == h_full["stale_merged"]
+    assert h_res["stale_dropped"] == h_full["stale_dropped"]
+
+    # all-straggler and all-dropout rounds are no-ops on the PACKED engine
+    # (the loop-engine twins run in-process in this file)
+    import jax
+    import numpy as np
+    from repro.data.pipeline import make_client_shards
+    from repro.fed.algorithms import make_algorithm
+    from repro.fed.schedule import RoundScheduler
+
+    def initial_eval(cfg):
+        alg = make_algorithm(cfg)
+        shards = make_client_shards(ds, cfg.num_clients, cfg.alpha,
+                                    seed=cfg.seed)
+        alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))
+        return alg.eval()
+
+    def find_seed(pred, **kw):
+        labels = np.zeros(4, int)
+        return next(s for s in range(300)
+                    if pred(RoundScheduler(labels, seed=s, **kw).plan(1)))
+
+    small = dict(algorithm="fedavg", engine="sharded", pack=2,
+                 num_clients=4, alpha=1.0, rounds=1, local_epochs=1,
+                 batch_size=32, async_mode=True)
+    s_st = find_seed(lambda p: p.active.all() and p.stragglers.all(),
+                     async_mode=True, straggler_frac=0.9)
+    cfg_st = FedConfig(straggler_frac=0.9, seed=s_st, **small)
+    h_st = run_federated(ds, cfg_st)
+    assert (h_st["acc"][0], h_st["loss"][0]) == initial_eval(cfg_st)
+    assert h_st["stragglers"] == [4] and h_st["buffered"] == [4]
+
+    s_dd = find_seed(lambda p: not p.active.any(), dropout_rate=0.9)
+    cfg_dd = FedConfig(dropout_rate=0.9, straggler_frac=0.3, seed=s_dd,
+                       **small)
+    h_dd = run_federated(ds, cfg_dd)
+    assert (h_dd["acc"][0], h_dd["loss"][0]) == initial_eval(cfg_dd)
+    assert h_dd["stragglers"] == [0] and h_dd["buffered"] == [0]
+    print("ASYNC-BASELINE-OK", hl["acc"], hp["acc"])
+""")
+
+
+def test_async_baselines_loop_vs_packed_and_resume():
+    r = run_script(_ASYNC_BASELINE_SCRIPT)
+    assert "ASYNC-BASELINE-OK" in r.stdout, r.stdout + r.stderr
+
+
+_ASYNC_KD_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    # clustered KD under the FULL async gauntlet: stratified sampling +
+    # dropout + stragglers, loop vs packed mesh
+    common = dict(algorithm="fedsikd", num_clients=8, alpha=0.5, rounds=3,
+                  local_epochs=1, batch_size=32, num_clusters=2,
+                  teacher_warmup_epochs=1, seed=0,
+                  participation="stratified", clients_per_round=6,
+                  dropout_rate=0.2)
+    hp0 = run_federated(ds, FedConfig(engine="sharded", pack=2, **common))
+    hp1 = run_federated(ds, FedConfig(engine="sharded", pack=2,
+                                      async_mode=True, **common))
+    assert hp0["acc"] == hp1["acc"] and hp0["loss"] == hp1["loss"]
+
+    hl = run_federated(ds, FedConfig(engine="loop", async_mode=True,
+                                     straggler_frac=0.4, max_staleness=2,
+                                     **common))
+    hp = run_federated(ds, FedConfig(engine="sharded", pack=2,
+                                     async_mode=True, straggler_frac=0.4,
+                                     max_staleness=2, **common))
+    assert sum(hl["stragglers"]) > 0
+    assert hl["stragglers"] == hp["stragglers"]
+    assert hl["stale_merged"] == hp["stale_merged"]
+    assert hl["stale_dropped"] == hp["stale_dropped"]
+    for a, b in zip(hl["acc"], hp["acc"]):
+        assert abs(a - b) <= 0.01, (hl["acc"], hp["acc"])
+    print("ASYNC-KD-PARITY-OK", hl["acc"], hp["acc"])
+""")
+
+
+def test_async_kd_loop_vs_packed_parity():
+    r = run_script(_ASYNC_KD_PARITY_SCRIPT)
+    assert "ASYNC-KD-PARITY-OK" in r.stdout, r.stdout + r.stderr
+
+
+_ASYNC_KD_RESUME_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    from repro.data.synthetic import load_dataset
+    from repro.fed import fedstate
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    acommon = dict(algorithm="fedsikd", engine="sharded", pack=2,
+                   num_clients=8, alpha=0.5, rounds=3, local_epochs=1,
+                   batch_size=32, num_clusters=2, teacher_warmup_epochs=1,
+                   seed=0, participation="stratified", clients_per_round=6,
+                   dropout_rate=0.2, async_mode=True, straggler_frac=0.4,
+                   max_staleness=2)
+    d = tempfile.mkdtemp()
+    h_full = run_federated(ds, FedConfig(**acommon))
+    run_federated(ds, FedConfig(**{**acommon, "rounds": 2}, ckpt_dir=d,
+                                ckpt_every=1))
+    # the kill round MUST leave updates in flight, or the test is vacuous
+    assert fedstate.latest_meta(d)["buffer"], "want a non-empty buffer"
+    h_res = run_federated(ds, FedConfig(**acommon, ckpt_dir=d, resume=True))
+    assert h_res["acc"] == h_full["acc"] and h_res["loss"] == h_full["loss"]
+    assert h_res["stale_merged"] == h_full["stale_merged"]
+    assert h_res["buffered"] == h_full["buffered"]
+    print("ASYNC-KD-RESUME-OK")
+""")
+
+
+def test_async_kd_packed_resume_with_nonempty_buffer():
+    r = run_script(_ASYNC_KD_RESUME_SCRIPT)
+    assert "ASYNC-KD-RESUME-OK" in r.stdout, r.stdout + r.stderr

@@ -226,6 +226,60 @@ def test_example_row_is_fedavg_weighting():
                                    rtol=1e-6)
 
 
+# ------------------------------------------ PRNG stream registry (DESIGN §12)
+def test_prng_stream_registry_is_collision_free():
+    """Every scheduler/lifecycle stream is a SeedSequence over a distinct
+    ``[seed, ...]`` key tuple (schedule.py module docstring).  This
+    enumerates all six streams over an ADVERSARIAL (seed, round, client)
+    grid — including values equal to the salts themselves, the classic
+    fold-constant foot-gun — and asserts no tuple is shared by two streams.
+    The warm-up stream HAD such a collision (it reused round 0's sampling
+    stream); the explicit check at the bottom pins the fix."""
+    from repro.fed import schedule as sch
+    salts = (sch.SALT_DROPOUT, sch.SALT_LEAVE, sch.SALT_SPEED,
+             sch.SALT_WARMUP)
+    assert len(set(salts)) == len(salts)
+    owners: dict[tuple, str] = {}
+
+    def reg(stream, *key):
+        key = tuple(int(x) for x in key)
+        prev = owners.setdefault(key, stream)
+        assert prev == stream, f"{stream} collides with {prev} on {key}"
+
+    rounds = sorted({0, 1, 2, *salts})
+    clients = sorted({0, 1, 5, *salts})
+    for seed in sorted({0, 1, *salts}):
+        reg("warmup", seed, 0, sch.SALT_WARMUP, 0)
+        for r in rounds:
+            reg("sampling", seed, r + 1)
+            reg("dropout", seed, r + 1, sch.SALT_DROPOUT)
+            reg("leave", seed, r, sch.SALT_LEAVE)
+            for c in clients:
+                reg("latency", seed, r + 1, sch.SALT_SPEED, c)
+        for c in clients:
+            # round-free profile stream: register once per client
+            reg("profile", seed, 0, sch.SALT_SPEED, c)
+    # the historical bug, spelled out: warm-up must not be round 0's sample
+    assert (0, 1) in owners and owners[(0, 1)] == "sampling"
+
+
+def test_warmup_slice_is_not_round_zero_sample():
+    """Behavioral side of the collision fix: when C > slots the warm-up's
+    stratified slice draws from its own salted stream, so it does NOT
+    mirror ``plan(0)``'s sample (same counts, same caps — the pre-fix code
+    produced identical selections for EVERY seed)."""
+    differed = False
+    for seed in range(10):
+        s = RoundScheduler(LABELS, participation="stratified",
+                           clients_per_round=6, seed=seed)
+        assert s.n_clients > s.n_slots        # warm-up must slice
+        warm = set(s.warmup_plan().participants.tolist())
+        rnd0 = set(s.plan(0).participants.tolist())
+        assert len(warm) == s.n_slots
+        differed |= warm != rnd0
+    assert differed, "warm-up slice mirrors plan(0): stream collision"
+
+
 # ------------------------------------------- packed engine acceptance test
 _PACKED_PARITY_SCRIPT = textwrap.dedent("""
     import os

@@ -5,29 +5,36 @@ teacher warm-up, per-round teacher refresh, KD local steps, hierarchical
 aggregation) AND the paper's baselines (FedAvg/FedProx, which since the
 algorithm-strategy layer run on the packed mesh too) — sweeping the client
 count and the ``pack`` factor (client lanes per device) for the mesh
-engine — and reports wall-clock per round plus final accuracy:
+engine — and reports per-round wall-clock split by phase plus final acc:
 
   loop    — sequential per-client Python loop (reference engine)
   sharded — pack clients per device (C = devices x pack); fused Pallas KD
             steps inside lax.scan, grouped plan-weighted aggregation
-            (fed/sharded.py, DESIGN.md §8)
+            (fed/sharded.py, DESIGN.md §8, §13)
+
+Each row runs ONE ``run_federated`` invocation under the ``repro.perf``
+phase timer and splits it honestly:
+
+  steady_s_per_round — mean per-round wall clock over rounds 1+ (round 0
+                       carries jit compilation and is EXCLUDED)
+  compile_s          — round 0's excess over the steady rate: the one-off
+                       trace+compile cost of the round programs
+  phases             — steady-state mean seconds per round in each phase
+                       (stage / compute / aggregate from the packed
+                       strategies; eval / checkpoint from the driver)
 
 On CPU the sharded engine pays the Pallas-interpreter tax inside every
 student step, so the CPU wall-clock favours the loop engine — the number
 that matters for the scalable path is rounds/sec AT fixed per-device work
 as the client count grows (the loop engine is O(clients) per round, the
-sharded engine O(pack) given enough devices).  Each row reports the cold
-end-to-end time and ``rerun_s_per_round`` — a SECOND full invocation
-divided by the round count.  The rerun is NOT compile-free: every
-``run_federated`` call builds fresh jit closures, so shard_map re-traces
-and recompiles; what the rerun cancels is one-off process/warm-up noise
-(data staging, clustering, XLA autotuning).  Treat the trend per engine
-over commits, not as a steady-state step cost.  Emits a machine-readable
-JSON artifact so CI records that trajectory:
+sharded engine O(pack) given enough devices).  Emits a machine-readable
+JSON artifact so CI records the trajectory:
 
   PYTHONPATH=src python benchmarks/engine_bench.py                 # full sweep
   PYTHONPATH=src python benchmarks/engine_bench.py --quick \\
       --out BENCH_engines.json                                     # CI smoke
+  PYTHONPATH=src python benchmarks/engine_bench.py --hotpath \\
+      --out BENCH_hotpath.json      # §13 hot-path gate vs the PR 6 baseline
 """
 import argparse
 import json
@@ -39,8 +46,32 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import time
 
+from repro import perf
 from repro.data.synthetic import load_dataset
 from repro.fed.rounds import FedConfig, run_federated
+
+PHASES = ("stage", "compute", "aggregate", "eval", "checkpoint")
+
+# Steady-state s/round at PR 6 (commit 29d67c8) for the hot-path config
+# (sharded, C=8, pack=2, alpha=1.0, batch=32, clusters=3, warmup=1,
+# rounds=4), measured as inter-eval wall clock over rounds 2+ — the closest
+# pre-instrumentation proxy for steady_s_per_round.  The --hotpath gate
+# reports speedup against these numbers.
+PR6_STEADY_BASELINE = {
+    "method": "inter-eval wall clock, rounds 2+ of 4 (pre-perf-timer proxy "
+              "for steady_s_per_round), commit 29d67c8",
+    "fedsikd_s_per_round": 21.19,   # mean of [20.352, 22.029]
+    "fedavg_s_per_round": 25.99,    # mean of [27.396, 24.581]
+}
+
+
+def _round_total(bucket: dict) -> float:
+    """One perf bucket -> that round's wall clock.  ``round_total`` wraps
+    plan/stage/compute/aggregate; eval and checkpoint are driver-side
+    siblings (stage/compute/aggregate are NESTED inside round_total and
+    must not be double-counted)."""
+    return (bucket.get("round_total", 0.0) + bucket.get("eval", 0.0)
+            + bucket.get("checkpoint", 0.0))
 
 
 def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
@@ -50,7 +81,8 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  clients_per_round=None, dropout_rate: float = 0.0,
                  join_schedule=None, recluster_every: int = 0,
                  async_mode: bool = False, straggler_frac: float = 0.0,
-                 max_staleness: int = 2) -> dict:
+                 max_staleness: int = 2, donate: bool = True,
+                 prefetch: bool = True) -> dict:
     cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
@@ -60,15 +92,27 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                     join_schedule=join_schedule,
                     recluster_every=recluster_every,
                     async_mode=async_mode, straggler_frac=straggler_frac,
-                    max_staleness=max_staleness, seed=0)
+                    max_staleness=max_staleness, seed=0,
+                    donate=donate, prefetch=prefetch)
+    perf.enable()
     t0 = time.perf_counter()
     h = run_federated(ds, cfg)
     total = time.perf_counter() - t0
-    # second full invocation: cancels one-off warm-up noise, but re-traces
-    # and recompiles (fresh jit closures per call) — see module docstring
-    t0 = time.perf_counter()
-    h2 = run_federated(ds, cfg)
-    rerun = time.perf_counter() - t0
+    buckets = perf.snapshot()
+    perf.disable()
+
+    totals = [_round_total(b) for b in buckets]
+    if len(totals) >= 2:
+        steady = sum(totals[1:]) / len(totals[1:])
+        compile_s = max(totals[0] - steady, 0.0)
+        phases = {k: round(sum(b.get(k, 0.0) for b in buckets[1:])
+                           / len(totals[1:]), 4) for k in PHASES}
+    else:   # single round: no steady split possible
+        steady = totals[0] if totals else total
+        compile_s = None
+        phases = {k: round(buckets[0].get(k, 0.0), 4) for k in PHASES} \
+            if buckets else {}
+
     churn = ("-" if not cfg.lifecycle_enabled else
              "+".join([f"j{r}:{c}" for r, c in cfg.join_schedule or ()]
                       + ([f"re{recluster_every}"] if recluster_every else [])))
@@ -84,22 +128,88 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
             "stale_merged": sum(h.get("stale_merged", [])),
             "stale_dropped": sum(h.get("stale_dropped", [])),
             "rounds": rounds, "total_s": round(total, 3),
-            "rerun_s_per_round": round(rerun / rounds, 4),
-            "final_acc": h2["acc"][-1], "acc_curve": h["acc"]}
+            "compile_s": None if compile_s is None else round(compile_s, 3),
+            "steady_s_per_round": round(steady, 4),
+            "phases": phases,
+            "final_acc": h["acc"][-1], "acc_curve": h["acc"]}
+
+
+def print_rows(rows):
+    print(f"{'engine':8s} {'alg':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
+          f"{'part':>10s} {'drop':>5s} {'churn':>13s} {'async':>9s} "
+          f"{'total':>8s} {'compile':>8s} {'steady s/rnd':>13s} "
+          f"{'final acc':>10s}")
+    for r in rows:
+        comp = "-" if r["compile_s"] is None else f"{r['compile_s']:.1f}s"
+        print(f"{r['engine']:8s} {r['algorithm']:8s} {r['kd_impl']:10s} "
+              f"{r['clients']:3d} "
+              f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
+              f"{r['dropout_rate']:5.2f} {r['churn']:>13s} "
+              f"{r['async']:>9s} "
+              f"{r['total_s']:7.1f}s {comp:>8s} "
+              f"{r['steady_s_per_round']:12.2f}s "
+              f"{r['final_acc']:10.3f}")
+        ph = r["phases"]
+        if any(ph.get(k) for k in PHASES):
+            print("    phases: " + "  ".join(
+                f"{k}={ph.get(k, 0.0):.2f}s" for k in PHASES))
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
-                    help="small CI smoke sweep (2 rows, 1 round each)")
+                    help="small CI smoke sweep (2 rounds each)")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="§13 hot-path gate: fedsikd + fedavg on the packed "
+                         "mesh (C=8, pack=2), steady-state vs PR 6 baseline")
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--out", default="BENCH_engines.json",
-                    help="JSON artifact path ('' disables)")
+    ap.add_argument("--out", default=None,
+                    help="JSON artifact path ('' disables; default "
+                         "BENCH_hotpath.json under --hotpath, "
+                         "BENCH_engines.json otherwise)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = "BENCH_hotpath.json" if args.hotpath else \
+            "BENCH_engines.json"
 
     ds = load_dataset("mnist", small=True)
+    if args.hotpath:
+        # EXACTLY the PR 6 baseline config (see PR6_STEADY_BASELINE)
+        rounds = args.rounds or 4
+        rows = [
+            bench_engine(ds, "sharded", algorithm="fedsikd", clients=8,
+                         pack=2, rounds=rounds),
+            bench_engine(ds, "sharded", algorithm="fedavg", clients=8,
+                         pack=2, rounds=rounds),
+        ]
+        print_rows(rows)
+        speedup = {}
+        for r in rows:
+            base = PR6_STEADY_BASELINE[f"{r['algorithm']}_s_per_round"]
+            speedup[r["algorithm"]] = round(base / r["steady_s_per_round"], 3)
+            print(f"hot path {r['algorithm']}: steady "
+                  f"{r['steady_s_per_round']:.2f}s/round vs PR6 "
+                  f"{base:.2f}s/round -> {speedup[r['algorithm']]:.2f}x")
+        if args.out:
+            artifact = {
+                "benchmark": "engine_hotpath",
+                "host": {"platform": platform.platform(),
+                         "python": platform.python_version()},
+                "config": {"dataset": "mnist-small", "engine": "sharded",
+                           "clients": 8, "pack": 2, "rounds": rounds,
+                           "alpha": 1.0, "batch_size": 32, "clusters": 3,
+                           "teacher_warmup_epochs": 1},
+                "baseline_pr6": PR6_STEADY_BASELINE,
+                "speedup_vs_pr6": speedup,
+                "rows": rows,
+            }
+            with open(args.out, "w") as f:
+                json.dump(artifact, f, indent=2)
+            print(f"wrote {args.out} ({len(rows)} rows)")
+        return
+
     if args.quick:
-        rounds = args.rounds or 1
+        rounds = args.rounds or 2
         rows = [
             bench_engine(ds, "loop", clients=8, rounds=rounds),
             bench_engine(ds, "sharded", clients=8, pack=2, rounds=rounds),
@@ -175,17 +285,7 @@ def main():
                          async_mode=True, straggler_frac=0.4),
         ]
 
-    print(f"{'engine':8s} {'alg':8s} {'kd_impl':10s} {'C':>3s} {'pack':>4s} "
-          f"{'part':>10s} {'drop':>5s} {'churn':>13s} {'async':>9s} "
-          f"{'cold total':>11s} {'rerun s/round':>14s} {'final acc':>10s}")
-    for r in rows:
-        print(f"{r['engine']:8s} {r['algorithm']:8s} {r['kd_impl']:10s} "
-              f"{r['clients']:3d} "
-              f"{str(r['pack'] or '-'):>4s} {r['participation']:>10s} "
-              f"{r['dropout_rate']:5.2f} {r['churn']:>13s} "
-              f"{r['async']:>9s} "
-              f"{r['total_s']:10.1f}s {r['rerun_s_per_round']:13.2f}s "
-              f"{r['final_acc']:10.3f}")
+    print_rows(rows)
     spread = [r["final_acc"] for r in rows
               if r["clients"] == 8 and r["participation"] == "full"
               and r["algorithm"] == "fedsikd" and r["churn"] == "-"

@@ -13,7 +13,12 @@ staleness rule (FedAsync / async-FL literature), composed with whatever
 base weights the algorithm already uses (plan weights or example counts).
 ``s = 0`` for every contributor reduces exactly to the synchronous rule.
 
-All operators act on arbitrary parameter pytrees.
+All operators act on arbitrary parameter pytrees.  Every weighted merge
+routes through ONE fused contraction per leaf (``_merge_leaf``): the decay,
+the renormalisation, and the weighted sum happen in a single program — the
+Pallas ``kernels.fused_merge`` kernel on TPU, an equivalent jitted jnp
+einsum elsewhere (interpret-mode Pallas would put a Python interpreter in
+the hot path) — instead of the old chain of N eager scale-adds per leaf.
 """
 from __future__ import annotations
 
@@ -23,19 +28,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as _kops
+
+
+@jax.jit
+def _merge_stacked(stacked, w, s, decay):
+    """(N, ...) leaf stack -> (...) float32 decayed weighted mean (the jnp
+    twin of kernels.fused_merge, used off-TPU)."""
+    wn = w * (1.0 + s) ** (-decay)
+    wn = wn / jnp.sum(wn)
+    return jnp.einsum("n,n...->...", wn, stacked.astype(jnp.float32))
+
+
+def _fused_merge(params: Sequence, base_weights, staleness=None, *,
+                 decay: float = 0.0):
+    """Merge N param pytrees under staleness-decayed, renormalised weights:
+    out = sum_i w_i(1+s_i)^-decay p_i / sum_j w_j(1+s_j)^-decay, one fused
+    contraction per leaf, cast back to each leaf's dtype."""
+    n = len(params)
+    w = jnp.asarray(np.asarray(base_weights, np.float32))
+    s = (jnp.zeros(n, jnp.float32) if staleness is None
+         else jnp.asarray(np.asarray(staleness, np.float32)))
+    use_kernel = jax.default_backend() == "tpu"
+
+    def merge(*leaves):
+        stacked = jnp.stack(leaves)
+        if use_kernel:
+            out = _kops.fused_merge(stacked, w, s, decay=decay)
+        else:
+            out = _merge_stacked(stacked, w, s, decay)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(merge, *params)
+
 
 def weighted_average(params: Sequence, weights: Sequence[float]):
     """sum_i weights_i * params_i / sum(weights) over pytrees."""
-    w = np.asarray(weights, np.float64)
-    w = w / w.sum()
-
-    def avg(*leaves):
-        out = jnp.zeros_like(leaves[0], dtype=jnp.float32)
-        for wi, leaf in zip(w, leaves):
-            out = out + wi * leaf.astype(jnp.float32)
-        return out.astype(leaves[0].dtype)
-
-    return jax.tree_util.tree_map(avg, *params)
+    return _fused_merge(params, weights)
 
 
 def fedavg(params: Sequence, num_examples: Sequence[int]):
@@ -102,12 +131,14 @@ def staleness_weights(base_weights, staleness, decay: float) -> np.ndarray:
 
 def staleness_weighted_average(params: Sequence, base_weights,
                                staleness, *, decay: float):
-    """Bounded-staleness merge: ``weighted_average`` under the decayed,
-    renormalised weights (loop engines; the packed engines split the same
-    weights between the on-mesh contraction row and the host-side stale
-    additions — fed/algorithms/)."""
-    return weighted_average(params,
-                            staleness_weights(base_weights, staleness, decay))
+    """Bounded-staleness merge under the decayed, renormalised weights
+    (loop engines; the packed engines split the same weights between the
+    on-mesh contraction row and the host-side stale additions —
+    fed/algorithms/).  Decay + renormalisation + weighted sum run fused, in
+    the same contraction as ``weighted_average`` (``staleness_weights``
+    is still called first for its validation errors)."""
+    staleness_weights(base_weights, staleness, decay)   # validate loudly
+    return _fused_merge(params, base_weights, staleness, decay=decay)
 
 
 def add_scaled(acc, params, scale: float):

@@ -121,6 +121,13 @@ class Algorithm:
         cap = cfg.clients_per_round or cfg.num_clients
         return fed_mesh_layout(cap, pack=cfg.pack)[0]
 
+    def prefetch(self, plan: RoundPlan) -> None:
+        """Optional overlap hook: begin staging ``plan``'s data while the
+        CURRENT round computes (the driver hands in the next round's plan
+        before ``run_round``; plans are pure functions of (seed, round), so
+        peeking ahead is side-effect free).  Default: no-op — only the
+        packed engines double-buffer their slot staging."""
+
     def run_round(self, plan: RoundPlan, rnd: int) -> dict:
         raise NotImplementedError
 

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import perf
 from repro.core import aggregation as agg
 from repro.fed import schedule
 from repro.fed.algorithms.base import (Algorithm, local_epochs,
@@ -181,8 +182,32 @@ class PackedBaseline(_BaselineBase):
             seed=cfg.seed)
         self.round_fn = sh.make_packed_baseline_round(
             self.mesh, cfg.pack, self.t_fwd, self.opt,
-            prox_mu=cfg.prox_mu if self.is_prox else 0.0)
+            prox_mu=cfg.prox_mu if self.is_prox else 0.0,
+            donate=cfg.donate)
         self.stager = sh.SlotStager(self.mesh, self.x_all, self.y_all)
+        # pre-round broadcast + fresh opt init as ONE jitted program whose
+        # outputs carry the packed slot sharding — that is what makes the
+        # round program's donation of (p_s, s_s) usable (DESIGN.md §13)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        S, opt = self.S, self.opt
+        slot_sh = NamedSharding(self.mesh, P(sh.AXIS))
+
+        def prep(global_p):
+            p_s = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (S,) + a.shape), global_p)
+            s_s = jax.vmap(opt.init)(p_s)       # fresh local opt (loop too)
+            return p_s, s_s
+
+        self._prep = jax.jit(prep, out_shardings=slot_sh)
+        self._take0 = jax.jit(
+            lambda t: jax.tree_util.tree_map(lambda a: a[0], t))
+
+    def prefetch(self, plan):
+        """Overlap the NEXT round's slot staging with this round's compute
+        (see ShardedClusteredKD.prefetch)."""
+        if plan is not None and plan.active.any():
+            self.stager.prefetch(plan)
 
     def _slot_keys(self, rnd, plan):
         """Per-slot training keys (sh.slot_client_keys, stable under slot
@@ -214,25 +239,29 @@ class PackedBaseline(_BaselineBase):
                                            cfg.staleness_decay)
         else:
             row, scales = np.zeros(self.S, np.float32), []
-        p_s = sh.replicate_params(self.global_params, self.S)
-        s_s = jax.vmap(self.opt.init)(p_s)  # fresh local opt (loop too)
-        xs, ys = self.stager.stage(plan)
-        p_s, p_local, _s_s, loss = self.round_fn(
-            p_s, s_s, xs, ys, jnp.asarray(plan.steps_for(self.steps_all)),
-            self._slot_keys(rnd, plan),
-            jnp.asarray(row), self.global_params)
-        if not has_async:
+        with perf.span("stage"):
+            xs, ys = self.stager.stage(plan)
+            p_s, s_s = self._prep(self.global_params)
+        with perf.span("compute"):
+            p_s, p_local, _s_s, loss = self.round_fn(
+                p_s, s_s, xs, ys, jnp.asarray(plan.steps_for(self.steps_all)),
+                self._slot_keys(rnd, plan),
+                jnp.asarray(row), self.global_params)
+            loss = float(loss)   # block for honest timing attribution
+        with perf.span("aggregate"):
             # every slot holds the aggregated model after the weighted mean
-            self.global_params = jax.tree_util.tree_map(lambda a: a[0], p_s)
-            return {"train_loss": float(loss)}
+            p0 = self._take0(p_s)
+        if not has_async:
+            self.global_params = p0
+            return {"train_loss": loss}
         for t in np.flatnonzero(plan.stragglers):
             self.buffer.push(AsyncUpdate(
                 client=int(plan.slot_client[t]), birth=rnd,
                 arrival=rnd + int(plan.delays[t]),
                 weight=float(self.sizes[int(plan.slot_client[t])]),
-                params=jax.tree_util.tree_map(lambda a: a[t], p_local)))
+                params=sh.take_rows(p_local, t)))
         if plan.on_time.any():
-            acc = jax.tree_util.tree_map(lambda a: a[0], p_s)
+            acc = p0
             for u, sc in zip(arrivals, scales):
                 acc = agg.add_scaled(acc, u.params, sc)
             self.global_params = acc
@@ -240,7 +269,7 @@ class PackedBaseline(_BaselineBase):
             self.global_params = merge_arrivals_only(arrivals,
                                                      cfg.staleness_decay)
         # else: all-straggler round, empty buffer — params unchanged
-        return {"train_loss": float(loss)}
+        return {"train_loss": loss}
 
     def history_extras(self):
         return {"pack": self.scheduler.pack, "train_loss": []}

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import perf
 from repro.core import aggregation as agg
 from repro.core import kmeans, stats
 from repro.fed import schedule
@@ -391,7 +392,62 @@ class ShardedClusteredKD(_ClusteredKDBase):
         self.round_fn = sh.make_packed_kd_round(
             self.mesh, cfg.pack, t_fwd, s_fwd, self.opt, self.s_opt,
             kd_temperature=cfg.kd_temperature, kd_alpha=cfg.kd_alpha,
-            kd_impl=cfg.kd_impl)
+            kd_impl=cfg.kd_impl, donate=cfg.donate)
+        self._build_prep_finish()
+
+    def _build_prep_finish(self):
+        """The pre-round GATHER and post-round SCATTER as two jitted
+        programs.  Eagerly, these are hundreds of per-leaf dispatches on
+        sharded arrays (~30ms each — the profiled hot spot: the scatter
+        alone cost ~19s/round); jitted they are two fixed-shape programs
+        whose index operands (``kidx``, ``refreshed``, ``safe``) are traced
+        inputs, so sampled rounds never recompile.
+
+        ``prep`` emits every (S, ...) output with the packed slot sharding,
+        which is what makes the round program's donation usable: the round
+        consumes prep's outputs in place.  ``finish`` donates the round's
+        slot outputs (tp_s/ts_s/sp_s) but NEVER the canonical (K, ...)
+        stacks — the async checkpoint writer may still hold references to
+        those from a previous round's submit (DESIGN.md §13)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        cfg, sh = self.cfg, self.sh
+        S, K = self.S, self.K
+        s_opt = self.s_opt
+        tree_map = jax.tree_util.tree_map
+        slot_sh = NamedSharding(self.mesh, P(sh.AXIS))
+
+        def prep(tp_k, ts_k, sp_global, kidx):
+            tp_s = tree_map(lambda a: a[kidx], tp_k)
+            ts_s = tree_map(lambda a: a[kidx], ts_k)
+            sp_s = tree_map(
+                lambda a: jnp.broadcast_to(a, (S,) + a.shape), sp_global)
+            ss_s = jax.vmap(s_opt.init)(sp_s)   # fresh student opt (loop too)
+            return tp_s, ts_s, sp_s, ss_s
+
+        self._prep = jax.jit(prep, out_shardings=slot_sh)
+
+        def scatter(new, old, refreshed, safe):
+            def upd(n, o):
+                mask = refreshed.reshape((K,) + (1,) * (o.ndim - 1))
+                return jnp.where(mask, n[safe], o)
+            return tree_map(upd, new, old)
+
+        def finish(tp_s, ts_s, sp_s, tp_k, ts_k, refreshed, safe):
+            tp_k = scatter(tp_s, tp_k, refreshed, safe)
+            ts_k = scatter(ts_s, ts_k, refreshed, safe)
+            sp0 = tree_map(lambda a: a[0], sp_s)
+            return tp_k, ts_k, sp0
+
+        donate = (0, 1, 2) if cfg.donate else ()
+        self._finish = jax.jit(finish, donate_argnums=donate)
+
+        def finish_warm(tp_s, ts_s, tp_k, ts_k, refreshed, safe):
+            return (scatter(tp_s, tp_k, refreshed, safe),
+                    scatter(ts_s, ts_k, refreshed, safe))
+
+        donate_w = (0, 1) if cfg.donate else ()
+        self._finish_warm = jax.jit(finish_warm, donate_argnums=donate_w)
 
     def _restage_teacher_feed(self):
         """(Re)build the per-client teacher source, its step budgets, and
@@ -444,17 +500,12 @@ class ShardedClusteredKD(_ClusteredKDBase):
         comp = np.where(plan.active, plan.slot_cluster, 0)
         return np.where(plan.active, self.cluster_ids[comp], 0)
 
-    def _slot_state(self, plan):
-        """Gather canonical per-cluster teacher state onto the plan's slots
-        (idle slots carry row 0's state; they never train)."""
-        kidx = self._teacher_row(plan)
-        tp = jax.tree_util.tree_map(lambda a: a[kidx], self.tp_k)
-        ts = jax.tree_util.tree_map(lambda a: a[kidx], self.ts_k)
-        return tp, ts
-
-    def _scatter_teachers(self, plan, tp_s, ts_s):
-        """Write each refreshed cluster teacher back from its first active
-        slot; untouched clusters keep their previous state."""
+    def _scatter_src(self, plan):
+        """Host-side scatter operands for ``_finish``: which teacher rows a
+        round refreshed (``refreshed``, (K,) bool) and the first active slot
+        sourcing each (``safe``, (K,) int; untouched rows read slot 0 but
+        are masked out).  Traced inputs to the jitted scatter — index
+        changes never recompile."""
         K, S = self.K, self.S
         row = self._teacher_row(plan)
         src = np.full(K, -1, np.int64)
@@ -463,13 +514,7 @@ class ShardedClusteredKD(_ClusteredKDBase):
                 src[row[s]] = s
         refreshed = src >= 0
         safe = np.where(refreshed, src, 0)
-
-        def upd(new, old):
-            mask = jnp.asarray(refreshed).reshape((K,) + (1,) * (old.ndim - 1))
-            return jnp.where(mask, new[safe], old)
-
-        self.tp_k = jax.tree_util.tree_map(upd, tp_s, self.tp_k)
-        self.ts_k = jax.tree_util.tree_map(upd, ts_s, self.ts_k)
+        return jnp.asarray(refreshed), jnp.asarray(safe)
 
     def _student_keys(self, salt, plan):
         """Per-slot training keys, folded by client id (sh.slot_client_keys:
@@ -502,15 +547,30 @@ class ShardedClusteredKD(_ClusteredKDBase):
             self.t_src, int(w_steps_all.max()), cfg.batch_size, seed=cfg.seed)
         planw = self.scheduler.warmup_plan()
         warm = sh.make_packed_teacher_phase(self.mesh, cfg.pack,
-                                            self.t_model[1], self.opt)
-        tp_s, ts_s = self._slot_state(planw)
+                                            self.t_model[1], self.opt,
+                                            donate=cfg.donate)
+        # prep's slot-sharded gather (sp/ss ride along unused) keeps the
+        # warm program's donation usable, exactly as in run_round
+        tp_s, ts_s, _sp, _ss = self._prep(
+            self.tp_k, self.ts_k, self.sp_global,
+            jnp.asarray(self._teacher_row(planw)))
         wx, wy = sh.stage_on_slots(self.mesh, planw, wx_all, wy_all)
         tp_s, ts_s, wloss = warm(
             tp_s, ts_s, wx, wy, jnp.asarray(planw.steps_for(w_steps_all)),
             self._teacher_keys(9001, planw), jnp.asarray(planw.sync_matrix()))
-        self._scatter_teachers(planw, tp_s, ts_s)
+        refreshed, safe = self._scatter_src(planw)
+        self.tp_k, self.ts_k = self._finish_warm(
+            tp_s, ts_s, self.tp_k, self.ts_k, refreshed, safe)
         if self.progress:
             print(f"  warmup  teacher_loss={float(wloss):.4f}")
+
+    def prefetch(self, plan):
+        """Overlap the NEXT round's slot staging with the current round's
+        device compute (plans are pure functions of (seed, round), so
+        peeking ahead is side-effect free; a lifecycle rebuild in between
+        just invalidates the prefetch key and stage() falls back)."""
+        if plan is not None and plan.active.any():
+            self.stager.prefetch(plan)
 
     def run_round(self, plan, rnd):
         cfg, sh, S = self.cfg, self.sh, self.S
@@ -535,24 +595,31 @@ class ShardedClusteredKD(_ClusteredKDBase):
             # the program still trains the stragglers (buffered below), but
             # its aggregate is discarded and the global student holds
             row, scales = np.zeros(S, np.float32), []
-        tp_s, ts_s = self._slot_state(plan)
-        sp_s = sh.replicate_params(self.sp_global, S)
-        ss_s = jax.vmap(self.s_opt.init)(sp_s)   # fresh student opt (loop too)
-        tx, ty, sx, sy = self.stager.stage(plan)
-        # disjoint even/odd salts keep teacher and student PRNG streams
-        # from colliding on clients whose id equals their cluster index
-        tp_s, ts_s, sp_s, sp_local, _ss_s, t_loss, s_loss = self.round_fn(
-            tp_s, ts_s, sp_s, ss_s, tx, ty,
-            jnp.asarray(plan.steps_for(self.t_steps_all)), sx, sy,
-            jnp.asarray(plan.steps_for(self.s_steps_all)),
-            self._teacher_keys(2 * rnd, plan), self._student_keys(2 * rnd + 1, plan),
-            jnp.asarray(plan.sync_matrix()), jnp.asarray(row))
-        self._scatter_teachers(plan, tp_s, ts_s)
+        with perf.span("stage"):
+            tx, ty, sx, sy = self.stager.stage(plan)
+            tp_s, ts_s, sp_s, ss_s = self._prep(
+                self.tp_k, self.ts_k, self.sp_global,
+                jnp.asarray(self._teacher_row(plan)))
+        with perf.span("compute"):
+            # disjoint even/odd salts keep teacher and student PRNG streams
+            # from colliding on clients whose id equals their cluster index
+            tp_s, ts_s, sp_s, sp_local, _ss_s, t_loss, s_loss = self.round_fn(
+                tp_s, ts_s, sp_s, ss_s, tx, ty,
+                jnp.asarray(plan.steps_for(self.t_steps_all)), sx, sy,
+                jnp.asarray(plan.steps_for(self.s_steps_all)),
+                self._teacher_keys(2 * rnd, plan),
+                self._student_keys(2 * rnd + 1, plan),
+                jnp.asarray(plan.sync_matrix()), jnp.asarray(row))
+            # block on the scalars so timing attribution stays honest
+            t_loss, s_loss = float(t_loss), float(s_loss)
+        with perf.span("aggregate"):
+            refreshed, safe = self._scatter_src(plan)
+            self.tp_k, self.ts_k, sp0 = self._finish(
+                tp_s, ts_s, sp_s, self.tp_k, self.ts_k, refreshed, safe)
         if not has_async:
-            # every slot holds the aggregated student after the weighted mean
-            self.sp_global = jax.tree_util.tree_map(lambda a: a[0], sp_s)
-            return {"teacher_loss": float(t_loss),
-                    "student_loss": float(s_loss)}
+            # every slot held the aggregated student; sp0 is slot 0's copy
+            self.sp_global = sp0
+            return {"teacher_loss": t_loss, "student_loss": s_loss}
         # straggler lanes: pre-aggregation students into the buffer, each
         # with its birth-round plan weight
         for t in np.flatnonzero(plan.stragglers):
@@ -560,9 +627,9 @@ class ShardedClusteredKD(_ClusteredKDBase):
                 client=int(plan.slot_client[t]), birth=rnd,
                 arrival=rnd + int(plan.delays[t]),
                 weight=float(plan.slot_weight[t]),
-                params=jax.tree_util.tree_map(lambda a: a[t], sp_local)))
+                params=sh.take_rows(sp_local, t)))
         if plan.on_time.any():
-            acc = jax.tree_util.tree_map(lambda a: a[0], sp_s)
+            acc = sp0
             for u, sc in zip(arrivals, scales):
                 acc = agg.add_scaled(acc, u.params, sc)
             self.sp_global = acc
@@ -570,7 +637,8 @@ class ShardedClusteredKD(_ClusteredKDBase):
             self.sp_global = merge_arrivals_only(arrivals,
                                                  cfg.staleness_decay)
         # else: all-straggler round with an empty buffer — student holds
-        return {"teacher_loss": float(t_loss), "student_loss": float(s_loss)}
+        # (sp0 was the zero-row aggregate and is discarded)
+        return {"teacher_loss": t_loss, "student_loss": s_loss}
 
     def eval(self):
         return evaluate(self.student_steps["eval"], self.sp_global,

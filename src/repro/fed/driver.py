@@ -49,6 +49,7 @@ from typing import Any
 
 import jax
 
+from repro import perf
 from repro.data.pipeline import make_client_shards
 from repro.fed import fedstate
 from repro.fed.lifecycle import ClientLifecycle
@@ -197,6 +198,7 @@ class RoundDriver:
         self.ds, self.cfg, self.alg = ds, cfg, algorithm
         self.progress = progress
         self.buffer: StalenessBuffer | None = None
+        self.writer: fedstate.AsyncCheckpointWriter | None = None
 
     def run(self) -> dict:
         ds, cfg, alg = self.ds, self.cfg, self.alg
@@ -254,36 +256,59 @@ class RoundDriver:
                 self._save(history, fp, rnd)
             start_round = min(alg.setup_rounds, cfg.rounds)
 
-        for rnd in range(start_round + 1, cfg.rounds + 1):
-            metrics = {}
-            if lc is not None:
-                ev = lc.event(rnd)
-                if ev.recluster:
-                    metrics.update(alg.apply_lifecycle(ev) or {})
-                    if alg.labels is not None:
-                        history["labels_history"].append(
-                            [rnd, [int(l) for l in alg.labels]])
-                    if self.progress and ev.changed:
-                        print(f"  round {rnd:3d}  lifecycle: "
-                              f"+{len(ev.joins)} joined, "
-                              f"-{len(ev.leaves)} left, "
-                              f"{int(ev.active.sum())} active")
-            plan = alg.scheduler.plan(rnd)
-            if self.buffer is not None:
-                arrivals, dropped = self.buffer.pop_due(rnd)
-                alg.arrivals = tuple(arrivals)
-                metrics.update(alg.run_round(plan, rnd))
-                alg.arrivals = ()
-                metrics["stragglers"] = int(plan.stragglers.sum())
-                metrics["stale_merged"] = len(arrivals)
-                metrics["stale_dropped"] = dropped
-                metrics["buffered"] = len(self.buffer)
-            else:
-                metrics.update(alg.run_round(plan, rnd))
-            self._append_metrics(history, metrics)
-            history["participants"].append(int(plan.active.sum()))
-            self._record(history, rnd)
-            self._save(history, fp, rnd)
+        if cfg.ckpt_dir and cfg.async_ckpt:
+            self.writer = fedstate.AsyncCheckpointWriter(
+                cfg.ckpt_dir, keep_last=cfg.ckpt_keep)
+        try:
+            for rnd in range(start_round + 1, cfg.rounds + 1):
+                with perf.span("round_total"):
+                    metrics = {}
+                    if lc is not None:
+                        ev = lc.event(rnd)
+                        if ev.recluster:
+                            metrics.update(alg.apply_lifecycle(ev) or {})
+                            if alg.labels is not None:
+                                history["labels_history"].append(
+                                    [rnd, [int(l) for l in alg.labels]])
+                            if self.progress and ev.changed:
+                                print(f"  round {rnd:3d}  lifecycle: "
+                                      f"+{len(ev.joins)} joined, "
+                                      f"-{len(ev.leaves)} left, "
+                                      f"{int(ev.active.sum())} active")
+                    plan = alg.scheduler.plan(rnd)
+                    if cfg.prefetch and rnd < cfg.rounds \
+                            and (lc is None or not lc.event(rnd + 1).recluster):
+                        # double-buffer: start staging round N+1's slot data
+                        # while round N computes (plans are pure functions of
+                        # (seed, round); a lifecycle event round is skipped —
+                        # its plan only exists after apply_lifecycle rebuilds
+                        # the scheduler)
+                        alg.prefetch(alg.scheduler.plan(rnd + 1))
+                    if self.buffer is not None:
+                        arrivals, dropped = self.buffer.pop_due(rnd)
+                        alg.arrivals = tuple(arrivals)
+                        metrics.update(alg.run_round(plan, rnd))
+                        alg.arrivals = ()
+                        metrics["stragglers"] = int(plan.stragglers.sum())
+                        metrics["stale_merged"] = len(arrivals)
+                        metrics["stale_dropped"] = dropped
+                        metrics["buffered"] = len(self.buffer)
+                    else:
+                        metrics.update(alg.run_round(plan, rnd))
+                    self._append_metrics(history, metrics)
+                    history["participants"].append(int(plan.active.sum()))
+                with perf.span("eval"):
+                    self._record(history, rnd)
+                with perf.span("checkpoint"):
+                    self._save(history, fp, rnd)
+                perf.end_round()
+        finally:
+            if self.writer is not None:
+                # drain pending writes (and surface any writer error) even
+                # on an exception: a killed run must still leave only
+                # complete, atomically-published checkpoints behind
+                writer, self.writer = self.writer, None
+                writer.close()
         return history
 
     # ------------------------------------------------------------ internals
@@ -325,6 +350,14 @@ class RoundDriver:
                 # arrival, weight) metadata the meta JSON
                 arrays["_async_buffer"] = self.buffer.params_list()
                 buffer_meta = self.buffer.meta()
-            fedstate.save_round(cfg.ckpt_dir, fedstate.FedState(
+            state = fedstate.FedState(
                 round_index=rnd, arrays=arrays, history=history, meta=fp,
-                buffer_meta=buffer_meta), keep_last=cfg.ckpt_keep)
+                buffer_meta=buffer_meta)
+            if self.writer is not None:
+                # device-to-host copy + npz write happen on the writer
+                # thread; submit only snapshots the mutable JSON members
+                # (the array pytrees are immutable and never donated)
+                self.writer.submit(state)
+            else:
+                fedstate.save_round(cfg.ckpt_dir, state,
+                                    keep_last=cfg.ckpt_keep)

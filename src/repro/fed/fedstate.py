@@ -36,7 +36,9 @@ resume, run the rest" produce bit-identical histories on both engines.
 from __future__ import annotations
 
 import dataclasses
+import queue
 import re
+import threading
 from pathlib import Path
 from typing import Any, Optional
 
@@ -111,6 +113,95 @@ def save_round(ckpt_dir: str | Path, state: FedState, *,
             stale.unlink(missing_ok=True)
             stale.with_suffix(".meta.json").unlink(missing_ok=True)
     return path
+
+
+class AsyncCheckpointWriter:
+    """Background checkpoint writer: moves the device-to-host copy and the
+    npz/meta file writes off the round hot path (DESIGN.md §13).
+
+    Invariants (tests/test_async_ckpt.py):
+
+    - **Same bytes as the sync path.**  The worker calls the exact same
+      ``save_round`` — atomic temp + ``os.replace`` publish, the npz's
+      appearance is the commit point — so a kill at ANY moment leaves only
+      complete ``round_NNNNN.npz`` files behind (partial ``.tmp`` files are
+      invisible to ``latest_round``) and a resume from an async-written
+      checkpoint is bit-identical to one from a sync-written checkpoint.
+    - **Bounded queue, never drop.**  ``submit`` blocks once ``max_pending``
+      snapshots are in flight (backpressure throttles the run; a dropped
+      checkpoint would silently widen the resume gap).
+    - **FIFO publishes.**  One worker thread drains the queue in order, so
+      ``latest_round`` can never observe round N+1 before round N and
+      ``keep_last`` pruning sees rounds in submission order.
+    - **Snapshot-on-submit.**  The caller keeps mutating ``history`` (and
+      the staleness buffer) after submit, so the mutable JSON members are
+      deep-copied via ``json_safe`` on the CALLER's thread.  The array
+      pytrees are shared by reference: jax/np arrays are immutable, and the
+      driver's donation contract never donates canonical state
+      (fed/sharded.py), so the worker's later ``np.asarray`` reads are safe.
+    - **Errors surface.**  A failed write parks its exception and re-raises
+      on the next ``submit``/``flush``/``close`` — a run cannot silently
+      stop checkpointing.
+
+    ``flush()`` waits for every submitted snapshot to be published (the
+    driver flushes via ``close()`` at run end, even on an exception)."""
+
+    def __init__(self, ckpt_dir: str | Path, *,
+                 keep_last: Optional[int] = None, max_pending: int = 2):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            state = self._q.get()
+            try:
+                if state is None:        # close() sentinel
+                    return
+                if self._error is None:  # after an error, drain without writing
+                    save_round(self.ckpt_dir, state,
+                               keep_last=self.keep_last)
+            except BaseException as e:
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint writer failed for {self.ckpt_dir!r}"
+            ) from e
+
+    def submit(self, state: FedState) -> None:
+        """Enqueue one snapshot (blocks when ``max_pending`` are in flight).
+        Mutable JSON members are snapshotted here, on the caller's thread."""
+        if self._closed:
+            raise RuntimeError("submit() after close()")
+        self._raise_pending()
+        state = dataclasses.replace(
+            state, history=json_safe(state.history),
+            meta=json_safe(state.meta),
+            buffer_meta=json_safe(state.buffer_meta))
+        self._q.put(state)
+
+    def flush(self) -> None:
+        """Barrier: every submitted snapshot is on disk (or has raised)."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Flush, then stop the worker (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join()
+        self._raise_pending()
 
 
 def latest_meta(ckpt_dir: str | Path) -> dict:

@@ -129,6 +129,20 @@ class FedConfig:
     # None keeps everything.
     ckpt_keep: Optional[int] = 3
     resume: bool = False
+    # Hot-path performance knobs (DESIGN.md §13).  All three are pure
+    # execution-strategy switches: they change WHERE buffers live and WHEN
+    # host work happens, never a single computed bit — so they are excluded
+    # from the resume fingerprint, and each has an off switch for bisecting.
+    #   donate     — donate per-round slot temporaries to the jitted round
+    #                programs (in-place update instead of allocate+copy)
+    #   prefetch   — stage round N+1's slot arrays on a background thread
+    #                while round N computes (packed engines only)
+    #   async_ckpt — move checkpoint device-to-host copy + npz write to a
+    #                background writer (bounded queue, atomic publish,
+    #                flushed at run end — kill-and-resume stays bit-identical)
+    donate: bool = True
+    prefetch: bool = True
+    async_ckpt: bool = False
     seed: int = 0
 
     def __post_init__(self):

@@ -46,7 +46,9 @@ is absorbed by the small compat shims at the top.
 """
 from __future__ import annotations
 
+import functools
 import math
+import threading
 from typing import Callable
 
 import jax
@@ -124,9 +126,14 @@ def client_step_counts(shards, batch_size: int, epochs: int) -> np.ndarray:
 def stage_on_slots(mesh, plan: RoundPlan, *arrays):
     """Row-gather this round's participants onto mesh slots and place the
     (S, ...) stacks with the packed client-axis sharding (idle slots carry
-    client 0's rows; they run zero steps)."""
+    client 0's rows; they run zero steps).
+
+    The row-gather stays on the HOST (``arrays`` are the (C, ...) numpy
+    stacks built once at setup by ``stack_client_data``): one fancy index
+    plus one ``device_put`` per array, no intermediate default-device copy —
+    this is the only host->device transfer on the per-round path."""
     cid = np.where(plan.active, plan.slot_client, 0)
-    stacks = tuple(jnp.asarray(a[cid]) for a in arrays)
+    stacks = tuple(np.ascontiguousarray(np.asarray(a)[cid]) for a in arrays)
     return jax.device_put(stacks, named(mesh, client_stack_specs(
         stacks, mesh, axis=AXIS)))
 
@@ -134,19 +141,71 @@ def stage_on_slots(mesh, plan: RoundPlan, *arrays):
 class SlotStager:
     """Caches the row-gathered slot staging of ``arrays`` across rounds,
     restaging only when the plan's slot->client assignment changes (with
-    ``participation="full"`` it never does: one upload total)."""
+    ``participation="full"`` it never does: one upload total).
+
+    ``prefetch(plan)`` overlaps the NEXT round's staging with the current
+    round's device compute: the host-side row-gather + ``device_put`` run on
+    a background thread keyed by the plan's slot assignment, and ``stage``
+    joins and adopts the result when the key matches.  A mispredicted
+    prefetch (lifecycle re-clustered, scheduler rebuilt) is simply
+    discarded and ``stage`` falls back to the synchronous path — prefetch
+    is an overlap optimisation, never a source of truth."""
 
     def __init__(self, mesh, *arrays):
         self.mesh, self.arrays = mesh, arrays
         self._key = None
         self._staged = None
+        self._pending = None        # (key, thread, result box)
 
     def stage(self, plan: RoundPlan):
         key = plan.slot_client.tobytes()
-        if key != self._key:
-            self._staged = stage_on_slots(self.mesh, plan, *self.arrays)
-            self._key = key
-        return self._staged
+        if key == self._key:
+            return self._staged
+        staged = self._take_pending(key)
+        if staged is None:
+            staged = stage_on_slots(self.mesh, plan, *self.arrays)
+        self._key, self._staged = key, staged
+        return staged
+
+    def prefetch(self, plan: RoundPlan):
+        """Begin staging ``plan``'s slot arrays on a background thread (no-op
+        if that assignment is already staged or already in flight)."""
+        key = plan.slot_client.tobytes()
+        if key == self._key or (self._pending is not None
+                                and self._pending[0] == key):
+            return
+        self._drop_pending()
+        box = {}
+
+        def work():
+            try:
+                box["staged"] = stage_on_slots(self.mesh, plan, *self.arrays)
+            except Exception as e:   # pragma: no cover - surfaced via fallback
+                box["error"] = e
+
+        th = threading.Thread(target=work, daemon=True, name="slot-prefetch")
+        th.start()
+        self._pending = (key, th, box)
+
+    def _take_pending(self, key):
+        if self._pending is None or self._pending[0] != key:
+            # not what this round needs (e.g. the NEXT round's prefetch is
+            # already in flight): leave it pending, stage synchronously
+            return None
+        _, th, box = self._pending
+        self._pending = None
+        th.join()
+        return box.get("staged")     # error -> None -> sync retry raises it
+
+    def _drop_pending(self):
+        # An abandoned prefetch thread just finishes and its result is GC'd.
+        self._pending = None
+
+
+# Batched per-slot key derivation: ONE vmapped fold_in program instead of a
+# Python loop of eager fold_in dispatches (bitwise identical to the loop —
+# fold_in folds each uint32 datum independently).
+_fold_keys = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
 
 
 def slot_client_keys(base, plan: RoundPlan, *, offset: int = 0):
@@ -154,8 +213,8 @@ def slot_client_keys(base, plan: RoundPlan, *, offset: int = 0):
     key streams stay stable under slot re-assignment across rounds (idle
     slots fold client 0; they never train)."""
     cid = np.where(plan.active, plan.slot_client, 0)
-    return jnp.stack([jax.random.fold_in(base, offset + int(c))
-                      for c in cid])
+    return _fold_keys(base, jnp.asarray(offset + cid.astype(np.int64),
+                                        jnp.uint32))
 
 
 def slot_cluster_keys(base, plan: RoundPlan):
@@ -163,13 +222,27 @@ def slot_cluster_keys(base, plan: RoundPlan):
     of a cluster share one key (identical batches + identical dropout masks
     keep teacher replicas bitwise in sync between sync collectives)."""
     kidx = np.where(plan.active, plan.slot_cluster, 0)
-    return jnp.stack([jax.random.fold_in(base, int(k)) for k in kidx])
+    return _fold_keys(base, jnp.asarray(kidx, jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _replicate(params, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), params)
 
 
 def replicate_params(params, n: int):
-    """Stack identical replicas on a leading slot axis."""
-    return jax.tree_util.tree_map(
-        lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), params)
+    """Stack identical replicas on a leading slot axis (one jitted broadcast
+    program, not an eager broadcast+copy per leaf)."""
+    return _replicate(params, n)
+
+
+@jax.jit
+def take_rows(tree, idx):
+    """Gather row ``idx`` from every (S, ...) leaf as ONE jitted program —
+    the eager per-leaf ``a[i]`` chain costs ~30ms/op on sharded arrays
+    (straggler-lane extraction, sync-path slot-0 reads)."""
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
 
 
 def _masked_scan_steps(step_fn, carry, xs, ys, n_steps):
@@ -220,7 +293,7 @@ def _active_mean(loss, n_steps, axis_name):
 
 # ----------------------------------------- FedSiKD packed KD round engine
 def make_packed_teacher_phase(mesh, pack: int, t_fwd: Callable,
-                              t_opt: Optimizer):
+                              t_opt: Optimizer, *, donate: bool = True):
     """Jitted teacher-only collective program on the packed mesh: CE steps
     on every slot's teacher feed (vmap over the ``pack`` lane axis), then
     intra-cluster teacher sync with the plan's runtime (S, S) operator.
@@ -247,13 +320,13 @@ def make_packed_teacher_phase(mesh, pack: int, t_fwd: Callable,
         phase, mesh,
         in_specs=(P(AXIS),) * 6 + (P(),),
         out_specs=(P(AXIS), P(AXIS), P()),
-    ))
+    ), donate_argnums=(0, 1) if donate else ())
 
 
 def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
                          t_opt: Optimizer, s_opt: Optimizer, *,
                          kd_temperature: float = 2.0, kd_alpha: float = 0.5,
-                         kd_impl: str = "fused"):
+                         kd_impl: str = "fused", donate: bool = True):
     """The full FedSiKD round (Alg. 1 lines 10-18) as ONE jitted collective
     program over the packed client mesh:
 
@@ -280,7 +353,14 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
     always per-client, while with ``teacher_data="leader"`` the strategy
     hands all slots of a cluster the SAME teacher key so that replicas
     stepping on identical leader batches stay bitwise in sync (dropout
-    masks included)."""
+    masks included).
+
+    With ``donate=True`` the per-round SLOT temporaries (tp, ts, sp, ss —
+    args 0-3) are donated: XLA updates them in place instead of allocating
+    a second copy of every param/opt-state stack each round.  Callers must
+    treat those inputs as consumed after the call (the strategies rebuild
+    them from canonical state every round, so nothing else holds them; see
+    DESIGN.md §13 for the donation contract)."""
     if kd_impl not in ("fused", "reference"):
         raise ValueError(
             f"kd_impl must be 'fused' or 'reference', got {kd_impl!r}")
@@ -335,12 +415,13 @@ def make_packed_kd_round(mesh, pack: int, t_fwd: Callable, s_fwd: Callable,
         kd_round, mesh,
         in_specs=(P(AXIS),) * 12 + (P(), P()),
         out_specs=(P(AXIS),) * 5 + (P(), P()),
-    ))
+    ), donate_argnums=(0, 1, 2, 3) if donate else ())
 
 
 # -------------------------------------------- FedAvg/FedProx packed engine
 def make_packed_baseline_round(mesh, pack: int, fwd: Callable,
-                               opt: Optimizer, *, prox_mu: float = 0.0):
+                               opt: Optimizer, *, prox_mu: float = 0.0,
+                               donate: bool = True):
     """One FedAvg (``prox_mu=0``) or FedProx round as ONE jitted collective
     program over the packed client mesh:
 
@@ -393,4 +474,4 @@ def make_packed_baseline_round(mesh, pack: int, fwd: Callable,
         baseline_round, mesh,
         in_specs=(P(AXIS),) * 6 + (P(), P()),
         out_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
-    ))
+    ), donate_argnums=(0, 1) if donate else ())

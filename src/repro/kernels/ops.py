@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.kernels import kd_softmax_kl as _kd
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_merge as _fm
 from repro.kernels import kmeans_assign as _km
 
 NEG = -1e30
@@ -215,6 +216,47 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                               interpret=interpret)
     out = out[:, :, :T]
     return jnp.moveaxis(out, 1, 2)
+
+
+# ------------------------------------------------------------ fused merge
+def fused_merge(stacked, weights, staleness=None, *, decay: float = 0.0,
+                interpret: bool | None = None):
+    """Grouped weighted mean with staleness decay, in one kernel pass.
+
+    Contract:
+      stacked   : (N, ...) — N client copies of one model leaf (any shape,
+                  any float dtype; flattened to (N, D) internally).
+      weights   : (N,) non-negative base weights, not necessarily
+                  normalised (at least one must be positive).
+      staleness : (N,) staleness in rounds, or None (== all zeros).
+      decay     : the exponent a in (1 + s)^-a (0 = plain weighted mean).
+      returns   : (...) float32 — the decayed, renormalised weighted mean
+                  sum_i w_i(1+s_i)^-a x_i / sum_j w_j(1+s_j)^-a (callers
+                  cast back to the leaf dtype).
+
+    D is padded to the 512-column kernel block and N to an 8-row multiple
+    (pad rows carry weight 0, so the in-kernel normalisation ignores them).
+    Matches ``kernels.ref.fused_merge_ref`` to float32 tolerance.
+    ``interpret=None`` resolves by backend (see module docstring) —
+    production CPU callers (``core.aggregation``) use an equivalent single
+    jitted jnp contraction instead, keeping interpret-mode Pallas out of
+    the round hot path.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    N = stacked.shape[0]
+    xf = stacked.reshape(N, -1)
+    w = jnp.asarray(weights, jnp.float32)
+    s = (jnp.zeros(N, jnp.float32) if staleness is None
+         else jnp.asarray(staleness, jnp.float32))
+    D = xf.shape[1]
+    bd = min(512, D) if D % 512 else 512
+    xf = _pad_to(xf, 1, bd, 0.0)
+    xf = _pad_to(xf, 0, 8, 0.0)
+    w = _pad_to(w, 0, 8, 0.0)
+    s = _pad_to(s, 0, 8, 0.0)
+    out = _fm.fused_merge(xf, w, s, decay=float(decay), block_d=bd,
+                          interpret=interpret)
+    return out[:D].reshape(stacked.shape[1:])
 
 
 # ----------------------------------------------------------------- kmeans

@@ -42,6 +42,19 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None,
     return out.reshape(B, H, T, hd).astype(q.dtype)
 
 
+def fused_merge_ref(stacked, weights, staleness=None, *, decay: float = 0.0):
+    """stacked: (N, D); weights: (N,); staleness: (N,) or None ->
+    (D,) float32 weighted mean under staleness-decayed, renormalised
+    weights: out = sum_i w_i (1+s_i)^-decay x_i / sum_i w_i (1+s_i)^-decay
+    (core/aggregation.py semantics, in one expression)."""
+    x = stacked.astype(jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    if staleness is not None:
+        w = w * (1.0 + jnp.asarray(staleness, jnp.float32)) ** (-decay)
+    w = w / jnp.sum(w)
+    return jnp.einsum("n,nd->d", w, x)
+
+
 def kmeans_assign_ref(x, cents):
     """x: (N,F); cents: (K,F) -> (assignments (N,) int32, sq dists (N,))."""
     x = x.astype(jnp.float32)

@@ -104,7 +104,8 @@ def lower_one(arch: str, shape: str, mesh, *, step_kind: str = "auto",
         jitted = jax.jit(step,
                          in_shardings=(p_shardings, o_shardings, b_shardings),
                          out_shardings=(p_shardings, o_shardings,
-                                        NamedSharding(mesh, P())))
+                                        NamedSharding(mesh, P())),
+                         donate_argnums=getattr(step, "donate_argnums", ()))
         lowered = jitted.lower(params_sds, opt_sds, batch_sds)
     elif kind == "fedsikd":
         # the paper's technique: D student replicas on the dp axis, shared
@@ -140,7 +141,8 @@ def lower_one(arch: str, shape: str, mesh, *, step_kind: str = "auto",
                          in_shardings=(s_shardings, o_shardings, p_shardings,
                                        b_shardings),
                          out_shardings=(s_shardings, o_shardings,
-                                        NamedSharding(mesh, P())))
+                                        NamedSharding(mesh, P())),
+                         donate_argnums=getattr(dstep, "donate_argnums", ()))
         lowered = jitted.lower(students_sds, opt_sds, params_sds, batch_sds)
     elif kind == "prefill":
         step = st.make_prefill_step(cfg)

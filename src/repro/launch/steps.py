@@ -66,6 +66,13 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 1e-4, accum: int = 1):
         params = apply_updates(params, updates)
         return params, opt_state, loss
 
+    # Donation contract (DESIGN.md §13): (params, opt_state) flow through
+    # the step unchanged in shape/sharding, so jit sites can donate them and
+    # update in place instead of holding two copies of the model.  The
+    # builders return UN-jitted steps (the dry-run lowers them with explicit
+    # shardings), so donation rides along as an attribute for the jit site
+    # (launch/train.py, launch/dryrun.py) to consume.
+    train_step.donate_argnums = (0, 1)
     return train_step, opt
 
 
@@ -298,4 +305,7 @@ def make_fedsikd_distill_step(cfg: ModelConfig, cluster_of, *,
         init = ed.init_encdec if cfg.arch_type == "audio" else tf.init_lm
         return jax.vmap(lambda k: init(k, s_cfg))(jax.random.split(key, D))
 
+    # (students, opt_state) update in place under donation; the TEACHER is
+    # deliberately NOT donated — it is frozen and re-read every step
+    distill_step.donate_argnums = (0, 1)
     return distill_step, sync, init_students, opt, s_cfg

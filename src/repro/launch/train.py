@@ -65,7 +65,9 @@ def run_fl(args):
                     # run restarts with --resume (fed/fedstate.py)
                     ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
                     ckpt_keep=args.ckpt_keep or None,
-                    resume=args.resume)
+                    resume=args.resume,
+                    donate=args.donate, prefetch=args.prefetch,
+                    async_ckpt=args.async_ckpt)
     h = run_federated(ds, cfg, progress=True)
     print(f"final: acc={h['acc'][-1]:.4f} loss={h['loss'][-1]:.4f}")
     if args.ckpt:
@@ -94,7 +96,7 @@ def run_lm(args):
         params = ckpt.restore(ck, like)
         start = ckpt.load_meta(ck)["step"]
         print(f"resumed from step {start}")
-    jstep = jax.jit(step)
+    jstep = jax.jit(step, donate_argnums=getattr(step, "donate_argnums", ()))
     t0 = time.time()
     for i, b in enumerate(token_stream(cfg.vocab_size, args.batch, args.seq,
                                        seed=args.seed + start,
@@ -176,6 +178,17 @@ def main():
                     help="retain the newest N round snapshots (0 = all)")
     fl.add_argument("--resume", action="store_true",
                     help="resume from the latest round checkpoint in --ckpt")
+    fl.add_argument("--donate", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="donate per-round slot buffers to the jitted round "
+                         "programs (--no-donate to debug aliasing)")
+    fl.add_argument("--prefetch", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="stage round N+1's client shards on a background "
+                         "thread while round N computes")
+    fl.add_argument("--async-ckpt", action="store_true", dest="async_ckpt",
+                    help="write round checkpoints on a background thread "
+                         "(atomic publish; identical bytes to sync writes)")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

@@ -1,0 +1,85 @@
+"""Per-phase wall-clock instrumentation for the round hot path.
+
+The hot-path benchmark (benchmarks/engine_bench.py, DESIGN.md §13) needs to
+know WHERE a round spends its time — staging, compute, aggregation, eval,
+checkpointing — and to split one-off compile cost from the steady-state
+round time.  This module is that instrument: a process-global, explicitly
+enabled phase timer whose ``span`` contexts cost one attribute read when
+disabled, so production runs pay nothing.
+
+Usage (the driver and the packed strategies are already instrumented):
+
+    from repro import perf
+    perf.enable()
+    run_federated(ds, cfg)
+    rounds = perf.snapshot()     # [{"stage": s, "compute": s, ...}, ...]
+    perf.disable()
+
+Contract:
+
+- ``span(name)`` accumulates wall-clock into the CURRENT round's bucket;
+  nested/repeated spans of the same name add up.  When disabled it is a
+  no-op (the context manager short-circuits).
+- ``end_round()`` closes the current bucket and appends it to the per-round
+  list — the driver calls it once per completed round (warm-up/setup time
+  lands in the round that follows it, i.e. the first bucket; steady-state
+  consumers should skip bucket 0, which also carries jit compilation).
+- Timings NEVER enter the run history or the checkpoint: resume
+  bit-identity is about model state, and an instrument must not perturb it.
+
+Spans measure dispatch-side wall-clock: jax dispatch is asynchronous, so a
+phase that merely enqueues device work attributes the wait to whichever
+later span blocks (the strategies block on round outputs inside their
+``compute`` span to keep attribution honest).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+_enabled = False
+_current: dict[str, float] = {}
+_rounds: list[dict[str, float]] = []
+
+
+def enable() -> None:
+    """Start collecting (clears any previous collection)."""
+    global _enabled
+    _enabled = True
+    _current.clear()
+    _rounds.clear()
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Accumulate wall-clock under ``name`` in the current round's bucket."""
+    if not _enabled:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        _current[name] = _current.get(name, 0.0) + time.perf_counter() - t0
+
+
+def end_round() -> None:
+    """Close the current round's bucket (driver: once per completed round)."""
+    if not _enabled:
+        return
+    _rounds.append(dict(_current))
+    _current.clear()
+
+
+def snapshot() -> list[dict[str, float]]:
+    """Per-round phase buckets collected since ``enable()`` (a copy)."""
+    return [dict(r) for r in _rounds]

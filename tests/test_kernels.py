@@ -104,6 +104,61 @@ def test_flash_attention_windowed():
                                rtol=2e-5, atol=2e-5)
 
 
+# ------------------------------------------------------------- fused merge
+@pytest.mark.parametrize("N,D", [(3, 512), (8, 1024), (5, 100), (1, 7),
+                                 (13, 513)])   # non-multiples hit padding
+@pytest.mark.parametrize("decay", [0.0, 0.5, 1.5])
+def test_fused_merge_matches_ref(N, D, decay):
+    x = jax.random.normal(KEY, (N, D)) * 2
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (N,))) + 0.1
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (N,))).astype(
+        jnp.int32).astype(jnp.float32) * 2
+    out = ops.fused_merge(x, w, s, decay=decay, interpret=True)
+    oref = ref.fused_merge_ref(x, w, s, decay=decay)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_merge_no_staleness_is_weighted_mean():
+    N, D = 4, 300
+    x = jax.random.normal(KEY, (N, D))
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    out = ops.fused_merge(x, w, interpret=True)
+    expect = (x * (w / w.sum())[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    # decay on all-zero staleness changes nothing
+    out_d = ops.fused_merge(x, w, jnp.zeros(N), decay=0.7, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_merge_nd_leaf_and_dtype():
+    """(N, ...) leaves of any rank/dtype flatten through the kernel and come
+    back float32 in the leaf shape (callers cast back)."""
+    x = (jax.random.normal(KEY, (5, 3, 4, 7)) * 3).astype(jnp.bfloat16)
+    w = jnp.ones(5)
+    out = ops.fused_merge(x, w, interpret=True)
+    assert out.shape == (3, 4, 7) and out.dtype == jnp.float32
+    oref = ref.fused_merge_ref(x.reshape(5, -1).astype(jnp.float32), w)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1), np.asarray(oref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fused_merge_staleness_downweights():
+    """A very stale contributor loses influence monotonically in decay."""
+    x = jnp.stack([jnp.zeros(64), jnp.ones(64)])
+    w = jnp.ones(2)
+    s = jnp.asarray([0.0, 5.0])
+    prev = 1.0
+    for decay in (0.0, 0.5, 1.0, 2.0):
+        got = float(ops.fused_merge(x, w, s, decay=decay,
+                                    interpret=True).mean())
+        assert got <= prev + 1e-7
+        prev = got
+    assert prev < 0.1     # decay=2: (1+5)^-2 ~ 0.028 vs 1.0
+
+
 # ------------------------------------------------------------------ kmeans
 @pytest.mark.parametrize("N,F,K", [(64, 8, 3), (97, 12, 5), (256, 24, 8)])
 def test_kmeans_assign_matches_ref(N, F, K):

@@ -82,7 +82,7 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  join_schedule=None, recluster_every: int = 0,
                  async_mode: bool = False, straggler_frac: float = 0.0,
                  max_staleness: int = 2, donate: bool = True,
-                 prefetch: bool = True) -> dict:
+                 prefetch: bool = True, guards: bool = False) -> dict:
     cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
@@ -93,7 +93,7 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                     recluster_every=recluster_every,
                     async_mode=async_mode, straggler_frac=straggler_frac,
                     max_staleness=max_staleness, seed=0,
-                    donate=donate, prefetch=prefetch)
+                    donate=donate, prefetch=prefetch, guards=guards)
     perf.enable()
     t0 = time.perf_counter()
     h = run_federated(ds, cfg)
@@ -174,13 +174,16 @@ def main():
 
     ds = load_dataset("mnist", small=True)
     if args.hotpath:
-        # EXACTLY the PR 6 baseline config (see PR6_STEADY_BASELINE)
+        # EXACTLY the PR 6 baseline config (see PR6_STEADY_BASELINE), run
+        # under the runtime sanitizers (guards.py): steady-state rounds
+        # must survive the transfer guard and the recompile sentinel —
+        # the hot-path gate doubles as the guards acceptance run
         rounds = args.rounds or 4
         rows = [
             bench_engine(ds, "sharded", algorithm="fedsikd", clients=8,
-                         pack=2, rounds=rounds),
+                         pack=2, rounds=rounds, guards=True),
             bench_engine(ds, "sharded", algorithm="fedavg", clients=8,
-                         pack=2, rounds=rounds),
+                         pack=2, rounds=rounds, guards=True),
         ]
         print_rows(rows)
         speedup = {}
@@ -291,7 +294,7 @@ def main():
               and r["algorithm"] == "fedsikd" and r["churn"] == "-"
               and r["async"] == "-"]
     if len(spread) > 1:
-        print(f"engine agreement (C=8, full): max final-acc spread "
+        print("engine agreement (C=8, full): max final-acc spread "
               f"{max(spread) - min(spread):.4f}")
 
     if args.out:

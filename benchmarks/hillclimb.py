@@ -14,7 +14,6 @@ import dataclasses
 import json
 from pathlib import Path
 
-import jax
 
 from repro.launch import analysis as an
 from repro.launch import shardings as shd

@@ -12,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def _time(f, *args, iters=5):

@@ -33,7 +33,7 @@ def main():
     run_federated(ds, FedConfig(**{**common, "rounds": 3},
                                 ckpt_dir=ckpt_dir, ckpt_every=1),
                   progress=True)
-    print(f"   ...killed. latest checkpoint: "
+    print("   ...killed. latest checkpoint: "
           f"round {fedstate.latest_round(ckpt_dir)}")
 
     print("\nrun 2: same config, resume=True -> finishes rounds 4-6")
@@ -42,7 +42,7 @@ def main():
 
     assert h_res["acc"] == h_full["acc"], "resume broke bit-parity!"
     assert h_res["participants"] == h_full["participants"]
-    print(f"\nresumed history is bit-identical to the uninterrupted run")
+    print("\nresumed history is bit-identical to the uninterrupted run")
     print(f"per-round survivors (of {common['clients_per_round']} invited): "
           f"{h_res['participants']}")
 

@@ -16,7 +16,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data.pipeline import token_stream
@@ -57,7 +56,7 @@ def main():
                 losses.append(float(loss))
             students = jax.jit(sync)(students)          # two-level global mean
             print(f"round {rnd}: loss {losses[-10]:.3f} -> {losses[-1]:.3f} "
-                  f"(post-sync replicas equal: "
+                  "(post-sync replicas equal: "
                   f"{bool(jnp.allclose(students['embed'][0], students['embed'][-1], atol=1e-5))})")
 
 

@@ -33,7 +33,6 @@ def main():
     t0 = time.time()
     last, cache = tf.prefill(params, cfg, batch)
     # grow full-attention caches to hold the generated continuation
-    total = PROMPT + GEN
     def grow(a):
         if a.ndim == 5 and a.shape[2] == PROMPT:
             return jnp.pad(a, ((0, 0), (0, 0), (0, GEN), (0, 0), (0, 0)))

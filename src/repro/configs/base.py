@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Optional
+from typing import Callable
 
 ARCH_IDS = [
     "glm4-9b",

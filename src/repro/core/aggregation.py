@@ -46,9 +46,13 @@ def _fused_merge(params: Sequence, base_weights, staleness=None, *,
     out = sum_i w_i(1+s_i)^-decay p_i / sum_j w_j(1+s_j)^-decay, one fused
     contraction per leaf, cast back to each leaf's dtype."""
     n = len(params)
-    w = jnp.asarray(np.asarray(base_weights, np.float32))
-    s = (jnp.zeros(n, jnp.float32) if staleness is None
-         else jnp.asarray(np.asarray(staleness, np.float32)))
+    # device_put (explicit transfer) keeps these merges legal inside
+    # guards.no_implicit_transfers(); the f32 casts are the exact weak-
+    # promotion rounding the implicit path applied, so bits are unchanged
+    w = jax.device_put(np.asarray(base_weights, np.float32))
+    s = jax.device_put(np.zeros(n, np.float32) if staleness is None
+                       else np.asarray(staleness, np.float32))
+    d = jax.device_put(np.float32(decay))
     use_kernel = jax.default_backend() == "tpu"
 
     def merge(*leaves):
@@ -56,7 +60,7 @@ def _fused_merge(params: Sequence, base_weights, staleness=None, *,
         if use_kernel:
             out = _kops.fused_merge(stacked, w, s, decay=decay)
         else:
-            out = _merge_stacked(stacked, w, s, decay)
+            out = _merge_stacked(stacked, w, s, d)
         return out.astype(leaves[0].dtype)
 
     return jax.tree_util.tree_map(merge, *params)
@@ -144,10 +148,13 @@ def staleness_weighted_average(params: Sequence, base_weights,
 def add_scaled(acc, params, scale: float):
     """``acc + scale * params`` over pytrees (float32 accumulation, cast
     back to each leaf's dtype) — how the packed engines fold host-buffered
-    stale updates into the program's on-time aggregate."""
+    stale updates into the program's on-time aggregate.  The scale lands
+    on device via an explicit ``device_put`` (guard-legal) with the same
+    f32 rounding the old weak-typed promotion applied."""
+    s = jax.device_put(np.float32(scale))
     return jax.tree_util.tree_map(
         lambda a, p: (a.astype(jnp.float32)
-                      + scale * p.astype(jnp.float32)).astype(a.dtype),
+                      + s * p.astype(jnp.float32)).astype(a.dtype),
         acc, params)
 
 

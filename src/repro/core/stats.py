@@ -93,8 +93,12 @@ def privatize(
 
 
 def stack_stats(all_stats: list[ClientStats]) -> jax.Array:
-    """(N_clients, 3F) matrix the server clusters on — Eq. (1) client_stats."""
-    return jnp.stack([s.vector() for s in all_stats], axis=0)
+    """(N_clients, 3F) matrix the server clusters on — Eq. (1) client_stats.
+
+    Roster-shaped by design: runs only at (re-)clustering events, feeds the
+    host-side k-means — never a steady-state jitted program."""
+    return jnp.stack([s.vector() for s in all_stats],
+                     axis=0)  # fedlint: allow=FL005
 
 
 # ------------------------------------------------------ batched front-end

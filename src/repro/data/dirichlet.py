@@ -41,11 +41,11 @@ def dirichlet_partition(
         # near-empty client (crash at best, a silently useless shard at
         # worst) — refuse with the numbers that make the draw infeasible.
         raise ValueError(
-            f"dirichlet_partition could not give every client >= "
+            "dirichlet_partition could not give every client >= "
             f"min_per_client={min_per_client} examples in 100 attempts "
             f"(alpha={alpha}, num_clients={num_clients}, "
             f"{len(labels)} examples, smallest shard {sizes.min()}); "
-            f"raise alpha, lower num_clients, or lower min_per_client")
+            "raise alpha, lower num_clients, or lower min_per_client")
     out = []
     for s in shards:
         a = np.asarray(sorted(s), np.int64)

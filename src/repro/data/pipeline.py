@@ -29,10 +29,15 @@ class ClientShard:
         # hash(-2) collides the pooled-cluster shard (client_id=-1) with
         # other negative ids, and builtin-hash streams are fragile across
         # interpreters.  Masking keeps the entropy non-negative while
-        # staying injective over 32-bit ids (as fed/schedule.py's _rng).
+        # staying injective over 32-bit ids.  SALT_BATCH pins the stream
+        # into the fed/schedule.py registry: the unsalted
+        # [seed, client, epoch] shape could equal lifecycle's leave stream
+        # [seed, round, SALT_LEAVE] when client == round and epoch == 0x1F.
+        # Local import: repro.fed's package init pulls in rounds -> data.
+        from repro.fed.schedule import SALT_BATCH
         rng = np.random.default_rng(np.random.SeedSequence(
             [seed & 0xFFFFFFFF, self.client_id & 0xFFFFFFFF,
-             epoch & 0xFFFFFFFF]))
+             SALT_BATCH, epoch & 0xFFFFFFFF]))
         order = rng.permutation(self.num_examples)
         for start in range(0, self.num_examples, batch_size):
             idx = order[start:start + batch_size]

@@ -145,6 +145,18 @@ class Algorithm:
         ``run_round`` metrics append into)."""
         return {}
 
+    def warm_async_merge(self) -> None:
+        """Pre-compile the host-side arrival-fold programs.
+
+        The packed engines fold buffered stale updates eagerly
+        (``aggregation.add_scaled`` per arrival, ``_merge_stacked`` on
+        all-straggler rounds), so the per-leaf mul/add programs compile
+        on the FIRST round that actually merges an arrival — which under
+        ``FedConfig.guards`` may fall inside the sentinel window and read
+        as a steady-state recompile.  The driver calls this once during
+        warm-in; overrides run the fold on the live global tree with a
+        zero scale and discard the result.  Default: nothing to warm."""
+
 
 # -------------------------------------------------- shared semi-async helpers
 def staleness_merge(on_params, on_weights, arrivals, decay: float):

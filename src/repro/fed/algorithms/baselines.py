@@ -214,7 +214,18 @@ class PackedBaseline(_BaselineBase):
         re-assignment; the disjoint 40_000 salt keeps the stream away from
         the clustered-KD engines')."""
         return self.sh.slot_client_keys(
-            jax.random.fold_in(self.key, 40_000 + rnd), plan)
+            jax.random.fold_in(self.key,
+                               jax.device_put(np.uint32(40_000 + rnd))),
+            plan)
+
+    def warm_async_merge(self):
+        # zero-scale fold + N=1 stacked merge on the live global tree:
+        # compiles the per-leaf arrival-fold programs during warm-in so a
+        # first arrival inside the guarded window reuses the cache
+        g = self.global_params
+        agg.add_scaled(g, g, 0.0)
+        agg.staleness_weighted_average([g], [1.0], [1],
+                                       decay=self.cfg.staleness_decay)
 
     def run_round(self, plan, rnd):
         cfg, sh = self.cfg, self.sh
@@ -243,10 +254,12 @@ class PackedBaseline(_BaselineBase):
             xs, ys = self.stager.stage(plan)
             p_s, s_s = self._prep(self.global_params)
         with perf.span("compute"):
+            # device_put: explicit transfers, legal under the guards
             p_s, p_local, _s_s, loss = self.round_fn(
-                p_s, s_s, xs, ys, jnp.asarray(plan.steps_for(self.steps_all)),
+                p_s, s_s, xs, ys,
+                jax.device_put(plan.steps_for(self.steps_all)),
                 self._slot_keys(rnd, plan),
-                jnp.asarray(row), self.global_params)
+                jax.device_put(row), self.global_params)
             loss = float(loss)   # block for honest timing attribution
         with perf.span("aggregate"):
             # every slot holds the aggregated model after the weighted mean
@@ -259,7 +272,7 @@ class PackedBaseline(_BaselineBase):
                 client=int(plan.slot_client[t]), birth=rnd,
                 arrival=rnd + int(plan.delays[t]),
                 weight=float(self.sizes[int(plan.slot_client[t])]),
-                params=sh.take_rows(p_local, t)))
+                params=sh.take_rows(p_local, jax.device_put(int(t)))))
         if plan.on_time.any():
             acc = p0
             for u, sc in zip(arrivals, scales):

@@ -44,12 +44,13 @@ loop over clients or one jitted collective program on the packed mesh.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
 import jax
 
-from repro import perf
+from repro import guards, perf
 from repro.data.pipeline import make_client_shards
 from repro.fed import fedstate
 from repro.fed.lifecycle import ClientLifecycle
@@ -65,6 +66,20 @@ _NON_METRIC_KEYS = frozenset({"acc", "loss", "round", "participants",
 # that would silently run a different slot layout must refuse instead.
 # v3 added the semi-async knobs (and the buffer riding the checkpoint).
 FINGERPRINT_VERSION = 3
+
+# FedConfig fields that are deliberately NOT part of the resume identity:
+# execution knobs whose change leaves the numerical run unchanged.  Every
+# FedConfig field must be either fingerprinted below or listed here —
+# enforced statically by fedlint FL002 and at runtime by
+# tests/test_config_surface.py.  ``rounds`` is execution-only because
+# resuming with a higher target is the point of resume; the checkpoint
+# cadence/layout knobs and the donation/prefetch/async/guards toggles are
+# pure execution strategy (tier-1 proves donate/prefetch/async_ckpt runs
+# bit-identical to the eager path).
+EXECUTION_ONLY = frozenset({
+    "rounds", "ckpt_dir", "ckpt_every", "ckpt_keep", "resume",
+    "donate", "prefetch", "async_ckpt", "guards",
+})
 
 
 @dataclasses.dataclass
@@ -259,8 +274,21 @@ class RoundDriver:
         if cfg.ckpt_dir and cfg.async_ckpt:
             self.writer = fedstate.AsyncCheckpointWriter(
                 cfg.ckpt_dir, keep_last=cfg.ckpt_keep)
+        # Runtime sanitizers (guards.py, DESIGN.md §14).  The first rounds
+        # are warm-in: round-program compiles, the first eval, the first
+        # lifecycle re-cluster at the new roster size all legitimately
+        # compile there.  From ``guard_from`` on, every round must (a) run
+        # its plan/stage/compute path without a single implicit
+        # host->device transfer and (b) finish — eval, checkpoint, and any
+        # semi-async merge included — with zero new compilations.
+        guard_from = None
+        if cfg.guards:
+            guards.install()
+            guard_from = start_round + 3
         try:
             for rnd in range(start_round + 1, cfg.rounds + 1):
+                guarded = guard_from is not None and rnd >= guard_from
+                compile_base = guards.compile_count() if guarded else 0
                 with perf.span("round_total"):
                     metrics = {}
                     if lc is not None:
@@ -275,26 +303,30 @@ class RoundDriver:
                                       f"+{len(ev.joins)} joined, "
                                       f"-{len(ev.leaves)} left, "
                                       f"{int(ev.active.sum())} active")
-                    plan = alg.scheduler.plan(rnd)
-                    if cfg.prefetch and rnd < cfg.rounds \
-                            and (lc is None or not lc.event(rnd + 1).recluster):
-                        # double-buffer: start staging round N+1's slot data
-                        # while round N computes (plans are pure functions of
-                        # (seed, round); a lifecycle event round is skipped —
-                        # its plan only exists after apply_lifecycle rebuilds
-                        # the scheduler)
-                        alg.prefetch(alg.scheduler.plan(rnd + 1))
-                    if self.buffer is not None:
-                        arrivals, dropped = self.buffer.pop_due(rnd)
-                        alg.arrivals = tuple(arrivals)
-                        metrics.update(alg.run_round(plan, rnd))
-                        alg.arrivals = ()
-                        metrics["stragglers"] = int(plan.stragglers.sum())
-                        metrics["stale_merged"] = len(arrivals)
-                        metrics["stale_dropped"] = dropped
-                        metrics["buffered"] = len(self.buffer)
-                    else:
-                        metrics.update(alg.run_round(plan, rnd))
+                    hot = (guards.no_implicit_transfers() if guarded
+                           else contextlib.nullcontext())
+                    with hot:
+                        plan = alg.scheduler.plan(rnd)
+                        if cfg.prefetch and rnd < cfg.rounds \
+                                and (lc is None
+                                     or not lc.event(rnd + 1).recluster):
+                            # double-buffer: start staging round N+1's slot
+                            # data while round N computes (plans are pure
+                            # functions of (seed, round); a lifecycle event
+                            # round is skipped — its plan only exists after
+                            # apply_lifecycle rebuilds the scheduler)
+                            alg.prefetch(alg.scheduler.plan(rnd + 1))
+                        if self.buffer is not None:
+                            arrivals, dropped = self.buffer.pop_due(rnd)
+                            alg.arrivals = tuple(arrivals)
+                            metrics.update(alg.run_round(plan, rnd))
+                            alg.arrivals = ()
+                            metrics["stragglers"] = int(plan.stragglers.sum())
+                            metrics["stale_merged"] = len(arrivals)
+                            metrics["stale_dropped"] = dropped
+                            metrics["buffered"] = len(self.buffer)
+                        else:
+                            metrics.update(alg.run_round(plan, rnd))
                     self._append_metrics(history, metrics)
                     history["participants"].append(int(plan.active.sum()))
                 with perf.span("eval"):
@@ -302,6 +334,16 @@ class RoundDriver:
                 with perf.span("checkpoint"):
                     self._save(history, fp, rnd)
                 perf.end_round()
+                if guard_from is not None and self.buffer is not None \
+                        and rnd == start_round + 1:
+                    # warm-in: pre-compile the host-side arrival-fold
+                    # programs on the post-round global tree (its sharding
+                    # matches what real arrivals fold into), so the first
+                    # arrival inside the guarded window is cache-hit only
+                    alg.warm_async_merge()
+                if guarded:
+                    guards.assert_no_new_compiles(
+                        compile_base, f"round {rnd}")
         finally:
             if self.writer is not None:
                 # drain pending writes (and surface any writer error) even

@@ -45,6 +45,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import perf
 
 _ROUND_RE = re.compile(r"^round_(\d+)\.npz$")
 
@@ -159,13 +160,18 @@ class AsyncCheckpointWriter:
 
     def _worker(self):
         while True:
-            state = self._q.get()
+            item = self._q.get()
             try:
-                if state is None:        # close() sentinel
+                if item is None:         # close() sentinel
                     return
+                state, token = item
                 if self._error is None:  # after an error, drain without writing
-                    save_round(self.ckpt_dir, state,
-                               keep_last=self.keep_last)
+                    # the checkpoint span runs HERE, possibly rounds after
+                    # the submitting round closed its bucket — the token
+                    # captured at submit time routes it back (perf.py)
+                    with perf.span("checkpoint", round_id=token):
+                        save_round(self.ckpt_dir, state,
+                                   keep_last=self.keep_last)
             except BaseException as e:
                 self._error = e
             finally:
@@ -188,7 +194,7 @@ class AsyncCheckpointWriter:
             state, history=json_safe(state.history),
             meta=json_safe(state.meta),
             buffer_meta=json_safe(state.buffer_meta))
-        self._q.put(state)
+        self._q.put((state, perf.round_token()))
 
     def flush(self) -> None:
         """Barrier: every submitted snapshot is on disk (or has raised)."""
@@ -237,7 +243,7 @@ def restore_run(ckpt_dir: str | Path, like, *,
         if conflicts:
             raise ValueError(
                 f"checkpoint {path} was written by a different run "
-                f"configuration:\n  " + "\n  ".join(conflicts))
+                "configuration:\n  " + "\n  ".join(conflicts))
     arrays = ckpt.restore(path, like)
     return FedState(round_index=int(meta["step"]), arrays=arrays,
                     history=meta.get("history", {}), meta=fingerprint,

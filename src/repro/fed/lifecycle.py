@@ -67,12 +67,12 @@ def normalize_join_schedule(join_schedule) -> Optional[tuple]:
     for p in sorted(pairs):
         if len(p) != 2:
             raise ValueError(
-                f"join_schedule entries must be (round, count) pairs, "
+                "join_schedule entries must be (round, count) pairs, "
                 f"got {p!r}")
         r, c = int(p[0]), int(p[1])
         if r < 1:
             raise ValueError(
-                f"join_schedule rounds are 1-based (joins happen at the "
+                "join_schedule rounds are 1-based (joins happen at the "
                 f"start of the round), got round {r}")
         if c < 1:
             raise ValueError(f"join_schedule count must be >= 1, got {c}")
@@ -107,7 +107,7 @@ class ClientLifecycle:
             raise ValueError(
                 f"join_schedule brings in {total_joins} clients but the "
                 f"universe has only {num_clients}; at least one client must "
-                f"be present from round 1")
+                "be present from round 1")
         # joiner ids: the top ids of the universe, dealt in round order
         self._joins_at: dict[int, np.ndarray] = {}
         nxt = num_clients - total_joins

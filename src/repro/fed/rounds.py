@@ -143,6 +143,14 @@ class FedConfig:
     donate: bool = True
     prefetch: bool = True
     async_ckpt: bool = False
+    # Runtime sanitizers (src/repro/guards.py, DESIGN.md §14): steady-state
+    # rounds run under jax's transfer guard (implicit host<->device syncs in
+    # the hot path raise) and a compile-count sentinel (any recompile after
+    # the warm-in rounds raises).  Execution-only: guards never change a
+    # computed bit, they only turn silent performance regressions into
+    # errors.  Sharded engines only — the loop engine feeds numpy batches
+    # straight into jit by design.
+    guards: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -162,7 +170,7 @@ class FedConfig:
             raise ValueError(
                 f"engine='sharded' supports algorithms {SHARDED_ALGORITHMS}; "
                 f"{self.algorithm!r} clusters on a host-sequential pre-round "
-                f"of local updates — use engine='loop'")
+                "of local updates — use engine='loop'")
         if self.kd_impl not in KD_IMPLS:
             raise ValueError(
                 f"kd_impl must be one of {KD_IMPLS}, got {self.kd_impl!r}")
@@ -202,6 +210,11 @@ class FedConfig:
                 f"ckpt_keep must be >= 1 or None, got {self.ckpt_keep}")
         if self.resume and not self.ckpt_dir:
             raise ValueError("resume=True needs ckpt_dir")
+        if self.guards and self.engine != "sharded":
+            raise ValueError(
+                "guards=True requires engine='sharded': the loop engine "
+                "feeds host batches into jit on purpose, so the transfer "
+                "guard would reject its steady state")
         # lifecycle knobs (fed/lifecycle.py validates the schedule's shape;
         # normalising here keeps the fingerprint canonical)
         from repro.fed.lifecycle import normalize_join_schedule
@@ -224,7 +237,7 @@ class FedConfig:
                 f"round_deadline must be > 0, got {self.round_deadline}")
         if not 0.0 <= self.straggler_frac < 1.0:
             raise ValueError(
-                f"straggler_frac must be in [0, 1), got "
+                "straggler_frac must be in [0, 1), got "
                 f"{self.straggler_frac}")
         if self.latency_dist not in schedule.LATENCY_DISTS:
             raise ValueError(
@@ -253,7 +266,7 @@ class FedConfig:
                 raise ValueError(
                     f"join_schedule brings in {total} clients but "
                     f"num_clients={self.num_clients}; at least one client "
-                    f"must be present from round 1")
+                    "must be present from round 1")
 
     @property
     def lifecycle_enabled(self) -> bool:

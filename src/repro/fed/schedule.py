@@ -108,6 +108,7 @@ SALT_DROPOUT = 0xD0
 SALT_LEAVE = 0x1F          # owned by fed/lifecycle.py
 SALT_SPEED = 0x5E
 SALT_WARMUP = 0xA0
+SALT_BATCH = 0xB0          # owned by data/pipeline.py (per-epoch batch order)
 
 
 # --------------------------------------------------------------- round plan
@@ -275,7 +276,7 @@ class RoundScheduler:
                        for k in range(len(uniq))]
         self.n_clusters = len(self.groups)
         if participation not in PARTICIPATION_MODES:
-            raise ValueError(f"participation must be one of "
+            raise ValueError("participation must be one of "
                              f"{PARTICIPATION_MODES}, got {participation!r}")
         if weighting not in WEIGHTINGS:
             raise ValueError(f"weighting must be one of {WEIGHTINGS}, "
@@ -285,7 +286,7 @@ class RoundScheduler:
                 raise ValueError(
                     f"participation='full' runs all {self.n_clients} clients "
                     f"every round; clients_per_round={clients_per_round} "
-                    f"conflicts (use participation='uniform'/'stratified')")
+                    "conflicts (use participation='uniform'/'stratified')")
             clients_per_round = self.n_clients
         else:
             if clients_per_round is None:
@@ -298,7 +299,7 @@ class RoundScheduler:
             if (participation == "stratified"
                     and clients_per_round < self.n_clusters):
                 raise ValueError(
-                    f"stratified sampling needs clients_per_round >= "
+                    "stratified sampling needs clients_per_round >= "
                     f"n_clusters ({self.n_clusters}) to keep every cluster's "
                     f"teacher covered, got {clients_per_round}")
         if not 0.0 <= dropout_rate < 1.0:
@@ -330,8 +331,13 @@ class RoundScheduler:
 
     # ------------------------------------------------------------- sampling
     def _rng(self, round_index: int) -> np.random.Generator:
+        # Legacy pre-registry participation stream: retro-salting it would
+        # reshuffle every sampled roster and invalidate all committed
+        # numerics.  Its [seed, round+1] shape cannot meet any salted
+        # stream — those all have entropy length >= 3.
         return np.random.default_rng(
-            np.random.SeedSequence([self.seed & 0x7FFFFFFF, round_index + 1]))
+            np.random.SeedSequence([self.seed & 0x7FFFFFFF,
+                                    round_index + 1]))  # fedlint: allow=FL001
 
     # ---------------------------------------------------------- speed model
     def _is_straggler(self, client: int) -> bool:
@@ -471,9 +477,9 @@ class RoundScheduler:
             return self._build_plan(0, [g.copy() for g in self.groups])
         if self.n_clusters > self.n_slots:
             raise ValueError(
-                f"teacher warm-up needs at least one mesh slot per cluster: "
+                "teacher warm-up needs at least one mesh slot per cluster: "
                 f"{self.n_clusters} clusters > {self.n_slots} slots "
-                f"(raise pack or n_devices)")
+                "(raise pack or n_devices)")
         caps = np.asarray([len(g) for g in self.groups])
         counts = self._stratified_counts(self.n_slots, caps)
         # own salted stream: ``_rng(0)`` — the old choice — IS the sampling

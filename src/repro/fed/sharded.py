@@ -213,8 +213,10 @@ def slot_client_keys(base, plan: RoundPlan, *, offset: int = 0):
     key streams stay stable under slot re-assignment across rounds (idle
     slots fold client 0; they never train)."""
     cid = np.where(plan.active, plan.slot_client, 0)
-    return _fold_keys(base, jnp.asarray(offset + cid.astype(np.int64),
-                                        jnp.uint32))
+    # device_put, not jnp.asarray: the EXPLICIT transfer stays legal under
+    # guards.no_implicit_transfers() (same uint32 wrap-around semantics)
+    return _fold_keys(base, jax.device_put(
+        (offset + cid.astype(np.int64)).astype(np.uint32)))
 
 
 def slot_cluster_keys(base, plan: RoundPlan):
@@ -222,7 +224,7 @@ def slot_cluster_keys(base, plan: RoundPlan):
     of a cluster share one key (identical batches + identical dropout masks
     keep teacher replicas bitwise in sync between sync collectives)."""
     kidx = np.where(plan.active, plan.slot_cluster, 0)
-    return _fold_keys(base, jnp.asarray(kidx, jnp.uint32))
+    return _fold_keys(base, jax.device_put(kidx.astype(np.uint32)))
 
 
 @functools.partial(jax.jit, static_argnums=1)

@@ -1,0 +1,128 @@
+"""Runtime sanitizers for the packed runtime (DESIGN.md §14).
+
+Static analysis (``tools/fedlint``) proves invariants about the CODE; this
+module turns the runtime halves of the same claims into executable
+assertions, all enabled together by ``FedConfig.guards``:
+
+* ``no_implicit_transfers()`` — wraps jax's thread-local
+  ``transfer_guard("disallow")``: any implicit host->device transfer
+  inside the block (a numpy array or Python scalar silently fed to a
+  jitted program) raises instead of quietly re-staging a copy every
+  round.  The hot path must stage through ``SlotStager`` / explicit
+  ``jax.device_put`` — this guard is what makes "must" mean something.
+  (``jnp.asarray`` does NOT count as explicit: its transfer is async and
+  the guard fires when the result is consumed.)
+* compile sentinel — ``install()`` registers a process-wide
+  ``jax.monitoring`` listener counting compilation events;
+  ``compile_count()`` snapshots the counter and
+  ``assert_no_new_compiles()`` turns the "steady state never recompiles"
+  claims (fixed slot layout, fixed-shape semi-async merges) into hard
+  errors carrying the compile delta.  Executing an already-compiled
+  program emits no event, so the counter moves only on real (re)compiles.
+* ``leak_check()`` — asserts the live-device-array count returns to its
+  baseline across a block (catches donated-buffer leaks and stale
+  references pinning whole model stacks).
+
+Thread-locality: the transfer guard is thread-local, so the async
+checkpoint writer's device->host pulls on its own thread are unaffected
+by a guard on the driver thread.  The compile counter is process-global
+on purpose — a recompile is a regression no matter which thread asks.
+"""
+from __future__ import annotations
+
+import contextlib
+import gc
+import threading
+
+import jax
+
+
+class GuardError(RuntimeError):
+    """A runtime invariant (recompile / leak) was violated under guards."""
+
+
+_lock = threading.Lock()
+_installed = False
+_compiles = 0
+
+
+def _on_event(event: str, **kwargs) -> None:
+    # one event per actual trace+lower+compile; cache hits are silent
+    if "compile" in event:
+        global _compiles
+        with _lock:
+            _compiles += 1
+
+
+def install() -> None:
+    """Idempotently register the compile-event listener.
+
+    jax.monitoring offers registration but no deregistration, so the
+    listener is installed once per process and left in place; it is a
+    counter bump, invisible when no sentinel is checking it.
+    """
+    global _installed
+    with _lock:
+        if _installed:
+            return
+        _installed = True
+    jax.monitoring.register_event_listener(_on_event)
+
+
+def compile_count() -> int:
+    """Compilations observed since ``install()`` (monotonic snapshot)."""
+    with _lock:
+        return _compiles
+
+
+def assert_no_new_compiles(baseline: int, context: str = "") -> None:
+    current = compile_count()
+    if current > baseline:
+        where = f" during {context}" if context else ""
+        raise GuardError(
+            f"compile sentinel: {current - baseline} recompilation(s)"
+            f"{where} — the steady state must reuse round-0 programs "
+            "(a shape, dtype, or static-arg changed under jit)")
+
+
+@contextlib.contextmanager
+def no_new_compiles(context: str = ""):
+    """Assert zero jit compilations happen inside the block."""
+    install()
+    baseline = compile_count()
+    yield
+    assert_no_new_compiles(baseline, context)
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Fail on implicit host->device transfers inside the block.
+
+    The explicit escapes (``jax.device_put``, ``jax.device_get``) stay
+    allowed — the guard rejects the silent coercions that hide a
+    per-round host round-trip: numpy/Python arguments to jitted calls,
+    ``jnp`` scalar constructors, eager dtype promotion, and
+    ``jnp.asarray`` (whose async transfer surfaces at consumption).
+
+    Only the host->device direction is guarded: device->device resharding
+    (a committed array spreading onto the mesh) and device->host metric
+    pulls are how staged data legitimately moves each round.
+    """
+    with jax.transfer_guard_host_to_device("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def leak_check(allow: int = 0, context: str = ""):
+    """Assert the live-device-array population grows by <= ``allow``."""
+    gc.collect()
+    before = len(jax.live_arrays())
+    yield
+    gc.collect()
+    grown = len(jax.live_arrays()) - before
+    if grown > allow:
+        where = f" during {context}" if context else ""
+        raise GuardError(
+            f"leak check: {grown} device array(s) leaked{where} "
+            f"(allowed {allow}) — a donated or per-round buffer is being "
+            "pinned across rounds")

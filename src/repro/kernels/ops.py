@@ -108,7 +108,7 @@ def kd_distillation_loss_batched(student_logits, teacher_logits, labels,
     """
     if student_logits.shape != teacher_logits.shape:
         raise ValueError(
-            f"student/teacher logit shapes differ: "
+            "student/teacher logit shapes differ: "
             f"{student_logits.shape} vs {teacher_logits.shape}")
     if labels.shape != student_logits.shape[:-1]:
         raise ValueError(
@@ -205,7 +205,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             f"causal flash_attention with T={T}, S={S} pads queries by "
             f"{pad_t} but keys by {pad_s}; the right-aligned causal mask is "
             f"computed on padded lengths and would mis-mask {abs(pad_s - pad_t)} "
-            f"keys.  Use T/S that pad equally (e.g. 128-multiples).")
+            "keys.  Use T/S that pad equally (e.g. 128-multiples).")
     qt = _pad_to(qt, 2, bq, 0.0)
     kt = _pad_to(kt, 2, bk, 0.0)
     vt = _pad_to(vt, 2, bk, 0.0)

@@ -21,7 +21,7 @@ import traceback
 from pathlib import Path
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES
-from repro.launch.dryrun import LONG_OK, arch_config, lower_one, shape_skip_reason
+from repro.launch.dryrun import arch_config, lower_one, shape_skip_reason
 from repro.launch.mesh import make_production_mesh
 
 FIELDS = ("flops_per_device", "hbm_bytes_per_device",

@@ -49,7 +49,7 @@ def make_fed_client_mesh(n_participants: int, *, pack: int = 1,
             f"need {n_devices} devices for {n_participants} clients at "
             f"pack={pack}, have {len(devs)}; on CPU set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
-            f"before importing jax, or raise pack")
+            "before importing jax, or raise pack")
     return Mesh(np.asarray(devs[:n_devices]), (CLIENT_AXIS,))
 
 

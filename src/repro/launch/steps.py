@@ -10,8 +10,6 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +20,6 @@ from repro.core.distill import kl_teacher_student
 from repro.models import encdec as ed
 from repro.models import transformer as tf
 from repro.optim import adamw, apply_updates
-from repro.optim.optimizers import AdamState
 
 
 def _loss_mod(cfg: ModelConfig):

@@ -38,7 +38,7 @@ def parse_join_schedule(spec):
                      (tok.split(":") for tok in spec.split(",")))
     except ValueError as e:
         raise SystemExit(
-            f"--join-schedule wants 'round:count[,round:count...]', "
+            "--join-schedule wants 'round:count[,round:count...]', "
             f"got {spec!r} ({e})")
 
 
@@ -67,7 +67,7 @@ def run_fl(args):
                     ckpt_keep=args.ckpt_keep or None,
                     resume=args.resume,
                     donate=args.donate, prefetch=args.prefetch,
-                    async_ckpt=args.async_ckpt)
+                    async_ckpt=args.async_ckpt, guards=args.guards)
     h = run_federated(ds, cfg, progress=True)
     print(f"final: acc={h['acc'][-1]:.4f} loss={h['loss'][-1]:.4f}")
     if args.ckpt:
@@ -189,6 +189,12 @@ def main():
     fl.add_argument("--async-ckpt", action="store_true", dest="async_ckpt",
                     help="write round checkpoints on a background thread "
                          "(atomic publish; identical bytes to sync writes)")
+    fl.add_argument("--guards", action="store_true",
+                    help="run steady-state rounds under the runtime "
+                         "sanitizers (src/repro/guards.py): implicit "
+                         "host<->device transfers and post-warm-in "
+                         "recompiles raise instead of silently slowing the "
+                         "run (sharded engine only)")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

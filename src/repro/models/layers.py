@@ -9,7 +9,7 @@ model wrappers and consumed through ``jax.lax.scan``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -202,10 +202,9 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
         G = cfg.num_layers // cfg.attn_every
         win = cfg.sliding_window or cache_len
         S = min(win, cache_len)
-        mam = rk_tree = jax.tree_util.tree_map(
+        mam = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(),
             sm.init_mamba2_cache(cfg, batch, dt))
-        del rk_tree
         kvh, hd = cfg.num_kv_heads, cfg.hd
         return {
             "mamba": mam,
@@ -230,7 +229,6 @@ def decode_step(p, cfg: ModelConfig, cache, tokens, pos):
     """One-token decode.  tokens: (B,1) int32; pos: scalar int32 (current
     position, == number of tokens already in cache).  Returns (logits, cache)."""
     x = p["embed"][tokens]
-    B = x.shape[0]
     win = cfg.sliding_window
 
     if cfg.arch_type == "ssm":

@@ -24,6 +24,15 @@ Contract:
   list — the driver calls it once per completed round (warm-up/setup time
   lands in the round that follows it, i.e. the first bucket; steady-state
   consumers should skip bucket 0, which also carries jit compilation).
+- Thread attribution: work that RUNS on a background thread but BELONGS to
+  a specific round — the async checkpoint writer's device-to-host copy and
+  npz write — is recorded with ``span(name, round_id=token)`` where the
+  token was captured on the submitting thread via ``round_token()``.  Such
+  a span lands in its submission round's bucket even when that round's
+  bucket has already been closed by ``end_round()`` (the bucket is patched
+  in place under a lock).  Without a token a span always means "the round
+  currently open on the driver thread", which is wrong from any other
+  thread — that was the bug this API closes.
 - Timings NEVER enter the run history or the checkpoint: resume
   bit-identity is about model state, and an instrument must not perturb it.
 
@@ -35,8 +44,10 @@ later span blocks (the strategies block on round outputs inside their
 from __future__ import annotations
 
 import contextlib
+import threading
 import time
 
+_lock = threading.Lock()
 _enabled = False
 _current: dict[str, float] = {}
 _rounds: list[dict[str, float]] = []
@@ -45,9 +56,10 @@ _rounds: list[dict[str, float]] = []
 def enable() -> None:
     """Start collecting (clears any previous collection)."""
     global _enabled
-    _enabled = True
-    _current.clear()
-    _rounds.clear()
+    with _lock:
+        _enabled = True
+        _current.clear()
+        _rounds.clear()
 
 
 def disable() -> None:
@@ -59,9 +71,24 @@ def enabled() -> bool:
     return _enabled
 
 
+def round_token() -> int:
+    """Token naming the round bucket currently open on the caller's thread.
+
+    Capture it where the work is SUBMITTED, pass it to ``span(...,
+    round_id=token)`` where the work RUNS: the span then lands in this
+    bucket no matter which thread executes it or how many rounds have
+    closed in between."""
+    with _lock:
+        return len(_rounds)
+
+
 @contextlib.contextmanager
-def span(name: str):
-    """Accumulate wall-clock under ``name`` in the current round's bucket."""
+def span(name: str, round_id: int | None = None):
+    """Accumulate wall-clock under ``name``.
+
+    Without ``round_id``: into the round bucket open at EXIT time (the
+    driver-thread pattern).  With ``round_id`` (a ``round_token()``
+    capture): into that specific round's bucket, open or closed."""
     if not _enabled:
         yield
         return
@@ -69,17 +96,29 @@ def span(name: str):
     try:
         yield
     finally:
-        _current[name] = _current.get(name, 0.0) + time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with _lock:
+            if round_id is None or round_id >= len(_rounds):
+                bucket = _current
+            else:
+                bucket = _rounds[round_id]
+            bucket[name] = bucket.get(name, 0.0) + dt
 
 
 def end_round() -> None:
     """Close the current round's bucket (driver: once per completed round)."""
     if not _enabled:
         return
-    _rounds.append(dict(_current))
-    _current.clear()
+    with _lock:
+        _rounds.append(dict(_current))
+        _current.clear()
 
 
 def snapshot() -> list[dict[str, float]]:
-    """Per-round phase buckets collected since ``enable()`` (a copy)."""
-    return [dict(r) for r in _rounds]
+    """Per-round phase buckets collected since ``enable()`` (a copy).
+
+    Late token-attributed spans (an async checkpoint still in flight)
+    patch the live buckets, not this copy — flush background writers
+    before snapshotting."""
+    with _lock:
+        return [dict(r) for r in _rounds]

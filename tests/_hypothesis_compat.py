@@ -13,6 +13,10 @@ Usage in test modules:
 """
 from __future__ import annotations
 
+# the re-export surface (keeps the conditional imports off the
+# unused-import radar: they ARE the API when hypothesis is present)
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 
 try:
     from hypothesis import given, settings

@@ -1,0 +1,8 @@
+"""FL001 fixture: an allowlisted legacy stream (must NOT be reported)."""
+import numpy as np
+
+
+def legacy(seed, r):
+    # pre-registry stream kept for numerics compatibility
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, r]))  # fedlint: allow=FL001

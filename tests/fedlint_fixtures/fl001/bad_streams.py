@@ -1,0 +1,18 @@
+"""FL001 fixture: seeded PRNG-stream violations (never imported, only
+parsed by fedlint)."""
+import numpy as np
+
+SALT_GOOD = 0x11
+SALT_DUP = 0x11            # VIOLATION: duplicate salt value
+
+
+def sample(seed, r):
+    a = np.random.default_rng(
+        np.random.SeedSequence([seed, r]))               # VIOLATION: unsalted
+    b = np.random.default_rng(
+        np.random.SeedSequence([seed, r, 0x99]))         # VIOLATION: magic salt
+    c = np.random.default_rng(
+        np.random.SeedSequence([seed, r, SALT_GOOD]))    # ok
+    d = np.random.default_rng(
+        np.random.SeedSequence([seed, r, SALT_GOOD, 1])) # VIOLATION: shape drift
+    return a, b, c, d

@@ -1,0 +1,15 @@
+"""FL002 fixture: fingerprint-completeness violations."""
+
+
+class FedConfig:
+    lr: float = 0.1
+    rounds: int = 5
+    mystery: int = 0       # VIOLATION: neither fingerprinted nor excluded
+    both: int = 1          # VIOLATION: fingerprinted AND excluded
+
+
+EXECUTION_ONLY = frozenset({"rounds", "both", "ghost"})  # VIOLATION: ghost is stale
+
+
+def fingerprint(cfg):
+    return {"lr": cfg.lr, "both": cfg.both}

@@ -1,0 +1,27 @@
+"""FL003 fixture: donation-safety violations."""
+import jax
+
+
+def read_after_donate(params, x):
+    step = jax.jit(lambda p, b: p, donate_argnums=(0,))
+    out = step(params, x)
+    y = params + 1          # VIOLATION: read after donation
+    return out, y
+
+
+def rebound_is_safe(params, x):
+    step = jax.jit(lambda p, b: p, donate_argnums=(0,))
+    params = step(params, x)
+    return params + 1       # ok: the name was rebound to the result
+
+
+def canonical_donated(tp_k, x):
+    f = jax.jit(lambda a, b: a, donate_argnums=(0,))
+    return f(tp_k, x)       # VIOLATION: canonical stack in donated position
+
+
+def finish(tp_k, upd):
+    return tp_k + upd
+
+
+finish_jit = jax.jit(finish, donate_argnums=(0,))  # VIOLATION: canonical param donated

@@ -1,0 +1,29 @@
+"""FL004 fixture: tracer-safety violations inside jitted code."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def branchy(x):
+    if x > 0:               # VIOLATION: Python control flow on a tracer
+        return x
+    return x - 1
+
+
+@jax.jit
+def concretize(x):
+    return float(x)         # VIOLATION: float() on a tracer
+
+
+@jax.jit
+def hostcall(x):
+    return np.sum(x)        # VIOLATION: host numpy on a tracer
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def static_ok(x, n):
+    if n > 2:               # ok: n is a static (Python) argument
+        return x * n
+    return x

@@ -10,7 +10,6 @@ in-process; the kill test SIGKILLs a real writer subprocess mid-stream.
 import filecmp
 import json
 import os
-import signal
 import subprocess
 import sys
 import time

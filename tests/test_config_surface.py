@@ -1,0 +1,42 @@
+"""Config-surface invariant (runtime twin of fedlint FL002): every
+``FedConfig`` field is either part of the resume fingerprint or explicitly
+declared execution-only — no silent resume-identity holes, even when the
+static lint is skipped."""
+import dataclasses
+
+from repro.fed.driver import EXECUTION_ONLY, fingerprint
+from repro.fed.rounds import FedConfig
+
+
+def test_every_field_is_fingerprinted_or_execution_only():
+    fields = {f.name for f in dataclasses.fields(FedConfig)}
+    # k_range is fingerprinted only when the cluster count is metric-voted
+    # (num_clusters=None), so take the union over both identity surfaces
+    fp_keys = set(fingerprint(FedConfig(algorithm="fedsikd",
+                                        num_clusters=2)))
+    fp_keys |= set(fingerprint(FedConfig(algorithm="fedsikd",
+                                         num_clusters=None)))
+    missing = fields - fp_keys - EXECUTION_ONLY
+    assert not missing, (
+        "FedConfig fields neither fingerprinted nor in EXECUTION_ONLY "
+        "(a config change would silently resume as the same run): "
+        f"{sorted(missing)}")
+
+
+def test_no_field_is_both_fingerprinted_and_execution_only():
+    cfg = FedConfig(algorithm="fedsikd", num_clusters=2)
+    both = set(fingerprint(cfg)) & EXECUTION_ONLY
+    assert not both, sorted(both)
+
+
+def test_execution_only_entries_are_real_fields():
+    fields = {f.name for f in dataclasses.fields(FedConfig)}
+    stale = EXECUTION_ONLY - fields
+    assert not stale, f"stale EXECUTION_ONLY entries: {sorted(stale)}"
+
+
+def test_k_range_fingerprinted_when_metric_voted():
+    # num_clusters=None switches cluster-count selection to the k_range
+    # sweep, so k_range becomes part of the run identity
+    cfg = FedConfig(algorithm="fedsikd", num_clusters=None)
+    assert "k_range" in fingerprint(cfg)

@@ -4,7 +4,6 @@ and the packed baseline engine (subprocess with 8 host devices).
 """
 import textwrap
 
-import numpy as np
 import pytest
 from _subproc import run_script
 

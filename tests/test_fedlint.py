@@ -1,0 +1,100 @@
+"""tools/fedlint: each rule catches its seeded fixture violation (with
+file:line and rule ID), the pragma allowlist suppresses, and the shipped
+``src/repro`` tree is clean (the static half of DESIGN.md §14)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:           # `tools` lives at the repo root
+    sys.path.insert(0, str(REPO))
+
+from tools.fedlint.core import Project, run_rules           # noqa: E402
+from tools.fedlint.rules import RULE_DOCS, RULES            # noqa: E402
+
+FIXTURES = Path(__file__).parent / "fedlint_fixtures"
+
+
+def findings_for(sub: str):
+    return run_rules(Project.load(FIXTURES / sub), RULES)
+
+
+def violation_lines(path: Path) -> list[int]:
+    """1-based lines of the fixture carrying a ``VIOLATION`` marker."""
+    return [i for i, text in enumerate(path.read_text().splitlines(), 1)
+            if "VIOLATION" in text]
+
+
+def assert_seeded_violations_caught(sub: str, rule: str, rel: str):
+    """Every marked fixture line is reported with file:line + rule ID."""
+    found = findings_for(sub)
+    assert found, f"{sub}: no findings at all"
+    assert {f.rule for f in found} == {rule}
+    got = {(f.path, f.line) for f in found}
+    want = {(rel, ln) for ln in violation_lines(FIXTURES / sub / rel)}
+    assert want, f"fixture {rel} has no VIOLATION markers"
+    assert got == want, f"want {sorted(want)}, got {sorted(got)}"
+    for f in found:
+        # the formatted finding is the CI-facing contract: path:line + ID
+        assert f.format().startswith(f"{f.path}:{f.line}: {rule} ")
+
+
+def test_fl001_catches_unsalted_magic_dup_and_shape_drift():
+    assert_seeded_violations_caught("fl001", "FL001", "bad_streams.py")
+
+
+def test_fl001_pragma_allowlists_the_legacy_stream():
+    assert not [f for f in findings_for("fl001")
+                if f.path == "allowed.py"]
+
+
+def test_fl002_catches_missing_double_booked_and_stale_fields():
+    assert_seeded_violations_caught("fl002", "FL002", "config.py")
+
+
+def test_fl003_catches_read_after_donate_and_canonical_donation():
+    assert_seeded_violations_caught("fl003", "FL003", "donate.py")
+
+
+def test_fl003_rebinding_to_the_result_is_clean():
+    found = findings_for("fl003")
+    lines = violation_lines(FIXTURES / "fl003" / "donate.py")
+    safe = [f for f in found if f.line not in lines]
+    assert not safe, [f.format() for f in safe]
+
+
+def test_fl004_catches_branch_concretize_and_host_numpy():
+    assert_seeded_violations_caught("fl004", "FL004", "fed/traced.py")
+
+
+def test_fl005_catches_tobytes_key_and_comprehension_shape():
+    assert_seeded_violations_caught("fl005", "FL005", "fed/recompile.py")
+
+
+def test_rule_registry_is_complete():
+    assert [rid for rid, _ in RULES] == sorted(RULE_DOCS) == [
+        "FL001", "FL002", "FL003", "FL004", "FL005"]
+
+
+def test_shipped_tree_is_clean():
+    found = run_rules(Project.load(REPO / "src" / "repro"), RULES)
+    assert not found, "\n".join(f.format() for f in found)
+
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    env = {"PATH": "/usr/bin:/bin", "HOME": "/root"}
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.fedlint", "src/repro",
+         "--json", str(tmp_path / "report.json")],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    report = json.loads((tmp_path / "report.json").read_text())
+    assert report["findings"] == [] and report["modules_scanned"] > 0
+
+    dirty = subprocess.run(
+        [sys.executable, "-m", "tools.fedlint",
+         str(FIXTURES / "fl001" / "bad_streams.py")],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert dirty.returncode == 1
+    assert "FL001" in dirty.stdout and "bad_streams.py:" in dirty.stdout

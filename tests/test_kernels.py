@@ -7,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
-from repro.kernels.kd_softmax_kl import kd_loss_bwd, kd_loss_fwd
+from repro.kernels.kd_softmax_kl import kd_loss_fwd
 from repro.models import chunked_scan as cs
 
 KEY = jax.random.PRNGKey(0)

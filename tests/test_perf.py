@@ -1,0 +1,83 @@
+"""perf.py thread-aware attribution: spans recorded on a background thread
+with a submission-round token land in the submitting round's bucket, even
+after that round closed — the AsyncCheckpointWriter regression (ISSUE 8
+satellite: checkpoint spans used to fall into whatever round was open when
+the writer got around to the write)."""
+import threading
+import time
+
+import numpy as np
+
+from repro import perf
+from repro.fed import fedstate
+
+
+def teardown_function(_fn):
+    perf.disable()
+
+
+def test_span_without_token_lands_in_open_round():
+    perf.enable()
+    with perf.span("work"):
+        pass
+    perf.end_round()
+    snap = perf.snapshot()
+    assert len(snap) == 1 and "work" in snap[0]
+
+
+def test_token_span_patches_a_closed_round():
+    perf.enable()
+    tok = perf.round_token()
+    perf.end_round()                 # round 0 closes before the span runs
+    perf.end_round()                 # round 1 is also closed
+    with perf.span("checkpoint", round_id=tok):
+        time.sleep(0.01)
+    snap = perf.snapshot()
+    assert snap[0].get("checkpoint", 0.0) >= 0.01
+    assert "checkpoint" not in snap[1]
+
+
+def test_token_span_from_background_thread():
+    perf.enable()
+    tok = perf.round_token()
+
+    def worker():
+        with perf.span("checkpoint", round_id=tok):
+            time.sleep(0.01)
+
+    th = threading.Thread(target=worker)
+    perf.end_round()                 # the round closes while work is queued
+    th.start()
+    th.join()
+    perf.end_round()
+    snap = perf.snapshot()
+    assert snap[0].get("checkpoint", 0.0) >= 0.01
+    assert "checkpoint" not in snap[1]
+
+
+def test_async_writer_attributes_by_submission_round(monkeypatch, tmp_path):
+    """The writer's save runs rounds later than the submit; its checkpoint
+    span must still land in the SUBMISSION round's bucket."""
+    release = threading.Event()
+    saved = []
+
+    def slow_save(ckpt_dir, state, keep_last=None):
+        release.wait(timeout=30)
+        saved.append(state.round_index)
+
+    monkeypatch.setattr(fedstate, "save_round", slow_save)
+    perf.enable()
+    writer = fedstate.AsyncCheckpointWriter(str(tmp_path))
+    state = fedstate.FedState(round_index=1,
+                              arrays={"w": np.zeros(2, np.float32)},
+                              history={}, meta={})
+    writer.submit(state)             # submitted during round 0
+    perf.end_round()                 # rounds advance past the pending write
+    perf.end_round()
+    release.set()
+    writer.close()
+    perf.end_round()
+    assert saved == [1]
+    snap = perf.snapshot()
+    assert snap[0].get("checkpoint", 0.0) > 0.0, snap
+    assert all("checkpoint" not in b for b in snap[1:]), snap

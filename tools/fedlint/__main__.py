@@ -1,0 +1,64 @@
+"""CLI: ``python -m tools.fedlint [paths...] [--json report.json]``.
+
+Exit 0 when every path is clean, 1 when any finding survives the pragma
+allowlist, 2 on usage errors.  Findings print one per line as
+``path:line: RULE message`` (paths relative to each scanned root).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.fedlint.core import Project, run_rules
+from tools.fedlint.rules import RULE_DOCS, RULES
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.fedlint",
+        description="Repo-invariant static analysis (FL001-FL005).")
+    parser.add_argument("paths", nargs="*", default=["src/repro"],
+                        help="files or directories to scan "
+                             "(default: src/repro)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write findings as a JSON report")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, doc in sorted(RULE_DOCS.items()):
+            print(f"{rule_id}  {doc}")
+        return 0
+
+    paths = args.paths or ["src/repro"]
+    findings = []
+    scanned = 0
+    for p in paths:
+        root = Path(p)
+        if not root.exists():
+            print(f"fedlint: no such path: {p}", file=sys.stderr)
+            return 2
+        project = Project.load(root)
+        scanned += len(project.modules)
+        findings.extend(run_rules(project, RULES))
+
+    for f in findings:
+        print(f.format())
+    if args.json:
+        report = {
+            "tool": "fedlint",
+            "paths": paths,
+            "modules_scanned": scanned,
+            "findings": [f.as_json() for f in findings],
+        }
+        Path(args.json).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"fedlint: {len(findings)} finding(s) in {scanned} module(s)",
+          file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""fedlint engine: project loading, AST utilities, pragma allowlist.
+
+A ``Project`` is the parsed view of one source tree (the shipped
+``src/repro`` tree, or a test fixture tree shaped like it).  Rules are
+plain functions ``rule(project) -> list[Finding]``; the engine owns the
+one thing every rule shares — the allowlist pragma:
+
+    x = something_flagged()   # fedlint: allow=FL004  <why it is safe>
+
+A pragma suppresses the named rules on every line of the statement that
+spans it (so a pragma on the closing line of a multi-line call covers the
+call), and — when it sits on a comment-only line — on the statement that
+starts on the next code line.  ``allow=all`` suppresses every rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Optional
+
+PRAGMA_RE = re.compile(r"#\s*fedlint:\s*allow=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, reported as ``path:line: RULE message``."""
+
+    rule: str
+    path: str          # project-root-relative, forward slashes
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def as_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+class Module:
+    """One parsed source file plus its pragma allowlist."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self._allowed = self._build_allowlist()
+
+    # ------------------------------------------------------------- pragmas
+    def _pragma_lines(self) -> dict[int, set[str]]:
+        """1-based line -> set of rule ids allowed there ('all' wildcard)."""
+        out: dict[int, set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(text)
+            if m:
+                rules = {tok.strip().upper() for tok in m.group(1).split(",")
+                         if tok.strip()}
+                out[i] = {"ALL" if r == "ALL" else r for r in rules}
+        return out
+
+    def _build_allowlist(self) -> dict[int, set[str]]:
+        """Expand pragma lines over the statements that span them."""
+        pragmas = self._pragma_lines()
+        if not pragmas:
+            return {}
+        allowed: dict[int, set[str]] = {ln: set(rs)
+                                        for ln, rs in pragmas.items()}
+        spans = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.stmt) and hasattr(node, "end_lineno"):
+                # a compound statement's span is its HEADER, not its body —
+                # a pragma inside an if-body must not blanket the whole if
+                end = node.end_lineno
+                if hasattr(node, "body") and getattr(node, "body", None):
+                    end = min(end, node.body[0].lineno - 1) or node.lineno
+                spans.append((node.lineno, max(end, node.lineno)))
+        for pline, rules in pragmas.items():
+            text = self.lines[pline - 1].strip()
+            for lo, hi in spans:
+                if lo <= pline <= hi:
+                    for ln in range(lo, hi + 1):
+                        allowed.setdefault(ln, set()).update(rules)
+            if text.startswith("#"):
+                # comment-only pragma: applies to the next statement
+                nxt = min((lo for lo, _ in spans if lo > pline),
+                          default=None)
+                if nxt is not None:
+                    for lo, hi in spans:
+                        if lo == nxt:
+                            for ln in range(lo, hi + 1):
+                                allowed.setdefault(ln, set()).update(rules)
+        return allowed
+
+    def allows(self, rule: str, line: int) -> bool:
+        rules = self._allowed.get(line, ())
+        return "ALL" in rules or rule in rules
+
+    # ----------------------------------------------------------- utilities
+    def src_of(self, node: ast.AST) -> str:
+        try:
+            return ast.get_source_segment(self.source, node) or "<expr>"
+        except Exception:
+            return "<expr>"
+
+
+class Project:
+    """The parsed source tree fedlint runs over."""
+
+    def __init__(self, root: Path, modules: list[Module]):
+        self.root = root
+        self.modules = modules
+
+    @classmethod
+    def load(cls, root: str | Path) -> "Project":
+        root = Path(root).resolve()
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        modules = []
+        for f in files:
+            if "__pycache__" in f.parts:
+                continue
+            rel = (f.relative_to(root).as_posix() if root.is_dir()
+                   else f.name)
+            modules.append(Module(f, rel, f.read_text()))
+        return cls(root if root.is_dir() else root.parent, modules)
+
+    def in_dirs(self, *names: str) -> list[Module]:
+        """Modules whose relative path crosses one of the directory names
+        (rule scoping: FL004 watches fed/, core/, kernels/ ...)."""
+        return [m for m in self.modules
+                if set(Path(m.rel).parts[:-1]) & set(names)]
+
+
+# --------------------------------------------------------------- AST helpers
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def last_segment(node: ast.AST) -> Optional[str]:
+    name = dotted_name(node)
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def int_tuple(node: ast.AST) -> Optional[tuple[int, ...]]:
+    """Resolve a literal int / tuple-of-ints expression; IfExp resolves to
+    the union of its branches (``(0, 1) if flag else ()`` donates when the
+    flag is on — the lint must assume it is)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, ast.Tuple):
+        vals = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            vals.append(e.value)
+        return tuple(vals)
+    if isinstance(node, ast.IfExp):
+        a = int_tuple(node.body)
+        b = int_tuple(node.orelse)
+        if a is None and b is None:
+            return None
+        return tuple(sorted(set(a or ()) | set(b or ())))
+    return None
+
+
+def assigned_names(target: ast.AST) -> list[str]:
+    """Flat identifier list bound by an assignment target: plain names and
+    ``self.attr`` attributes (spelled ``self.attr``), through tuple/list
+    unpacking and starred targets."""
+    out: list[str] = []
+    if isinstance(target, ast.Name):
+        out.append(target.id)
+    elif isinstance(target, ast.Attribute):
+        d = dotted_name(target)
+        if d:
+            out.append(d)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            out.extend(assigned_names(e))
+    elif isinstance(target, ast.Starred):
+        out.extend(assigned_names(target.value))
+    return out
+
+
+# ------------------------------------------------------------------- runner
+Rule = Callable[[Project], list[Finding]]
+
+
+def run_rules(project: Project, rules: Iterable[tuple[str, Rule]]
+              ) -> list[Finding]:
+    """Run every rule, drop pragma-allowlisted findings, sort by location."""
+    by_rel = {m.rel: m for m in project.modules}
+    findings: list[Finding] = []
+    for _rule_id, fn in rules:
+        for f in fn(project):
+            mod = by_rel.get(f.path)
+            if mod is not None and mod.allows(f.rule, f.line):
+                continue
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

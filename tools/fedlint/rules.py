@@ -1,0 +1,688 @@
+"""fedlint rules FL001-FL005 (rule catalog in DESIGN.md §14).
+
+Each rule is ``check_flNNN(project) -> list[Finding]``.  Rules locate the
+repo anchors STRUCTURALLY (the ``SALT_*`` registry is wherever module-level
+``SALT_*`` int constants live; ``FedConfig``/``fingerprint``/
+``EXECUTION_ONLY`` are found by name anywhere in the tree), so the same
+rules run unchanged over the shipped ``src/repro`` tree and over the seeded
+fixture trees in ``tests/fedlint_fixtures/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.fedlint.core import (Finding, Module, Project, assigned_names,
+                                dotted_name, int_tuple, last_segment)
+
+# The canonical salt slot in every SeedSequence entropy list:
+# [seed, round-slot, SALT, ...extra discriminators].
+SALT_INDEX = 2
+
+# fed/sharded.py round-program factories and the donated positions of the
+# callables they RETURN (FL003 follows the returned callee, not the factory).
+DONATING_FACTORIES = {
+    "make_packed_kd_round": (0, 1, 2, 3),
+    "make_packed_baseline_round": (0, 1),
+    "make_packed_teacher_phase": (0, 1),
+}
+
+# Canonical between-round state (the (K, ...) stacks / global params) that
+# must NEVER sit in a donated position: the async checkpoint writer and the
+# next round's gather still read these buffers (DESIGN.md §13).
+CANONICAL_NAMES = {
+    "tp_k", "ts_k", "sp_global", "global_student", "global_p",
+    "global_params", "teachers", "t_opts",
+}
+
+# Python-side casts/escapes that force a concrete value out of a tracer.
+CONCRETIZERS = {"float", "int", "bool"}
+CONCRETIZING_METHODS = {"item", "tolist", "tobytes"}
+
+# Array constructors whose comprehension-shaped argument bakes a Python
+# value into the array SHAPE (FL005).
+SHAPE_CONSTRUCTORS = {"asarray", "array", "stack", "concatenate"}
+
+
+# =========================================================== FL001: streams
+def _salt_registry(project: Project) -> tuple[dict, list[Finding]]:
+    """Module-level ``SALT_* = <int>`` constants across the project, plus
+    duplicate-value findings (two salts with one value = one stream)."""
+    registry: dict[str, tuple[int, str, int]] = {}
+    findings: list[Finding] = []
+    for m in project.modules:
+        for node in m.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            t = node.targets[0]
+            if not (isinstance(t, ast.Name) and t.id.startswith("SALT_")):
+                continue
+            if not (isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, int)):
+                findings.append(Finding(
+                    "FL001", m.rel, node.lineno,
+                    f"salt constant {t.id} must be an int literal "
+                    "(registry must be statically checkable)"))
+                continue
+            val = node.value.value
+            for name, (v, rel, line) in registry.items():
+                if v == val:
+                    findings.append(Finding(
+                        "FL001", m.rel, node.lineno,
+                        f"salt {t.id} duplicates the value 0x{val:X} of "
+                        f"{name} ({rel}:{line}) — every salt must be a "
+                        "distinct stream"))
+            registry[t.id] = (val, m.rel, node.lineno)
+    return registry, findings
+
+
+def check_fl001(project: Project) -> list[Finding]:
+    registry, findings = _salt_registry(project)
+    shapes: dict[str, tuple[int, str, int]] = {}
+    for m in project.modules:
+        for node in ast.walk(m.tree):
+            if not (isinstance(node, ast.Call)
+                    and last_segment(node.func) == "SeedSequence"):
+                continue
+            if not node.args or not isinstance(node.args[0], ast.List):
+                findings.append(Finding(
+                    "FL001", m.rel, node.lineno,
+                    "SeedSequence entropy must be a list literal so the "
+                    "salt slot is statically checkable"))
+                continue
+            elts = node.args[0].elts
+            if len(elts) <= SALT_INDEX:
+                findings.append(Finding(
+                    "FL001", m.rel, node.lineno,
+                    f"unsalted stream (entropy length {len(elts)}): every "
+                    "stream must carry a registered SALT_* constant at "
+                    f"index {SALT_INDEX}"))
+                continue
+            salt_name = last_segment(elts[SALT_INDEX])
+            if salt_name is None or salt_name not in registry:
+                findings.append(Finding(
+                    "FL001", m.rel, node.lineno,
+                    f"entropy index {SALT_INDEX} must be a registered "
+                    f"SALT_* constant, got {m.src_of(elts[SALT_INDEX])!r} "
+                    "(magic salts defeat the stream registry)"))
+                continue
+            n = len(elts)
+            if salt_name in shapes and shapes[salt_name][0] != n:
+                first_n, rel, line = shapes[salt_name]
+                findings.append(Finding(
+                    "FL001", m.rel, node.lineno,
+                    f"{salt_name} used with entropy length {n} but length "
+                    f"{first_n} at {rel}:{line} — one tuple shape per salt "
+                    "(shape is part of the stream identity)"))
+            shapes.setdefault(salt_name, (n, m.rel, node.lineno))
+    return findings
+
+
+# ======================================================= FL002: fingerprint
+def _find_class(project: Project, name: str
+                ) -> Optional[tuple[Module, ast.ClassDef]]:
+    for m in project.modules:
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.ClassDef) and node.name == name:
+                return m, node
+    return None
+
+
+def _find_function(project: Project, name: str
+                   ) -> Optional[tuple[Module, ast.FunctionDef]]:
+    for m in project.modules:
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.FunctionDef) and node.name == name:
+                return m, node
+    return None
+
+
+def _str_elts(node: ast.AST) -> Optional[set[str]]:
+    """String elements of a set/frozenset/tuple/list literal (or a
+    ``frozenset({...})`` call)."""
+    if isinstance(node, ast.Call) and last_segment(node.func) in (
+            "frozenset", "set") and node.args:
+        return _str_elts(node.args[0])
+    if isinstance(node, (ast.Set, ast.Tuple, ast.List)):
+        out = set()
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.add(e.value)
+        return out
+    return None
+
+
+def check_fl002(project: Project) -> list[Finding]:
+    cls = _find_class(project, "FedConfig")
+    fn = _find_function(project, "fingerprint")
+    if cls is None or fn is None:
+        return []                      # nothing to check in this tree
+    cfg_mod, cfg_cls = cls
+    fp_mod, fp_fn = fn
+
+    fields: dict[str, int] = {}
+    for node in cfg_cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            fields[node.target.id] = node.lineno
+
+    fp_keys: set[str] = set()
+    for node in ast.walk(fp_fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    fp_keys.add(k.value)
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.slice, ast.Constant)
+                        and isinstance(t.slice.value, str)):
+                    fp_keys.add(t.slice.value)
+
+    findings: list[Finding] = []
+    excl: set[str] = set()
+    excl_line = fp_fn.lineno
+    found_excl = False
+    for m in project.modules:
+        for node in m.tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "EXECUTION_ONLY"):
+                found_excl = True
+                excl_line = node.lineno
+                vals = _str_elts(node.value)
+                if vals is None:
+                    findings.append(Finding(
+                        "FL002", m.rel, node.lineno,
+                        "EXECUTION_ONLY must be a literal set of field-name "
+                        "strings (statically checkable exclusion set)"))
+                    vals = set()
+                excl = vals
+                excl_mod = m
+    if not found_excl:
+        excl_mod = fp_mod
+
+    for name, line in sorted(fields.items()):
+        in_fp, in_excl = name in fp_keys, name in excl
+        if not in_fp and not in_excl:
+            findings.append(Finding(
+                "FL002", cfg_mod.rel, line,
+                f"FedConfig field '{name}' is neither fingerprinted "
+                f"(fingerprint() in {fp_mod.rel}) nor declared execution-"
+                "only (EXECUTION_ONLY) — a silent resume-identity hole"))
+        elif in_fp and in_excl:
+            findings.append(Finding(
+                "FL002", cfg_mod.rel, line,
+                f"FedConfig field '{name}' is both fingerprinted and in "
+                "EXECUTION_ONLY — pick one"))
+    for name in sorted(excl - set(fields)):
+        findings.append(Finding(
+            "FL002", excl_mod.rel, excl_line,
+            f"EXECUTION_ONLY entry '{name}' is not a FedConfig field "
+            "(stale exclusion)"))
+    return findings
+
+
+# ========================================================= FL003: donation
+def _donated_of_jit_call(call: ast.Call, fn_scope: list[ast.stmt]
+                         ) -> Optional[tuple[int, ...]]:
+    """Donated positions of a ``jax.jit(...)`` call, resolving a
+    ``donate_argnums=`` that is a literal, an IfExp, or a local name
+    assigned one of those earlier in the enclosing function."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        got = int_tuple(kw.value)
+        if got is not None:
+            return got
+        if isinstance(kw.value, ast.Name):
+            for stmt in fn_scope:
+                if (isinstance(stmt, ast.Assign)
+                        and any(isinstance(t, ast.Name)
+                                and t.id == kw.value.id
+                                for t in stmt.targets)):
+                    got = int_tuple(stmt.value)
+            return got
+        return None
+    return None
+
+
+def _collect_donors(m: Module) -> dict[str, tuple[int, ...]]:
+    """Bindings in this module that hold a donating jitted callable:
+    ``{'round_fn': (0, 1, 2, 3), '_finish': (0, 1, 2), 'warm': (0, 1)}``.
+    Attribute targets are keyed by their bare attribute name so a callee
+    assigned in ``_setup_engine`` is recognised at its ``run_round`` call
+    site; factory calls donate per DONATING_FACTORIES unless they pass a
+    literal ``donate=False``."""
+    donors: dict[str, tuple[int, ...]] = {}
+    scopes = [m.tree.body] + [n.body for n in ast.walk(m.tree)
+                              if isinstance(n, (ast.FunctionDef,
+                                                ast.AsyncFunctionDef))]
+    for scope in scopes:
+        for stmt in scope:
+            if not isinstance(stmt, ast.Assign):
+                continue
+            call = stmt.value
+            if not isinstance(call, ast.Call):
+                continue
+            seg = last_segment(call.func)
+            donated: Optional[tuple[int, ...]] = None
+            if seg == "jit":
+                donated = _donated_of_jit_call(call, scope)
+            elif seg in DONATING_FACTORIES:
+                donated = DONATING_FACTORIES[seg]
+                for kw in call.keywords:
+                    if (kw.arg == "donate"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is False):
+                        donated = None
+            if not donated:
+                continue
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    donors[t.id] = donated
+                elif isinstance(t, ast.Attribute):
+                    donors[t.attr] = donated
+    return donors
+
+
+def _jit_param_findings(m: Module) -> list[Finding]:
+    """Canonical names must not be donated PARAMETERS of a jitted local
+    function: ``jax.jit(finish, donate_argnums=(3,))`` where param 3 is
+    ``tp_k`` donates a canonical stack by construction."""
+    findings: list[Finding] = []
+    defs = {n.name: n for n in ast.walk(m.tree)
+            if isinstance(n, ast.FunctionDef)}
+    scopes = [m.tree.body] + [n.body for n in ast.walk(m.tree)
+                              if isinstance(n, (ast.FunctionDef,
+                                                ast.AsyncFunctionDef))]
+    for scope in scopes:
+        for stmt in scope:
+            for call in ast.walk(stmt):
+                if not (isinstance(call, ast.Call)
+                        and last_segment(call.func) == "jit"
+                        and call.args
+                        and isinstance(call.args[0], ast.Name)
+                        and call.args[0].id in defs):
+                    continue
+                donated = _donated_of_jit_call(call, scope) or ()
+                params = [a.arg for a in defs[call.args[0].id].args.args]
+                for i in donated:
+                    if i < len(params) and params[i] in CANONICAL_NAMES:
+                        findings.append(Finding(
+                            "FL003", m.rel, call.lineno,
+                            f"canonical state '{params[i]}' (param {i} of "
+                            f"{call.args[0].id}) is in a donated position "
+                            "— canonical (K, ...) stacks / global params "
+                            "must never be donated"))
+    return findings
+
+
+def _own_nodes(stmt: ast.stmt) -> list[ast.AST]:
+    """AST nodes belonging to this statement PROPER — compound-statement
+    bodies are scanned as their own ``_flat_stmts`` entries, and nested
+    function/lambda bodies run later under their own bindings."""
+    out: list[ast.AST] = []
+    stack: list[ast.AST] = [stmt]
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.stmt, ast.Lambda)):
+                continue
+            stack.append(child)
+    return out
+
+
+def _loads_in(stmt: ast.stmt) -> list[tuple[str, int]]:
+    """(identifier, line) for every Name/self-attribute LOAD in the
+    statement proper."""
+    out = []
+    for node in _own_nodes(stmt):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            out.append((node.id, node.lineno))
+        elif (isinstance(node, ast.Attribute)
+              and isinstance(node.ctx, ast.Load)):
+            d = dotted_name(node)
+            if d and d.startswith("self."):
+                out.append((d, node.lineno))
+    return out
+
+
+def _donatable_ident(node: ast.AST) -> Optional[str]:
+    """The identifier an argument expression pins: a bare name or a
+    ``self.attr`` chain; anything else (a call result, a subscript) has no
+    lasting binding to poison."""
+    d = dotted_name(node)
+    if d and (("." not in d) or d.startswith("self.")):
+        return d
+    return None
+
+
+def check_fl003(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in project.modules:
+        findings.extend(_jit_param_findings(m))
+        donors = _collect_donors(m)
+        if not donors:
+            continue
+        for fn in ast.walk(m.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            findings.extend(_scan_consumed(m, fn, donors))
+    return findings
+
+
+def _flat_stmts(body: list[ast.stmt]) -> list[ast.stmt]:
+    """Statements in execution-ish order, recursing through compound
+    statements but NOT into nested function definitions."""
+    out: list[ast.stmt] = []
+    for stmt in body:
+        out.append(stmt)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            out.extend(_flat_stmts(getattr(stmt, field, []) or []))
+        for h in getattr(stmt, "handlers", []) or []:
+            out.extend(_flat_stmts(h.body))
+    return out
+
+
+def _scan_consumed(m: Module, fn: ast.FunctionDef,
+                   donors: dict[str, tuple[int, ...]]) -> list[Finding]:
+    """Linear read-after-donate scan over one function body."""
+    findings: list[Finding] = []
+    consumed: dict[str, int] = {}      # identifier -> donating call line
+    for stmt in _flat_stmts(fn.body):
+        # 1. loads of already-consumed bindings (before this statement's
+        # own donation/rebinding take effect: RHS evaluates first)
+        for ident, line in _loads_in(stmt):
+            if ident in consumed:
+                findings.append(Finding(
+                    "FL003", m.rel, line,
+                    f"'{ident}' is read after being donated to a jitted "
+                    f"callee at line {consumed[ident]} — the buffer was "
+                    "consumed in place (DESIGN.md §13 donation contract)"))
+                del consumed[ident]    # report once per donation
+        # 2. donating calls in this statement consume their donated args
+        for node in _own_nodes(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _donor_key(node.func)
+            if callee is None or callee not in donors:
+                continue
+            for i in donors[callee]:
+                if i >= len(node.args):
+                    continue
+                ident = _donatable_ident(node.args[i])
+                if ident is None:
+                    continue
+                bare = ident.rsplit(".", 1)[-1]
+                if bare in CANONICAL_NAMES:
+                    findings.append(Finding(
+                        "FL003", m.rel, node.lineno,
+                        f"canonical state '{ident}' passed in donated "
+                        f"position {i} of '{callee}' — canonical stacks / "
+                        "global params must never be donated"))
+                else:
+                    consumed[ident] = node.lineno
+        # 3. (re)bindings make the name safe again
+        rebound: list[str] = []
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                rebound.extend(assigned_names(t))
+        elif isinstance(stmt, ast.For):
+            rebound.extend(assigned_names(stmt.target))
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    rebound.extend(assigned_names(item.optional_vars))
+        for ident in rebound:
+            consumed.pop(ident, None)
+    return findings
+
+
+def _donor_key(func: ast.AST) -> Optional[str]:
+    """Call target -> donor-table key: bare names as-is, ``self.x``/
+    ``obj.x`` attributes by their attribute name."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+# =========================================================== FL004: tracers
+def _static_params(fn: ast.FunctionDef, deco: ast.AST) -> set[str]:
+    """Params pinned static by a ``functools.partial(jax.jit,
+    static_argnums=...)`` decorator (static args are Python values, not
+    tracers)."""
+    out: set[str] = set()
+    if isinstance(deco, ast.Call):
+        params = [a.arg for a in fn.args.args]
+        for kw in deco.keywords:
+            if kw.arg == "static_argnums":
+                for i in int_tuple(kw.value) or ():
+                    if i < len(params):
+                        out.add(params[i])
+            if kw.arg == "static_argnames":
+                names = _str_elts(kw.value)
+                if names:
+                    out.update(names)
+                elif (isinstance(kw.value, ast.Constant)
+                      and isinstance(kw.value.value, str)):
+                    out.add(kw.value.value)
+    return out
+
+
+def _traced_defs(m: Module) -> list[tuple[ast.AST, set[str]]]:
+    """(function node, statically-pinned params) for every def/lambda this
+    module hands to the tracer: jit/pmap/vmap/shard_map/pallas_call
+    decorators, the same as call arguments, and lambdas passed directly."""
+    wrappers = {"jit", "pmap", "vmap", "shard_map", "pallas_call"}
+    defs = {n.name: n for n in ast.walk(m.tree)
+            if isinstance(n, ast.FunctionDef)}
+    traced: dict[ast.AST, set[str]] = {}
+    for fn in defs.values():
+        for deco in fn.decorator_list:
+            seg = (last_segment(deco.func) if isinstance(deco, ast.Call)
+                   else last_segment(deco))
+            if seg in wrappers:
+                traced.setdefault(fn, set())
+            elif seg == "partial" and isinstance(deco, ast.Call):
+                inner = deco.args and last_segment(deco.args[0])
+                if inner in wrappers:
+                    traced.setdefault(fn, set()).update(
+                        _static_params(fn, deco))
+    for node in ast.walk(m.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if last_segment(node.func) not in wrappers:
+            continue
+        for arg in node.args[:1]:
+            if isinstance(arg, ast.Name) and arg.id in defs:
+                traced.setdefault(defs[arg.id], set())
+            elif isinstance(arg, ast.Lambda):
+                traced.setdefault(arg, set())
+    return list(traced.items())
+
+
+def _np_aliases(m: Module) -> set[str]:
+    out = set()
+    for node in ast.walk(m.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy":
+                    out.add(alias.asname or "numpy")
+    return out
+
+
+def check_fl004(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in project.in_dirs("fed", "core", "kernels"):
+        np_names = _np_aliases(m)
+        for fn, static in _traced_defs(m):
+            findings.extend(_scan_traced(m, fn, static, np_names))
+    return findings
+
+
+def _scan_traced(m: Module, fn: ast.AST, static: set[str],
+                 np_names: set[str]) -> list[Finding]:
+    """Taint-and-flag over one traced function: taint starts at the traced
+    params (of the function and of every nested def — nested defs trace
+    too), flows through simple assignments, and is flagged wherever a
+    Python-side escape consumes it."""
+    if isinstance(fn, ast.Lambda):
+        params = {a.arg for a in fn.args.args}
+        body_nodes = list(ast.walk(fn.body))
+        stmts: list[ast.stmt] = []
+    else:
+        params = {a.arg for a in fn.args.args} - static
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.Lambda)) and sub is not fn:
+                params |= {a.arg for a in sub.args.args}
+        stmts = _all_stmts(fn)
+        body_nodes = []
+    tainted = set(params)
+    # two passes: assignments propagate taint regardless of textual order
+    for _ in range(2):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if _expr_tainted(stmt.value, tainted):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        tainted.update(assigned_names(t))
+
+    findings: list[Finding] = []
+    nodes = body_nodes or [n for s in stmts for n in ast.walk(s)]
+    seen: set[tuple[int, str]] = set()
+
+    def flag(line: int, msg: str):
+        if (line, msg) not in seen:
+            seen.add((line, msg))
+            findings.append(Finding("FL004", m.rel, line, msg))
+
+    for node in nodes:
+        if isinstance(node, (ast.If, ast.While)):
+            for name in sorted(_tainted_names(node.test, tainted)):
+                flag(node.lineno,
+                     f"Python control flow on traced value '{name}' inside "
+                     "traced code — branch on host values only, use "
+                     "jnp.where/lax.cond for traced ones")
+        elif isinstance(node, ast.Call):
+            seg = last_segment(node.func)
+            if seg in CONCRETIZERS and isinstance(node.func, ast.Name):
+                for arg in node.args:
+                    for name in sorted(_tainted_names(arg, tainted)):
+                        flag(node.lineno,
+                             f"{seg}() concretizes traced value '{name}' "
+                             "inside traced code — it forces a trace-time "
+                             "escape (or a device sync under jit)")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in CONCRETIZING_METHODS):
+                for name in sorted(
+                        _tainted_names(node.func.value, tainted)):
+                    flag(node.lineno,
+                         f".{node.func.attr}() on traced value '{name}' "
+                         "inside traced code")
+            elif (isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Name)
+                  and node.func.value.id in np_names):
+                for arg in node.args:
+                    for name in sorted(_tainted_names(arg, tainted)):
+                        flag(node.lineno,
+                             "host numpy call "
+                             f"{node.func.value.id}.{node.func.attr}() on "
+                             f"traced value '{name}' inside traced code — "
+                             "use jnp")
+    return findings
+
+
+def _all_stmts(fn: ast.FunctionDef) -> list[ast.stmt]:
+    """Every statement inside ``fn`` INCLUDING nested defs' bodies (nested
+    defs inside a traced function trace with it)."""
+    out: list[ast.stmt] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.stmt) and node is not fn:
+            out.append(node)
+    return out
+
+
+def _tainted_names(expr: ast.AST, tainted: set[str]) -> set[str]:
+    out = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in tainted:
+            out.add(node.id)
+    return out
+
+
+def _expr_tainted(expr: ast.AST, tainted: set[str]) -> bool:
+    return bool(_tainted_names(expr, tainted))
+
+
+# ========================================================= FL005: recompiles
+def check_fl005(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in project.in_dirs("fed", "core"):
+        blessed_spans: list[tuple[int, int]] = []
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.ClassDef) and node.name == "SlotStager":
+                blessed_spans.append((node.lineno, node.end_lineno))
+
+        def blessed(line: int) -> bool:
+            return any(lo <= line <= hi for lo, hi in blessed_spans)
+
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "tobytes"
+                    and not blessed(node.lineno)):
+                findings.append(Finding(
+                    "FL005", m.rel, node.lineno,
+                    ".tobytes()-keyed structure outside the blessed "
+                    "staging path (fed/sharded.py SlotStager) — ad-hoc "
+                    "byte keys feeding jit arguments are the recompile "
+                    "bug class"))
+            seg = last_segment(node.func)
+            base = (dotted_name(node.func) or "").split(".")[0]
+            if (seg in SHAPE_CONSTRUCTORS and base in ("jnp", "jax")
+                    and node.args
+                    and isinstance(node.args[0],
+                                   (ast.ListComp, ast.GeneratorExp,
+                                    ast.SetComp))):
+                findings.append(Finding(
+                    "FL005", m.rel, node.lineno,
+                    f"{base}.{seg}() over a comprehension bakes a Python "
+                    "collection's length into an array shape — if this "
+                    "feeds a jitted program, every length change "
+                    "recompiles (stage through fixed-size buffers, or "
+                    "allowlist with justification)"))
+    return findings
+
+
+RULES: list[tuple[str, object]] = [
+    ("FL001", check_fl001),
+    ("FL002", check_fl002),
+    ("FL003", check_fl003),
+    ("FL004", check_fl004),
+    ("FL005", check_fl005),
+]
+
+RULE_DOCS = {
+    "FL001": "PRNG stream discipline: registered SALT_* at entropy index 2,"
+             " one tuple shape per salt",
+    "FL002": "fingerprint completeness: FedConfig fields == fingerprint keys"
+             " ∪ EXECUTION_ONLY",
+    "FL003": "donation safety: no reads of donated bindings, no canonical"
+             " state in donated positions",
+    "FL004": "tracer safety: no if/float()/.item()/np.* on traced values in"
+             " traced code",
+    "FL005": "recompile safety: no .tobytes() keys outside SlotStager, no"
+             " comprehension-shaped jnp constructors",
+}

@@ -35,6 +35,10 @@ JSON artifact so CI records the trajectory:
       --out BENCH_engines.json                                     # CI smoke
   PYTHONPATH=src python benchmarks/engine_bench.py --hotpath \\
       --out BENCH_hotpath.json      # §13 hot-path gate vs the PR 6 baseline
+  PYTHONPATH=src python benchmarks/engine_bench.py --waves \\
+      --out BENCH_waves.json        # §15 wave-scaling gate: same cohort on
+                                    # the same mesh at a 100x larger client
+                                    # universe must hold steady round time
 """
 import argparse
 import json
@@ -76,6 +80,7 @@ def _round_total(bucket: dict) -> float:
 
 def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  clients: int = 8, pack: int = 1,
+                 universe=None, n_devices=None, waves=None,
                  kd_impl: str = "fused", rounds: int = 3,
                  participation: str = "full",
                  clients_per_round=None, dropout_rate: float = 0.0,
@@ -85,6 +90,7 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
                  prefetch: bool = True, guards: bool = False) -> dict:
     cfg = FedConfig(algorithm=algorithm, engine=engine, kd_impl=kd_impl,
                     num_clients=clients, pack=pack, alpha=1.0, rounds=rounds,
+                    universe=universe, n_devices=n_devices, waves=waves,
                     local_epochs=1, teacher_warmup_epochs=1, batch_size=32,
                     num_clusters=3, participation=participation,
                     clients_per_round=clients_per_round,
@@ -113,14 +119,31 @@ def bench_engine(ds, engine: str, *, algorithm: str = "fedsikd",
         phases = {k: round(buckets[0].get(k, 0.0), 4) for k in PHASES} \
             if buckets else {}
 
+    # wave-staging overlap accounting (DESIGN.md §15): of all the host
+    # gather + device_put work the WaveStager did in steady-state rounds,
+    # what fraction was hidden behind compute (prefetch adopted) vs paid
+    # synchronously at stage() time
+    hid = sum(b.get("stage_hidden", 0.0) for b in buckets[1:])
+    wai = sum(b.get("stage_wait", 0.0) for b in buckets[1:])
+    overlap = round(hid / (hid + wai), 4) if (hid + wai) > 0 else None
+
     churn = ("-" if not cfg.lifecycle_enabled else
              "+".join([f"j{r}:{c}" for r, c in cfg.join_schedule or ()]
                       + ([f"re{recluster_every}"] if recluster_every else [])))
     asyn = (f"f{straggler_frac:.1f}/s{max_staleness}" if async_mode else "-")
+    layout = {}
+    if engine == "sharded":
+        from repro.launch.mesh import fed_wave_layout
+        cohort = clients_per_round or (universe or clients)
+        nd, ws, nw = fed_wave_layout(cohort, pack=pack,
+                                     n_devices=n_devices, waves=waves)
+        layout = {"n_devices": nd, "wave_slots": ws, "n_waves": nw}
     return {"engine": engine, "algorithm": algorithm,
             "kd_impl": kd_impl if algorithm in ("fedsikd", "random") else "-",
-            "clients": clients,
+            "clients": clients, "universe": universe,
+            **layout,
             "pack": pack if engine == "sharded" else None,
+            "overlap_efficiency": overlap,
             "participation": participation,
             "clients_per_round": clients_per_round,
             "dropout_rate": dropout_rate,
@@ -162,17 +185,83 @@ def main():
     ap.add_argument("--hotpath", action="store_true",
                     help="§13 hot-path gate: fedsikd + fedavg on the packed "
                          "mesh (C=8, pack=2), steady-state vs PR 6 baseline")
+    ap.add_argument("--waves", action="store_true",
+                    help="§15 wave-scaling gate: the SAME sampled cohort on "
+                         "the SAME fixed mesh at two client-universe sizes; "
+                         "steady round time must not grow with the universe")
+    ap.add_argument("--universes", type=int, nargs=2,
+                    default=(1000, 100000), metavar=("SMALL", "LARGE"),
+                    help="the two client-universe sizes --waves compares")
+    ap.add_argument("--base-clients", type=int, default=50,
+                    help="--waves: base shard pool size the universe aliases")
+    ap.add_argument("--cohort", type=int, default=32,
+                    help="--waves: sampled clients per round (stratified)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="--waves: mesh devices (pack=1 -> wave_slots)")
+    ap.add_argument("--assert-scaling", type=float, default=None,
+                    help="--waves: fail (exit 1) unless steady(large) <= "
+                         "this multiple of steady(small)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help="JSON artifact path ('' disables; default "
                          "BENCH_hotpath.json under --hotpath, "
+                         "BENCH_waves.json under --waves, "
                          "BENCH_engines.json otherwise)")
     args = ap.parse_args()
     if args.out is None:
-        args.out = "BENCH_hotpath.json" if args.hotpath else \
-            "BENCH_engines.json"
+        args.out = ("BENCH_hotpath.json" if args.hotpath else
+                    "BENCH_waves.json" if args.waves else
+                    "BENCH_engines.json")
 
     ds = load_dataset("mnist", small=True)
+    if args.waves:
+        # guards=True makes every steady round assert zero recompiles and
+        # zero implicit transfers — the "no recompiles past warm-in" half
+        # of the §15 acceptance runs INSIDE the benchmark
+        rounds = args.rounds or 5
+        small_u, large_u = args.universes
+        kw = dict(algorithm="fedsikd", clients=args.base_clients,
+                  participation="stratified", clients_per_round=args.cohort,
+                  n_devices=args.devices, rounds=rounds, guards=True)
+        rows = [bench_engine(ds, "sharded", universe=small_u, **kw),
+                bench_engine(ds, "sharded", universe=large_u, **kw)]
+        print_rows(rows)
+        s_small = rows[0]["steady_s_per_round"]
+        s_large = rows[1]["steady_s_per_round"]
+        ratio = round(s_large / s_small, 4)
+        print(f"wave scaling: universe {small_u} -> {large_u} "
+              f"({large_u / small_u:.0f}x), cohort {args.cohort} on "
+              f"{rows[0]['n_waves']} waves x {rows[0]['wave_slots']} slots: "
+              f"steady {s_small:.2f}s -> {s_large:.2f}s/round "
+              f"(ratio {ratio:.3f})")
+        for r in rows:
+            if r["overlap_efficiency"] is not None:
+                print(f"  universe {r['universe']}: overlap_efficiency="
+                      f"{r['overlap_efficiency']:.3f} (staging hidden "
+                      "behind compute)")
+        if args.out:
+            artifact = {
+                "benchmark": "wave_scaling",
+                "host": {"platform": platform.platform(),
+                         "python": platform.python_version()},
+                "config": {"dataset": "mnist-small",
+                           "base_clients": args.base_clients,
+                           "cohort": args.cohort, "devices": args.devices,
+                           "universes": [small_u, large_u],
+                           "rounds": rounds, "guards": True},
+                "steady_ratio_large_over_small": ratio,
+                "tolerance": args.assert_scaling,
+                "rows": rows,
+            }
+            with open(args.out, "w") as f:
+                json.dump(artifact, f, indent=2)
+            print(f"wrote {args.out} ({len(rows)} rows)")
+        if args.assert_scaling is not None and ratio > args.assert_scaling:
+            raise SystemExit(
+                f"wave scaling REGRESSION: steady ratio {ratio:.3f} > "
+                f"tolerance {args.assert_scaling} — round time grew with "
+                f"the universe at fixed cohort/mesh")
+        return
     if args.hotpath:
         # EXACTLY the PR 6 baseline config (see PR6_STEADY_BASELINE), run
         # under the runtime sanitizers (guards.py): steady-state rounds

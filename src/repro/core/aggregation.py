@@ -145,6 +145,30 @@ def staleness_weighted_average(params: Sequence, base_weights,
     return _fused_merge(params, base_weights, staleness, decay=decay)
 
 
+@jax.jit
+def _fold2(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: (x.astype(jnp.float32)
+                      + y.astype(jnp.float32)).astype(x.dtype), a, b)
+
+
+def fold_partials(parts: Sequence):
+    """Fold per-wave UNNORMALISED partial aggregates into the full-cohort
+    sum (DESIGN.md §15).  Each wave's on-mesh contraction computes
+    ``sum_{i in wave} row_i * x_i`` with rows sliced from the GLOBALLY
+    normalised aggregation row, so the cohort mean is the plain tree-sum of
+    the per-wave partials — no renormalisation, exact example-weighted
+    semantics.  A deterministic left-fold in float32 (cast back to each
+    leaf's dtype), and the single-wave case returns its partial UNTOUCHED:
+    one wave must stay bit-identical to the monolithic packed path."""
+    if not parts:
+        raise ValueError("fold_partials needs at least one partial")
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = _fold2(acc, p)
+    return acc
+
+
 def add_scaled(acc, params, scale: float):
     """``acc + scale * params`` over pytrees (float32 accumulation, cast
     back to each leaf's dtype) — how the packed engines fold host-buffered

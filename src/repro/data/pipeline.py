@@ -60,6 +60,59 @@ def make_client_shards(ds: Dataset, num_clients: int, alpha: float,
     return [ClientShard(i, ds.x_train[p], ds.y_train[p]) for i, p in enumerate(parts)]
 
 
+class ClientStore:
+    """Host-resident client universe over a base shard pool (DESIGN.md §15).
+
+    Cross-device FL universes (10^5-10^7 clients) dwarf any dataset we can
+    physically partition, so the store separates the CLIENT ID SPACE from
+    the DATA POOL: ``universe`` virtual clients map onto ``len(base)``
+    materialised shards via ``row_of[vid] = vid % n_base``.  Virtual
+    clients aliasing the same base row share the shard OBJECT — and with
+    it ``client_id``-seeded batch streams — so loop/sharded parity and
+    resume bit-identity hold over the virtual universe too.  Per-client
+    federated state (labels, speed profiles, sampled rosters) is keyed by
+    VIRTUAL id everywhere; only data access dereferences ``row_of``.
+
+    With ``universe=None`` this is the identity store: ``store[i]`` is
+    ``shards[i]`` and every array round-trips unchanged, which keeps the
+    non-universe configs byte-identical to the pre-store runtime.
+    """
+
+    def __init__(self, shards: list[ClientShard], *,
+                 universe: int | None = None):
+        if not shards:
+            raise ValueError("ClientStore needs at least one base shard")
+        self.base = list(shards)
+        self.universe = len(self.base) if universe is None else int(universe)
+        if self.universe < len(self.base):
+            raise ValueError(
+                f"universe={self.universe} smaller than the base shard "
+                f"pool ({len(self.base)})")
+        self.row_of = (np.arange(self.universe) % len(self.base)).astype(
+            np.int64)
+        self.base_sizes = np.asarray(
+            [sh.num_examples for sh in self.base], np.int64)
+
+    @property
+    def n_base(self) -> int:
+        return len(self.base)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """(universe,) per-virtual-client example counts."""
+        return self.base_sizes[self.row_of]
+
+    def __len__(self) -> int:
+        return self.universe
+
+    def __getitem__(self, vid: int) -> ClientShard:
+        return self.base[self.row_of[int(vid)]]
+
+    def __iter__(self) -> Iterator[ClientShard]:
+        for r in self.row_of:
+            yield self.base[r]
+
+
 def token_stream(vocab_size: int, batch: int, seq: int, *, seed: int = 0,
                  num_batches: int = 1) -> Iterator[dict[str, np.ndarray]]:
     """Synthetic LM batches (tokens + next-token labels) for LLM-scale runs."""

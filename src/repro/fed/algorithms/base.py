@@ -98,9 +98,10 @@ class Algorithm:
 
     # --------------------------------------------------- lifecycle helpers
     def initial_active(self, cfg) -> np.ndarray:
-        """(num_clients,) bool roster before round 1."""
+        """(total_clients,) bool roster before round 1 — spans the virtual
+        universe when ``cfg.universe`` is set (lifecycle excludes it)."""
         if self.lifecycle is None:
-            return np.ones(cfg.num_clients, bool)
+            return np.ones(cfg.total_clients, bool)
         return self.lifecycle.initial_active()
 
     def clamped_clients_per_round(self, cfg, labels) -> Optional[int]:
@@ -111,10 +112,14 @@ class Algorithm:
         return min(cfg.clients_per_round, int((np.asarray(labels) >= 0).sum()))
 
     def forced_devices(self, cfg) -> Optional[int]:
-        """Mesh size pinned to the client UNIVERSE when a lifecycle is on:
-        the packed mesh (and every rebuilt scheduler's slot layout) must
-        host the largest roster any join can produce, so re-clustering
-        never changes the compiled programs' slot count."""
+        """Mesh size pinned independently of the current roster.
+
+        ``cfg.n_devices`` (the wave-scheduling knob, DESIGN.md §15) wins
+        when set.  Otherwise a lifecycle pins the mesh to the largest
+        roster any join can produce, so re-clustering never changes the
+        compiled programs' slot count."""
+        if cfg.n_devices is not None:
+            return cfg.n_devices
         if self.lifecycle is None:
             return None
         from repro.launch.mesh import fed_mesh_layout

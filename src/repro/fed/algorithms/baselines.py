@@ -28,6 +28,7 @@ import numpy as np
 
 from repro import perf
 from repro.core import aggregation as agg
+from repro.data.pipeline import ClientStore
 from repro.fed import schedule
 from repro.fed.algorithms.base import (Algorithm, local_epochs,
                                        merge_arrivals_only, packed_async_row,
@@ -44,7 +45,10 @@ class _BaselineBase(Algorithm):
     CNN as the federated model, example-weighted FedAvg aggregation."""
 
     def setup(self, ds, shards, cfg, key):
+        if not isinstance(shards, ClientStore):
+            shards = ClientStore(shards, universe=cfg.universe)
         self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
+        self.store = shards
         self.name = cfg.algorithm
         self.is_prox = cfg.algorithm == "fedprox"
         self.roster_labels = self._roster_labels(self.initial_active(cfg))
@@ -54,7 +58,7 @@ class _BaselineBase(Algorithm):
         self.t_fwd = t_fwd
         self.steps = make_steps(t_fwd, self.opt, prox_mu=cfg.prox_mu)
         self.global_params = t_init(key)
-        self.sizes = np.asarray([sh.num_examples for sh in shards])
+        self.sizes = np.asarray(shards.sizes)
         self._setup_engine()
 
     def _roster_labels(self, active) -> np.ndarray:
@@ -150,7 +154,14 @@ class PackedBaseline(_BaselineBase):
     all-clients example-weighted grouped mean broadcasts the new global
     model to every slot.  The global params enter the program replicated
     (P() spec) so FedProx's proximal term reads the ROUND-START anchor on
-    every slot, exactly like the loop engine's ``extra=(global_params,)``."""
+    every slot, exactly like the loop engine's ``extra=(global_params,)``.
+
+    Wave scheduling (DESIGN.md §15): when the cohort exceeds one mesh-load
+    (``cfg.waves`` / ``cfg.n_devices``), the round streams through the SAME
+    compiled program wave by wave; every wave broadcasts the round-start
+    global params, its contraction row is a slice of the globally-normalised
+    example row, and ``aggregation.fold_partials`` sums the per-wave partial
+    aggregates into the exact cohort mean."""
 
     engine = "sharded"
 
@@ -159,6 +170,7 @@ class PackedBaseline(_BaselineBase):
             labels, participation=cfg.participation,
             clients_per_round=self.clamped_clients_per_round(cfg, labels),
             pack=cfg.pack, n_devices=self.forced_devices(cfg),
+            waves=cfg.waves,
             dropout_rate=cfg.dropout_rate, seed=cfg.seed,
             async_mode=cfg.async_mode, round_deadline=cfg.round_deadline,
             straggler_frac=cfg.straggler_frac,
@@ -169,22 +181,30 @@ class PackedBaseline(_BaselineBase):
         from repro.launch.mesh import make_fed_client_mesh
         cfg = self.cfg
         self.sh = sh
-        self.mesh = make_fed_client_mesh(self.scheduler.max_participants,
+        store = self.store
+        # the mesh holds ONE WAVE of the plan (DESIGN.md §15); multi-wave
+        # rounds stream the cohort through it in wave_slots-sized chunks
+        self.mesh = make_fed_client_mesh(self.scheduler.wave_slots,
                                          pack=cfg.pack,
                                          n_devices=self.scheduler.n_devices)
-        self.S = self.scheduler.n_slots
-        # static per-client step budgets + one-off (C, steps, B, ...) staging
+        self.S = self.scheduler.wave_slots
+        # static per-client step budgets + one-off (R, steps, B, ...) staging
+        # over the BASE shard pool — virtual clients alias base rows through
+        # ``ClientStore.row_of``, so host memory is O(base), not O(universe)
         # (identical batch sequences to the loop engine's ClientShard.batches)
-        self.steps_all = sh.client_step_counts(self.shards, cfg.batch_size,
-                                               cfg.local_epochs)
+        self._base_counts = sh.client_step_counts(store.base, cfg.batch_size,
+                                                  cfg.local_epochs)
+        self.steps_all = self._base_counts[store.row_of]
         self.x_all, self.y_all = sh.stack_client_data(
-            self.shards, int(self.steps_all.max()), cfg.batch_size,
+            store.base, int(self._base_counts.max()), cfg.batch_size,
             seed=cfg.seed)
         self.round_fn = sh.make_packed_baseline_round(
             self.mesh, cfg.pack, self.t_fwd, self.opt,
             prox_mu=cfg.prox_mu if self.is_prox else 0.0,
             donate=cfg.donate)
-        self.stager = sh.SlotStager(self.mesh, self.x_all, self.y_all)
+        self.stager = sh.WaveStager(self.mesh, self.x_all, self.y_all,
+                                    row_maps=(store.row_of, store.row_of),
+                                    capacity=self.scheduler.n_waves + 1)
         # pre-round broadcast + fresh opt init as ONE jitted program whose
         # outputs carry the packed slot sharding — that is what makes the
         # round program's donation of (p_s, s_s) usable (DESIGN.md §13)
@@ -204,10 +224,11 @@ class PackedBaseline(_BaselineBase):
             lambda t: jax.tree_util.tree_map(lambda a: a[0], t))
 
     def prefetch(self, plan):
-        """Overlap the NEXT round's slot staging with this round's compute
-        (see ShardedClusteredKD.prefetch)."""
+        """Overlap the NEXT round's FIRST wave staging with this round's
+        compute (see ShardedClusteredKD.prefetch); later waves prefetch
+        inside ``run_round``'s wave loop."""
         if plan is not None and plan.active.any():
-            self.stager.prefetch(plan)
+            self.stager.prefetch(plan.wave(0))
 
     def _slot_keys(self, rnd, plan):
         """Per-slot training keys (sh.slot_client_keys, stable under slot
@@ -238,6 +259,10 @@ class PackedBaseline(_BaselineBase):
                     arrivals, cfg.staleness_decay)
             return {"train_loss": 0.0}
         has_async = bool(arrivals) or bool(plan.stragglers.any())
+        # the aggregation row is ALWAYS built over the FULL (L,) plan —
+        # ``example_row``/``packed_async_row`` renormalise over their own
+        # arrays, so per-wave slices of the global row are the partial-sum
+        # weights that make ``fold_partials`` exact (DESIGN.md §15)
         if not has_async:
             row, scales = plan.example_row(self.sizes), []
         elif plan.on_time.any() or arrivals:
@@ -249,30 +274,50 @@ class PackedBaseline(_BaselineBase):
             row, scales = packed_async_row(n_slot, plan.on_time, arrivals,
                                            cfg.staleness_decay)
         else:
-            row, scales = np.zeros(self.S, np.float32), []
-        with perf.span("stage"):
-            xs, ys = self.stager.stage(plan)
-            p_s, s_s = self._prep(self.global_params)
-        with perf.span("compute"):
-            # device_put: explicit transfers, legal under the guards
-            p_s, p_local, _s_s, loss = self.round_fn(
-                p_s, s_s, xs, ys,
-                jax.device_put(plan.steps_for(self.steps_all)),
-                self._slot_keys(rnd, plan),
-                jax.device_put(row), self.global_params)
-            loss = float(loss)   # block for honest timing attribution
-        with perf.span("aggregate"):
-            # every slot holds the aggregated model after the weighted mean
-            p0 = self._take0(p_s)
+            row, scales = np.zeros(plan.n_slots, np.float32), []
+        ws = plan.wave_slots or plan.n_slots
+        n_waves = plan.n_waves
+        partials, losses = [], []
+        for w in range(n_waves):
+            wp = plan.wave(w)
+            if not wp.active.any():
+                continue
+            with perf.span("stage"):
+                xs, ys = self.stager.stage(wp)
+                p_s, s_s = self._prep(self.global_params)
+            with perf.span("compute"):
+                # device_put: explicit transfers, legal under the guards
+                n_w = wp.steps_for(self.steps_all)
+                p_s, p_local, _s_s, loss = self.round_fn(
+                    p_s, s_s, xs, ys, jax.device_put(n_w),
+                    self._slot_keys(rnd, wp),
+                    jax.device_put(np.ascontiguousarray(
+                        row[w * ws:(w + 1) * ws])),
+                    self.global_params)
+                if w + 1 < n_waves:
+                    self.stager.prefetch(plan.wave(w + 1))
+                loss = float(loss)   # block for honest timing attribution
+                losses.append((loss, int((n_w > 0).sum())))
+            with perf.span("aggregate"):
+                # every slot holds the wave's partial aggregate after the
+                # (globally-weighted) contraction
+                partials.append(self._take0(p_s))
+            if has_async:
+                for t in np.flatnonzero(wp.stragglers):
+                    self.buffer.push(AsyncUpdate(
+                        client=int(wp.slot_client[t]), birth=rnd,
+                        arrival=rnd + int(wp.delays[t]),
+                        weight=float(self.sizes[int(wp.slot_client[t])]),
+                        params=sh.take_rows(p_local, jax.device_put(int(t)))))
+        if len(losses) == 1:
+            loss = losses[0][0]
+        else:
+            tot = sum(c for _, c in losses)
+            loss = float(sum(lo * c for lo, c in losses) / tot) if tot else 0.0
+        p0 = partials[0] if len(partials) == 1 else agg.fold_partials(partials)
         if not has_async:
             self.global_params = p0
             return {"train_loss": loss}
-        for t in np.flatnonzero(plan.stragglers):
-            self.buffer.push(AsyncUpdate(
-                client=int(plan.slot_client[t]), birth=rnd,
-                arrival=rnd + int(plan.delays[t]),
-                weight=float(self.sizes[int(plan.slot_client[t])]),
-                params=sh.take_rows(p_local, jax.device_put(int(t)))))
         if plan.on_time.any():
             acc = p0
             for u, sc in zip(arrivals, scales):

@@ -88,17 +88,46 @@ def cluster_by_stats(shards, cfg) -> np.ndarray:
     return np.asarray(res.assignments)
 
 
+def _fold_losses(per_wave):
+    """Combine per-wave ``(t_loss, t_cnt, s_loss, s_cnt)`` active-slot
+    means into cohort means, weighted by each wave's active-slot counts.
+    A single contributing wave passes its loss through UNTOUCHED — the
+    single-wave path must stay bit-identical to the monolithic round."""
+    def one(vals):
+        vals = [(lo, int(c)) for lo, c in vals if c > 0]
+        if not vals:
+            return 0.0
+        if len(vals) == 1:
+            return vals[0][0]
+        tot = float(sum(c for _, c in vals))
+        return float(sum(lo * c for lo, c in vals) / tot)
+
+    return (one([(tl, tc) for tl, tc, _, _ in per_wave]),
+            one([(sl, sc) for _, _, sl, sc in per_wave]))
+
+
 class _ClusteredKDBase(Algorithm):
     """Shared setup: clustering, leaders, scheduler, models/optimizers."""
 
     def setup(self, ds, shards, cfg, key):
+        from repro.data.pipeline import ClientStore
+        if not isinstance(shards, ClientStore):
+            shards = ClientStore(shards, universe=cfg.universe)
         self.ds, self.shards, self.cfg, self.key = ds, shards, cfg, key
+        self.store = shards
         self.name = cfg.algorithm
         self._stats_key = jax.random.PRNGKey(cfg.seed + 17)
         active0 = self.initial_active(cfg)
         roster = np.flatnonzero(active0)
         if cfg.algorithm == "fedsikd":
-            raw = stat_features(shards, cfg, roster)
+            # with a virtual universe, statistics sharing + clustering run
+            # over the materialised BASE pool (the only distinct data
+            # distributions that exist) and labels broadcast to the virtual
+            # clients through the store's aliasing map — a 100k universe
+            # must not build a 100k-row feature matrix at setup
+            stat_roster = (roster if cfg.universe is None
+                           else np.arange(shards.n_base))
+            raw = stat_features(shards, cfg, stat_roster)
             # ONE standardization space (initial-roster statistics) for the
             # whole run: warm-started centroids and teacher-migration
             # distances stay comparable across re-clustering events
@@ -117,17 +146,19 @@ class _ClusteredKDBase(Algorithm):
             self.centroids = np.asarray(res.centroids)[occ]
             self._base_labels = None
             lab = np.searchsorted(occ, lab)
+            if cfg.universe is not None:
+                lab = lab[shards.row_of[roster]]
         else:                          # random-cluster ablation baseline
             rng = np.random.default_rng(cfg.seed + 3)
             k = cfg.num_clusters or 4
-            base = rng.integers(0, k, cfg.num_clients)
+            base = rng.integers(0, k, cfg.total_clients)
             occ = np.unique(base)      # teachers for universe-occupied values
             base = np.searchsorted(occ, base)
             self.K0 = len(occ)
             self.centroids = None
             self._base_labels = base
             lab = base[roster]
-        labels_full = np.full(cfg.num_clients, -1, np.int64)
+        labels_full = np.full(cfg.total_clients, -1, np.int64)
         labels_full[roster] = lab
         self._rebuild_structures(labels_full)
         self.opt = adamw(cfg.lr)
@@ -151,13 +182,15 @@ class _ClusteredKDBase(Algorithm):
         self.cluster_ids = occ.astype(np.int64)
         self.clusters = [np.flatnonzero(self.labels == c) for c in occ]
         # leader (teacher host) = most-data client in cluster (DESIGN.md §7)
-        self.leaders = [int(c[np.argmax([self.shards[i].num_examples
-                                         for i in c])])
-                        for c in self.clusters]
+        # — argmax over the store's vectorised size table, not a per-member
+        # shard dereference loop (O(universe) at 100k clients)
+        sizes = self.store.sizes
+        self.leaders = [int(c[np.argmax(sizes[c])]) for c in self.clusters]
         self.scheduler = schedule.RoundScheduler(
             self.labels, participation=cfg.participation,
             clients_per_round=self.clamped_clients_per_round(cfg, self.labels),
             pack=cfg.pack, n_devices=self.forced_devices(cfg),
+            waves=cfg.waves,
             weighting=cfg.cluster_weighting, dropout_rate=cfg.dropout_rate,
             seed=cfg.seed, async_mode=cfg.async_mode,
             round_deadline=cfg.round_deadline,
@@ -356,13 +389,19 @@ class ShardedClusteredKD(_ClusteredKDBase):
     def _setup_engine(self):
         from repro.fed import sharded as sh
         from repro.launch.mesh import make_fed_client_mesh
-        cfg, key, shards = self.cfg, self.key, self.shards
+        cfg, key = self.cfg, self.key
         self.sh = sh
         scheduler = self.scheduler
-        self.mesh = make_fed_client_mesh(scheduler.max_participants,
+        if scheduler.n_waves > 1 and cfg.teacher_data == "cluster":
+            raise ValueError(
+                "teacher_data='cluster' needs the whole cluster on the mesh "
+                "at once; wave-scheduled rounds require "
+                "teacher_data='leader'")
+        # the mesh hosts ONE wave; the cohort streams through it
+        self.mesh = make_fed_client_mesh(scheduler.wave_slots,
                                          pack=cfg.pack,
                                          n_devices=scheduler.n_devices)
-        self.S = scheduler.n_slots
+        self.S = scheduler.wave_slots
         self.K = self.K0
 
         t_init, t_fwd = self.t_model
@@ -379,11 +418,16 @@ class ShardedClusteredKD(_ClusteredKDBase):
             kd_alpha=cfg.kd_alpha)
 
         # static per-client step budgets (mirror the loop engine's batch
-        # counts) and the one-off (C, steps, B, ...) staging of batches
-        self.s_steps_all = sh.client_step_counts(shards, cfg.batch_size,
-                                                 cfg.local_epochs)
+        # counts) and the one-off (R, steps, B, ...) staging of the BASE
+        # data pool — virtual clients stage through the store's row map at
+        # gather time, so host memory scales with the pool, never the
+        # universe (DESIGN.md §15)
+        store = self.store
+        self._base_counts = sh.client_step_counts(store.base, cfg.batch_size,
+                                                  cfg.local_epochs)
+        self.s_steps_all = self._base_counts[store.row_of]
         self.sx_all, self.sy_all = sh.stack_client_data(
-            shards, int(self.s_steps_all.max()), cfg.batch_size,
+            store.base, int(self._base_counts.max()), cfg.batch_size,
             seed=cfg.seed)
         # teacher-feed staging width: with a lifecycle on, pad to the
         # universe-max step budget so a leader change never changes the
@@ -459,7 +503,8 @@ class ShardedClusteredKD(_ClusteredKDBase):
         client's own shard, and in "leader" mode a re-clustering that keeps
         every client's leader (the common drift case) changes nothing —
         re-staging is O(total dataset) host work + a full device transfer."""
-        cfg, sh, shards = self.cfg, self.sh, self.shards
+        cfg, sh, store = self.cfg, self.sh, self.store
+        total = len(store)
         # per-client teacher feed (DESIGN.md §7): "leader" streams the
         # cluster leader's shard to every slot (identical batches ->
         # replicas stay in sync between collectives); "cluster" streams each
@@ -468,23 +513,27 @@ class ShardedClusteredKD(_ClusteredKDBase):
         # (their rows are only ever staged on idle slots, which never train).
         if cfg.teacher_data == "leader":
             cidx = self.scheduler.cluster_idx
-            feed_of = np.asarray([self.leaders[cidx[i]] if cidx[i] >= 0
-                                  else i for i in range(len(shards))])
+            leaders = np.asarray(self.leaders, np.int64)
+            feed_of = np.where(cidx >= 0, leaders[np.maximum(cidx, 0)],
+                               np.arange(total))
         else:
-            feed_of = np.arange(len(shards))
+            feed_of = np.arange(total)
         if getattr(self, "_feed_of", None) is not None \
                 and np.array_equal(feed_of, self._feed_of):
             return
         self._feed_of = feed_of
-        t_src = [shards[i] for i in feed_of]
-        self.t_src = t_src
-        self.t_steps_all = sh.client_step_counts(t_src, cfg.batch_size,
-                                                 cfg.local_epochs)
+        # the teacher stack holds the BASE pool rows once; each slot maps to
+        # its feed's base row at gather time (the old per-client t_src stack
+        # duplicated every leader's data C times over)
+        self._t_map = store.row_of[feed_of]
+        self.t_steps_all = self._base_counts[self._t_map]
         cap = self._t_cap or int(self.t_steps_all.max())
         self.tx_all, self.ty_all = sh.stack_client_data(
-            t_src, cap, cfg.batch_size, seed=cfg.seed)
-        self.stager = sh.SlotStager(self.mesh, self.tx_all, self.ty_all,
-                                    self.sx_all, self.sy_all)
+            store.base, cap, cfg.batch_size, seed=cfg.seed)
+        self.stager = sh.WaveStager(
+            self.mesh, self.tx_all, self.ty_all, self.sx_all, self.sy_all,
+            row_maps=(self._t_map, self._t_map, store.row_of, store.row_of),
+            capacity=self.scheduler.n_waves + 1)
 
     def _post_lifecycle(self):
         self._restage_teacher_feed()
@@ -549,25 +598,40 @@ class ShardedClusteredKD(_ClusteredKDBase):
         w_steps_all = ((self.t_steps_all // max(cfg.local_epochs, 1))
                        * cfg.teacher_warmup_epochs).astype(np.int32)
         wx_all, wy_all = sh.stack_client_data(
-            self.t_src, int(w_steps_all.max()), cfg.batch_size, seed=cfg.seed)
+            self.store.base, int(w_steps_all.max()), cfg.batch_size,
+            seed=cfg.seed)
         planw = self.scheduler.warmup_plan()
         warm = sh.make_packed_teacher_phase(self.mesh, cfg.pack,
                                             self.t_model[1], self.opt,
                                             donate=cfg.donate)
-        # prep's slot-sharded gather (sp/ss ride along unused) keeps the
-        # warm program's donation usable, exactly as in run_round
-        tp_s, ts_s, _sp, _ss = self._prep(
-            self.tp_k, self.ts_k, self.sp_global,
-            jnp.asarray(self._teacher_row(planw)))
-        wx, wy = sh.stage_on_slots(self.mesh, planw, wx_all, wy_all)
-        tp_s, ts_s, wloss = warm(
-            tp_s, ts_s, wx, wy, jnp.asarray(planw.steps_for(w_steps_all)),
-            self._teacher_keys(9001, planw), jnp.asarray(planw.sync_matrix()))
-        refreshed, safe = self._scatter_src(planw)
-        self.tp_k, self.ts_k = self._finish_warm(
-            tp_s, ts_s, self.tp_k, self.ts_k, refreshed, safe)
+        # Wave execution (DESIGN.md §15): every wave preps from the SAME
+        # round-start snapshot; in leader mode each wave's refresh of a
+        # cluster is bitwise-reproducible from that snapshot, so repeated
+        # scatters agree and the last wave's write stands.
+        tp0, ts0 = self.tp_k, self.ts_k
+        tp_acc, ts_acc = self.tp_k, self.ts_k
+        wloss = 0.0
+        for w in range(planw.n_waves):
+            wp = planw.wave(w)
+            if not wp.active.any():
+                continue
+            # prep's slot-sharded gather (sp/ss ride along unused) keeps the
+            # warm program's donation usable, exactly as in run_round
+            tp_s, ts_s, _sp, _ss = self._prep(
+                tp0, ts0, self.sp_global,
+                jnp.asarray(self._teacher_row(wp)))
+            wx, wy = sh.stage_on_slots(self.mesh, wp, wx_all, wy_all,
+                                       row_maps=(self._t_map, self._t_map))
+            tp_s, ts_s, wl = warm(
+                tp_s, ts_s, wx, wy, jnp.asarray(wp.steps_for(w_steps_all)),
+                self._teacher_keys(9001, wp), jnp.asarray(wp.sync_matrix()))
+            refreshed, safe = self._scatter_src(wp)
+            tp_acc, ts_acc = self._finish_warm(
+                tp_s, ts_s, tp_acc, ts_acc, refreshed, safe)
+            wloss = float(wl)
+        self.tp_k, self.ts_k = tp_acc, ts_acc
         if self.progress:
-            print(f"  warmup  teacher_loss={float(wloss):.4f}")
+            print(f"  warmup  teacher_loss={wloss:.4f}")
 
     def prefetch(self, plan):
         """Overlap the NEXT round's slot staging with the current round's
@@ -575,7 +639,7 @@ class ShardedClusteredKD(_ClusteredKDBase):
         peeking ahead is side-effect free; a lifecycle rebuild in between
         just invalidates the prefetch key and stage() falls back)."""
         if plan is not None and plan.active.any():
-            self.stager.prefetch(plan)
+            self.stager.prefetch(plan.wave(0))
 
     def warm_async_merge(self):
         # zero-scale fold + N=1 stacked merge on the live student tree:
@@ -587,7 +651,7 @@ class ShardedClusteredKD(_ClusteredKDBase):
                                        decay=self.cfg.staleness_decay)
 
     def run_round(self, plan, rnd):
-        cfg, sh, S = self.cfg, self.sh, self.S
+        cfg, sh = self.cfg, self.sh
         arrivals = self.arrivals
         if not plan.active.any():
             # every invited client dropped out: canonical state untouched —
@@ -597,6 +661,10 @@ class ShardedClusteredKD(_ClusteredKDBase):
                                                      cfg.staleness_decay)
             return {"teacher_loss": 0.0, "student_loss": 0.0}
         has_async = bool(arrivals) or bool(plan.stragglers.any())
+        # the (L,) aggregation row is computed over the FULL plan (weights
+        # and staleness renormalise globally) and SLICED per wave: each
+        # wave's on-mesh contraction then yields an unnormalised partial
+        # sum, and the partials fold exactly (agg.fold_partials)
         if not has_async:
             row, scales = plan.agg_row(), []
         elif plan.on_time.any() or arrivals:
@@ -608,41 +676,75 @@ class ShardedClusteredKD(_ClusteredKDBase):
             # every active slot straggled and nothing arrived: zero row —
             # the program still trains the stragglers (buffered below), but
             # its aggregate is discarded and the global student holds
-            row, scales = np.zeros(S, np.float32), []
-        with perf.span("stage"):
-            tx, ty, sx, sy = self.stager.stage(plan)
-            tp_s, ts_s, sp_s, ss_s = self._prep(
-                self.tp_k, self.ts_k, self.sp_global,
-                jax.device_put(self._teacher_row(plan)))
-        with perf.span("compute"):
-            # disjoint even/odd salts keep teacher and student PRNG streams
-            # from colliding on clients whose id equals their cluster index
-            # (device_put: explicit transfers, legal under the guards)
-            tp_s, ts_s, sp_s, sp_local, _ss_s, t_loss, s_loss = self.round_fn(
-                tp_s, ts_s, sp_s, ss_s, tx, ty,
-                jax.device_put(plan.steps_for(self.t_steps_all)), sx, sy,
-                jax.device_put(plan.steps_for(self.s_steps_all)),
-                self._teacher_keys(2 * rnd, plan),
-                self._student_keys(2 * rnd + 1, plan),
-                jax.device_put(plan.sync_matrix()), jax.device_put(row))
-            # block on the scalars so timing attribution stays honest
-            t_loss, s_loss = float(t_loss), float(s_loss)
-        with perf.span("aggregate"):
-            refreshed, safe = self._scatter_src(plan)
-            self.tp_k, self.ts_k, sp0 = self._finish(
-                tp_s, ts_s, sp_s, self.tp_k, self.ts_k, refreshed, safe)
+            row, scales = np.zeros(plan.n_slots, np.float32), []
+        # Wave loop (DESIGN.md §15): every wave preps from the round-start
+        # snapshots, streams through the ONE compiled program, and folds
+        # into host-side accumulators.  Teachers: leader-mode waves refresh
+        # a cluster bitwise-reproducibly from the snapshot, so repeated
+        # scatters agree.  Student: per-wave partial sums, folded below.
+        tp0, ts0, sp_start = self.tp_k, self.ts_k, self.sp_global
+        tp_acc, ts_acc = self.tp_k, self.ts_k
+        partials, losses = [], []
+        ws = plan.wave_slots or plan.n_slots
+        n_waves = plan.n_waves
+        for w in range(n_waves):
+            wp = plan.wave(w)
+            if not wp.active.any():
+                continue
+            with perf.span("stage"):
+                tx, ty, sx, sy = self.stager.stage(wp)
+                tp_s, ts_s, sp_s, ss_s = self._prep(
+                    tp0, ts0, sp_start,
+                    jax.device_put(self._teacher_row(wp)))
+            with perf.span("compute"):
+                # disjoint even/odd salts keep teacher and student PRNG
+                # streams from colliding on clients whose id equals their
+                # cluster index (device_put: explicit transfers, legal
+                # under the guards); keys fold client/cluster ids, so a
+                # client's stream is invariant to its wave placement
+                t_n = wp.steps_for(self.t_steps_all)
+                s_n = wp.steps_for(self.s_steps_all)
+                (tp_s, ts_s, sp_s, sp_local, _ss_s, t_loss,
+                 s_loss) = self.round_fn(
+                    tp_s, ts_s, sp_s, ss_s, tx, ty,
+                    jax.device_put(t_n), sx, sy,
+                    jax.device_put(s_n),
+                    self._teacher_keys(2 * rnd, wp),
+                    self._student_keys(2 * rnd + 1, wp),
+                    jax.device_put(wp.sync_matrix()),
+                    jax.device_put(np.ascontiguousarray(
+                        row[w * ws:(w + 1) * ws])))
+                if w + 1 < n_waves:
+                    # double-buffer: wave w+1's host gather + device_put
+                    # run behind wave w's (async-dispatched) compute
+                    self.stager.prefetch(plan.wave(w + 1))
+                # block on the scalars so timing attribution stays honest
+                losses.append((float(t_loss), (t_n > 0).sum(),
+                               float(s_loss), (s_n > 0).sum()))
+            with perf.span("aggregate"):
+                refreshed, safe = self._scatter_src(wp)
+                tp_acc, ts_acc, sp0_w = self._finish(
+                    tp_s, ts_s, sp_s, tp_acc, ts_acc, refreshed, safe)
+                partials.append(sp0_w)
+            if has_async:
+                # straggler lanes: pre-aggregation students into the
+                # buffer, each with its birth-round plan weight
+                for t in np.flatnonzero(wp.stragglers):
+                    self.buffer.push(AsyncUpdate(
+                        client=int(wp.slot_client[t]), birth=rnd,
+                        arrival=rnd + int(wp.delays[t]),
+                        weight=float(wp.slot_weight[t]),
+                        params=sh.take_rows(sp_local,
+                                            jax.device_put(int(t)))))
+        self.tp_k, self.ts_k = tp_acc, ts_acc
+        t_loss, s_loss = _fold_losses(losses)
+        # one wave: its aggregate IS the cohort mean, untouched (bit-
+        # identical to the monolithic path); else fold the partial sums
+        sp0 = partials[0] if len(partials) == 1 else agg.fold_partials(
+            partials)
         if not has_async:
-            # every slot held the aggregated student; sp0 is slot 0's copy
             self.sp_global = sp0
             return {"teacher_loss": t_loss, "student_loss": s_loss}
-        # straggler lanes: pre-aggregation students into the buffer, each
-        # with its birth-round plan weight
-        for t in np.flatnonzero(plan.stragglers):
-            self.buffer.push(AsyncUpdate(
-                client=int(plan.slot_client[t]), birth=rnd,
-                arrival=rnd + int(plan.delays[t]),
-                weight=float(plan.slot_weight[t]),
-                params=sh.take_rows(sp_local, jax.device_put(int(t)))))
         if plan.on_time.any():
             acc = sp0
             for u, sc in zip(arrivals, scales):

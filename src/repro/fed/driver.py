@@ -51,7 +51,7 @@ from typing import Any
 import jax
 
 from repro import guards, perf
-from repro.data.pipeline import make_client_shards
+from repro.data.pipeline import ClientStore, make_client_shards
 from repro.fed import fedstate
 from repro.fed.lifecycle import ClientLifecycle
 
@@ -65,7 +65,10 @@ _NON_METRIC_KEYS = frozenset({"acc", "loss", "round", "participants",
 # ``k_range`` and the lifecycle knobs — a v1 checkpoint resuming under code
 # that would silently run a different slot layout must refuse instead.
 # v3 added the semi-async knobs (and the buffer riding the checkpoint).
-FINGERPRINT_VERSION = 3
+# v4 added the wave-scheduling knobs (``universe``/``n_devices``/``waves``,
+# DESIGN.md §15): the universe changes the client population, the mesh knobs
+# change the per-wave collective numerics.
+FINGERPRINT_VERSION = 4
 
 # FedConfig fields that are deliberately NOT part of the resume identity:
 # execution knobs whose change leaves the numerical run unchanged.  Every
@@ -177,10 +180,13 @@ def fingerprint(cfg, labels=None) -> dict:
           "participation": cfg.participation,
           "clients_per_round": cfg.clients_per_round,
           "dropout_rate": cfg.dropout_rate,
-          # pack changes the packed-mesh slot layout (and with it the
-          # collective numerics): a pack=4 checkpoint silently resuming
-          # under pack=1 is a different run
-          "pack": cfg.pack,
+          # pack/n_devices/waves change the packed-mesh wave layout (and
+          # with it the collective numerics): a pack=4 checkpoint silently
+          # resuming under pack=1 is a different run, and so is a 4-wave
+          # checkpoint resuming single-wave.  ``universe`` changes the
+          # virtual client population itself.
+          "pack": cfg.pack, "universe": cfg.universe,
+          "n_devices": cfg.n_devices, "waves": cfg.waves,
           "join_schedule": cfg.join_schedule, "leave_rate": cfg.leave_rate,
           "recluster_every": cfg.recluster_every,
           "local_epochs": cfg.local_epochs, "batch_size": cfg.batch_size,
@@ -218,8 +224,14 @@ class RoundDriver:
     def run(self) -> dict:
         ds, cfg, alg = self.ds, self.cfg, self.alg
         alg.progress = self.progress
-        shards = make_client_shards(ds, cfg.num_clients, cfg.alpha,
-                                    seed=cfg.seed)
+        # the BASE shard pool is O(num_clients); a virtual universe
+        # (cfg.universe, DESIGN.md §15) aliases it host-side — the store is
+        # rebuilt deterministically from (seed, num_clients, universe), so
+        # it never rides a checkpoint
+        shards = ClientStore(
+            make_client_shards(ds, cfg.num_clients, cfg.alpha,
+                               seed=cfg.seed),
+            universe=cfg.universe)
         lc = ClientLifecycle.from_config(cfg)
         alg.lifecycle = lc
         alg.setup(ds, shards, cfg, jax.random.PRNGKey(cfg.seed))

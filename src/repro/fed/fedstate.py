@@ -32,6 +32,15 @@ a pure function of (state after round r, round index, seed) — plans, batch
 order, and PRNG keys are all derived from ``(seed, round)`` — and float32
 arrays round-trip npz losslessly, so "run N rounds" and "run r rounds, die,
 resume, run the rest" produce bit-identical histories on both engines.
+
+Wave/universe note (DESIGN.md §15): the host-resident ``ClientStore`` never
+rides a checkpoint — it is rebuilt deterministically from ``(seed,
+num_clients, universe)`` at setup, exactly like the base shards.  What DOES
+change under a virtual universe is the fingerprint (v4 adds ``universe``/
+``n_devices``/``waves``) and the labels payload: cluster labels span the
+VIRTUAL universe, so a checkpoint written at one universe size refuses to
+resume at another.  Multi-wave rounds checkpoint the same canonical arrays
+as single-wave ones — per-wave partials never cross a round boundary.
 """
 from __future__ import annotations
 

@@ -64,6 +64,20 @@ class FedConfig:
     # Client lanes per device in the sharded engine: C = devices x pack
     # clients run in one jitted program (ignored by the loop engine).
     pack: int = 1
+    # Wave-scheduled universe scaling (DESIGN.md §15, sharded engine only).
+    #   universe  — total VIRTUAL client population; ``num_clients`` stays
+    #               the materialised base data pool and virtual client v
+    #               aliases base shard v % num_clients
+    #               (data.pipeline.ClientStore).  None = no virtualisation
+    #               (universe == num_clients, byte-identical legacy runs).
+    #   n_devices — pin the mesh size; the cohort streams through
+    #               n_devices * pack slots in fixed-shape waves instead of
+    #               sizing the mesh for the whole cohort.
+    #   waves     — pin the wave count (None = auto: 1 when the cohort
+    #               fits the mesh, else the minimum that hosts it).
+    universe: Optional[int] = None
+    n_devices: Optional[int] = None
+    waves: Optional[int] = None
     # Client lifecycle (fed/lifecycle.py, DESIGN.md §11).  ``num_clients``
     # stays the FULL client universe; lifecycle knobs control who is online:
     #   join_schedule   — ((round, count), ...): count clients come online at
@@ -186,20 +200,56 @@ class FedConfig:
             raise ValueError(
                 f"participation must be one of {schedule.PARTICIPATION_MODES},"
                 f" got {self.participation!r}")
+        if self.universe is not None:
+            if self.engine != "sharded":
+                raise ValueError(
+                    "universe virtualisation needs engine='sharded' (the "
+                    "loop engine iterates every client per round, so round "
+                    "time would scale with the universe)")
+            if self.universe < self.num_clients:
+                raise ValueError(
+                    f"universe={self.universe} must be >= num_clients="
+                    f"{self.num_clients} (the materialised base pool)")
+        for knob, val in (("n_devices", self.n_devices),
+                          ("waves", self.waves)):
+            if val is not None:
+                if self.engine != "sharded":
+                    raise ValueError(
+                        f"{knob} is a packed-mesh layout knob; it needs "
+                        "engine='sharded'")
+                if val < 1:
+                    raise ValueError(f"{knob} must be >= 1, got {val}")
         if self.participation == "full":
-            if self.clients_per_round not in (None, self.num_clients):
+            if self.clients_per_round not in (None, self.total_clients):
                 raise ValueError(
                     "clients_per_round only applies with participation="
                     "'uniform' or 'stratified'")
         elif self.clients_per_round is None:
             raise ValueError(
                 f"participation={self.participation!r} needs clients_per_round")
-        elif not 1 <= self.clients_per_round <= self.num_clients:
+        elif not 1 <= self.clients_per_round <= self.total_clients:
             raise ValueError(
-                f"clients_per_round must be in [1, {self.num_clients}], got "
+                f"clients_per_round must be in [1, {self.total_clients}], got "
                 f"{self.clients_per_round}")
         if self.pack < 1:
             raise ValueError(f"pack must be >= 1, got {self.pack}")
+        if (self.engine == "sharded"
+                and self.algorithm in ("fedsikd", "random")
+                and self.teacher_data == "cluster"):
+            # prospective wave layout: the pooled-cluster teacher feed syncs
+            # across the WHOLE cluster each round, which a per-wave sync
+            # matrix cannot express — leader mode's wave-invariant feeds can
+            from repro.launch.mesh import fed_wave_layout
+            cohort = self.clients_per_round or self.total_clients
+            _, _, n_waves = fed_wave_layout(cohort, pack=self.pack,
+                                            n_devices=self.n_devices,
+                                            waves=self.waves)
+            if n_waves > 1:
+                raise ValueError(
+                    "teacher_data='cluster' pools member data into one "
+                    "teacher feed and needs the whole cluster on the mesh "
+                    "at once; wave-scheduled rounds (waves > 1) require "
+                    "teacher_data='leader'")
         if not 0.0 <= self.dropout_rate < 1.0:
             raise ValueError(
                 f"dropout_rate must be in [0, 1), got {self.dropout_rate}")
@@ -255,6 +305,12 @@ class FedConfig:
                 "straggler_frac > 0 needs async_mode=True (a synchronous "
                 "run has no deadline for a straggler to miss)")
         if self.lifecycle_enabled:
+            if self.universe is not None:
+                raise ValueError(
+                    "universe virtualisation and lifecycle knobs "
+                    "(join_schedule/leave_rate/recluster_every) are "
+                    "mutually exclusive: lifecycle rosters are sized by "
+                    "the materialised pool")
             if self.algorithm == "flhc":
                 raise ValueError(
                     "algorithm='flhc' clusters once on a pre-round of local "
@@ -267,6 +323,12 @@ class FedConfig:
                     f"join_schedule brings in {total} clients but "
                     f"num_clients={self.num_clients}; at least one client "
                     "must be present from round 1")
+
+    @property
+    def total_clients(self) -> int:
+        """The client ID space every roster/plan spans: the virtual
+        universe when set, else the materialised pool."""
+        return self.num_clients if self.universe is None else self.universe
 
     @property
     def lifecycle_enabled(self) -> bool:

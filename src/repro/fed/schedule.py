@@ -95,7 +95,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.launch.mesh import fed_mesh_layout
+from repro.launch.mesh import fed_wave_layout
 
 PARTICIPATION_MODES = ("full", "uniform", "stratified")
 WEIGHTINGS = ("uniform", "size")
@@ -131,10 +131,46 @@ class RoundPlan:
     # 0 = the update arrives before this round's deadline, d >= 1 = it lands
     # d rounds late (a straggler).  None = synchronous plan (all on time).
     slot_delay: Optional[np.ndarray] = None
+    # Wave-scheduled execution (DESIGN.md §15): the slot arrays span
+    # ``n_waves * wave_slots`` LANES, streamed through a fixed mesh of
+    # ``wave_slots`` physical slots in ``n_waves`` passes.  ``None`` means
+    # single-wave (the lanes ARE the mesh — today's packed semantics).
+    wave_slots: Optional[int] = None
 
     @property
     def n_slots(self) -> int:
         return len(self.slot_client)
+
+    @property
+    def n_waves(self) -> int:
+        """Number of fixed-shape passes the plan's lanes are streamed in."""
+        if self.wave_slots is None:
+            return 1
+        return self.n_slots // self.wave_slots
+
+    def wave(self, w: int) -> "RoundPlan":
+        """The ``wave_slots``-sized single-wave sub-plan for pass ``w``.
+
+        Slot arrays are sliced views over lanes ``[w*ws, (w+1)*ws)``;
+        weights are NOT renormalised — each wave's ``agg_row`` is a slice
+        of the globally-normalised row, so per-wave unnormalised partial
+        sums fold exactly into the full-cohort mean (DESIGN.md §15).
+        ``sync_matrix``/``steps_for`` computed on the slice are correct
+        because clusters are slot-contiguous and engines constrain
+        cluster-spanning sync to wave-invariant teacher feeds.
+        """
+        ws = self.wave_slots if self.wave_slots is not None else self.n_slots
+        if not 0 <= w < max(1, self.n_slots // ws):
+            raise IndexError(f"wave {w} out of range for {self.n_waves} waves")
+        lo, hi = w * ws, (w + 1) * ws
+        return RoundPlan(
+            round_index=self.round_index, pack=self.pack,
+            slot_client=self.slot_client[lo:hi],
+            slot_cluster=self.slot_cluster[lo:hi],
+            slot_weight=self.slot_weight[lo:hi],
+            slot_delay=(None if self.slot_delay is None
+                        else self.slot_delay[lo:hi]),
+            wave_slots=None)
 
     @property
     def active(self) -> np.ndarray:
@@ -232,7 +268,12 @@ class RoundScheduler:
         one member per cluster, so no cluster is ever teacher-less).
     clients_per_round : sample size; required for non-``full`` modes.
     pack : client lanes per device in the mesh engine (>= 1).
-    n_devices : mesh size; defaults to ``ceil(max_participants / pack)``.
+    n_devices : mesh size; defaults to ``ceil(max_participants / pack)``
+        when ``waves`` is unset (single-wave legacy layout), else to the
+        smallest mesh that hosts the cohort in ``waves`` passes.
+    waves : stream each round's cohort through the fixed mesh in this many
+        fixed-shape passes (DESIGN.md §15); ``None`` = auto (1 when the
+        cohort fits ``n_devices * pack`` slots, else the minimum count).
     weighting : full-population cluster weight, ``size`` (|C_k|/N,
         §IV-C.5) or ``uniform`` (1/K, Alg. 1 literal).
     dropout_rate : probability that an invited client fails mid-round
@@ -253,6 +294,7 @@ class RoundScheduler:
                  participation: str = "full",
                  clients_per_round: Optional[int] = None,
                  pack: int = 1, n_devices: Optional[int] = None,
+                 waves: Optional[int] = None,
                  weighting: str = "size", dropout_rate: float = 0.0,
                  async_mode: bool = False, round_deadline: float = 1.0,
                  straggler_frac: float = 0.0,
@@ -324,10 +366,17 @@ class RoundScheduler:
         self.dropout_rate = dropout_rate
         self.pack = pack
         self.max_participants = clients_per_round
-        # the ONE slot-layout rule, shared with the mesh builder
-        self.n_devices, self.n_slots = fed_mesh_layout(
-            self.max_participants, pack=pack, n_devices=n_devices)
+        # the ONE slot-layout rule, shared with the mesh builder: the mesh
+        # holds ``wave_slots`` physical slots; plans span
+        # ``n_slots = n_waves * wave_slots`` lanes streamed through it
+        self.n_devices, self.wave_slots, self.n_waves = fed_wave_layout(
+            self.max_participants, pack=pack, n_devices=n_devices,
+            waves=waves)
+        self.n_slots = self.wave_slots * self.n_waves
         self.seed = seed
+        self._group_sizes = np.asarray([len(g) for g in self.groups],
+                                       np.int64)
+        self._speed_profile: dict[int, bool] = {}
 
     # ------------------------------------------------------------- sampling
     def _rng(self, round_index: int) -> np.random.Generator:
@@ -343,10 +392,18 @@ class RoundScheduler:
     def _is_straggler(self, client: int) -> bool:
         """Persistent per-(seed, client) speed profile on the round-free
         0x5E stream (round slot pinned to 0: per-round latency always uses
-        ``round + 1 >= 1``, so the streams never meet)."""
-        rng = np.random.default_rng(np.random.SeedSequence(
-            [self.seed & 0x7FFFFFFF, 0, SALT_SPEED, int(client)]))
-        return bool(rng.random() < self.straggler_frac)
+        ``round + 1 >= 1``, so the streams never meet).  Profiles are
+        immutable per client, so they are memoised — at 100k-client
+        universes the SeedSequence spin-up would otherwise dominate
+        ``plan()`` (satellite: plan cost ∝ cohort, not universe)."""
+        client = int(client)
+        hit = self._speed_profile.get(client)
+        if hit is None:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [self.seed & 0x7FFFFFFF, 0, SALT_SPEED, client]))
+            hit = bool(rng.random() < self.straggler_frac)
+            self._speed_profile[client] = hit
+        return hit
 
     def latency(self, round_index: int, client: int) -> float:
         """This round's completion latency for ``client``, in units of the
@@ -403,7 +460,11 @@ class RoundScheduler:
         if self.participation == "uniform":
             chosen = rng.choice(self.client_ids, self.clients_per_round,
                                 replace=False)
-            return [np.sort(chosen[np.isin(chosen, g)]) for g in self.groups]
+            # group by cached cluster index — O(cohort * K), universe-free
+            # (np.isin against each full group array was O(C) per cluster)
+            cid = self.cluster_idx[chosen]
+            return [np.sort(chosen[cid == k])
+                    for k in range(self.n_clusters)]
         caps = np.asarray([len(g) for g in self.groups])
         counts = self._stratified_counts(self.clients_per_round, caps)
         return [np.sort(rng.choice(g, int(m), replace=False))
@@ -428,22 +489,25 @@ class RoundScheduler:
         slot_cluster = np.full(S, -1, np.int32)
         slot_weight = np.zeros(S, np.float32)
 
-        present = [k for k, sel in enumerate(per_cluster) if len(sel)]
-        if self.weighting == "size":
-            W = {k: len(self.groups[k]) / self.n_clients for k in present}
-        else:
-            W = {k: 1.0 / self.n_clusters for k in present}
-        norm = sum(W.values())          # renormalise over present clusters
-
-        s = 0                           # clusters are slot-contiguous
-        for k in present:
-            sel = per_cluster[k]
-            w = W[k] / (norm * len(sel))
-            for i in sel:
-                slot_client[s] = i
-                slot_cluster[s] = k
-                slot_weight[s] = w
-                s += 1
+        # Everything below is O(cohort + K): per-universe scans would make
+        # plan() scale with C (satellite: negligible planning at C = 100k).
+        m_k = np.asarray([len(sel) for sel in per_cluster], np.int64)
+        present = np.flatnonzero(m_k)
+        s = 0
+        if len(present):
+            if self.weighting == "size":
+                Wp = self._group_sizes[present] / self.n_clients
+            else:
+                Wp = np.full(len(present), 1.0 / self.n_clusters)
+            # sequential Python sum, bit-matching the historical per-dict
+            # accumulation (np.sum's pairwise order can differ in the ulp)
+            norm = float(sum(Wp.tolist()))  # renormalise over present
+            w_per = Wp / (norm * m_k[present])
+            cohort = np.concatenate([per_cluster[k] for k in present])
+            s = len(cohort)             # clusters are slot-contiguous
+            slot_client[:s] = cohort
+            slot_cluster[:s] = np.repeat(present, m_k[present])
+            slot_weight[:s] = np.repeat(w_per, m_k[present])
         # speed model: per-slot arrival delays (warm-up — round 0 — stays
         # synchronous: establishment precedes deployment timing)
         slot_delay = None
@@ -453,7 +517,8 @@ class RoundScheduler:
                 slot_delay[t] = self.delay(round_index, int(slot_client[t]))
         return RoundPlan(round_index=round_index, pack=self.pack,
                          slot_client=slot_client, slot_cluster=slot_cluster,
-                         slot_weight=slot_weight, slot_delay=slot_delay)
+                         slot_weight=slot_weight, slot_delay=slot_delay,
+                         wave_slots=self.wave_slots)
 
     def plan(self, round_index: int) -> RoundPlan:
         """The participation plan for round ``round_index`` (1-based by

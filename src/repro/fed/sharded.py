@@ -49,13 +49,15 @@ from __future__ import annotations
 import functools
 import math
 import threading
-from typing import Callable
+import time
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import perf
 from repro.core import cluster_collectives as cc
 from repro.core.distill import distillation_loss, softmax_cross_entropy
 from repro.fed.schedule import RoundPlan
@@ -123,17 +125,27 @@ def client_step_counts(shards, batch_size: int, epochs: int) -> np.ndarray:
                        for sh in shards], np.int32)
 
 
-def stage_on_slots(mesh, plan: RoundPlan, *arrays):
+def stage_on_slots(mesh, plan: RoundPlan, *arrays, row_maps=None):
     """Row-gather this round's participants onto mesh slots and place the
     (S, ...) stacks with the packed client-axis sharding (idle slots carry
-    client 0's rows; they run zero steps).
+    row 0; they run zero steps).
 
     The row-gather stays on the HOST (``arrays`` are the (C, ...) numpy
     stacks built once at setup by ``stack_client_data``): one fancy index
     plus one ``device_put`` per array, no intermediate default-device copy —
-    this is the only host->device transfer on the per-round path."""
+    this is the only host->device transfer on the per-round path.
+
+    ``row_maps`` (optional, one entry per array, ``None`` = identity)
+    translates the plan's CLIENT ids into each array's row space — how a
+    100k-virtual-client universe stages through base stacks that only
+    materialise the data pool (``data.pipeline.ClientStore.row_of``), and
+    how the KD teacher feed maps a slot to its cluster LEADER's rows."""
     cid = np.where(plan.active, plan.slot_client, 0)
-    stacks = tuple(np.ascontiguousarray(np.asarray(a)[cid]) for a in arrays)
+    maps = (None,) * len(arrays) if row_maps is None else row_maps
+    stacks = tuple(
+        np.ascontiguousarray(
+            np.asarray(a)[cid if m is None else np.asarray(m)[cid]])
+        for a, m in zip(arrays, maps))
     return jax.device_put(stacks, named(mesh, client_stack_specs(
         stacks, mesh, axis=AXIS)))
 
@@ -200,6 +212,96 @@ class SlotStager:
     def _drop_pending(self):
         # An abandoned prefetch thread just finishes and its result is GC'd.
         self._pending = None
+
+
+class WaveStager:
+    """Multi-wave generalisation of ``SlotStager`` (DESIGN.md §15): an LRU
+    cache of staged wave assignments plus a DICT of in-flight prefetches,
+    so wave ``w+1``'s host gather + ``device_put`` runs on a background
+    thread while wave ``w`` computes, and the next round's wave-0 prefetch
+    coexists with this round's in-flight waves (the single-pending
+    ``SlotStager`` dropped whichever came second).
+
+    ``capacity`` bounds the staged cache — size it ``n_waves + 1`` so a
+    whole round's waves plus the next round's wave-0 prefetch fit; a full
+    cache evicts least-recently-used (repeat assignments across rounds,
+    e.g. ``participation="full"`` single-wave, then never re-upload,
+    preserving SlotStager's one-upload behaviour).
+
+    Overlap accounting (``perf``): adopting a prefetched wave records the
+    background gather time that ran hidden behind compute
+    (``stage_hidden``) and the residual join wait (``stage_wait``); a
+    cold/mispredicted wave records its full synchronous gather as
+    ``stage_wait``.  ``overlap_efficiency = hidden / (hidden + wait)``
+    (benchmarks/engine_bench.py)."""
+
+    def __init__(self, mesh, *arrays,
+                 row_maps: Optional[Sequence] = None, capacity: int = 2):
+        self.mesh, self.arrays = mesh, arrays
+        self.row_maps = row_maps
+        self.capacity = max(2, int(capacity))
+        self._staged: dict[bytes, tuple] = {}    # insertion-ordered LRU
+        self._pending: dict[bytes, tuple] = {}   # key -> (thread, box)
+
+    def _gather(self, plan: RoundPlan):
+        return stage_on_slots(self.mesh, plan, *self.arrays,
+                              row_maps=self.row_maps)
+
+    def _put(self, key: bytes, staged):
+        self._staged[key] = staged
+        while len(self._staged) > self.capacity:
+            self._staged.pop(next(iter(self._staged)))
+
+    def stage(self, plan: RoundPlan):
+        key = plan.slot_client.tobytes()
+        hit = self._staged.pop(key, None)
+        if hit is not None:
+            self._put(key, hit)                  # LRU refresh
+            return hit
+        pend = self._pending.pop(key, None)
+        if pend is not None:
+            th, box = pend
+            t0 = time.perf_counter()
+            th.join()
+            wait = time.perf_counter() - t0
+            staged = box.get("staged")
+            if staged is not None:
+                perf.add("stage_hidden",
+                         max(0.0, box.get("dt", 0.0) - wait))
+                perf.add("stage_wait", wait)
+                self._put(key, staged)
+                return staged
+            # background gather failed: fall through and raise synchronously
+        t0 = time.perf_counter()
+        staged = self._gather(plan)
+        perf.add("stage_wait", time.perf_counter() - t0)
+        self._put(key, staged)
+        return staged
+
+    def prefetch(self, plan: RoundPlan):
+        """Begin staging ``plan``'s slot assignment on a background thread
+        (no-op if already staged or already in flight).  Mispredictions are
+        harmless: an unadopted prefetch just finishes and is GC'd when its
+        key is evicted from the pending dict by a later prefetch storm —
+        prefetch is an overlap optimisation, never a source of truth."""
+        key = plan.slot_client.tobytes()
+        if key in self._staged or key in self._pending:
+            return
+        box: dict = {}
+
+        def work():
+            t0 = time.perf_counter()
+            try:
+                box["staged"] = self._gather(plan)
+            except Exception as e:  # pragma: no cover - raised on sync retry
+                box["error"] = e
+            box["dt"] = time.perf_counter() - t0
+
+        th = threading.Thread(target=work, daemon=True, name="wave-prefetch")
+        th.start()
+        self._pending[key] = (th, box)
+        while len(self._pending) > self.capacity:
+            self._pending.pop(next(iter(self._pending)))
 
 
 # Batched per-slot key derivation: ONE vmapped fold_in program instead of a

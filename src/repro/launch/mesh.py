@@ -37,6 +37,42 @@ def fed_mesh_layout(n_participants: int, *, pack: int = 1,
     return n_devices, n_devices * pack
 
 
+def fed_wave_layout(n_participants: int, *, pack: int = 1,
+                    n_devices: int | None = None,
+                    waves: int | None = None) -> tuple[int, int, int]:
+    """Wave-scheduled layout: ``(n_devices, wave_slots, n_waves)`` hosting
+    ``n_participants`` clients by streaming them through a FIXED mesh of
+    ``wave_slots = n_devices * pack`` slots in ``n_waves`` passes
+    (DESIGN.md §15).
+
+    This is the decoupling of the cohort from the mesh: the compiled round
+    programs are shaped by ``wave_slots`` alone, so the cohort (and the
+    client universe behind it) can grow without a recompile — only
+    ``n_waves`` grows.  Defaults reproduce the single-wave legacy layout
+    exactly: with ``n_devices=None`` and ``waves=None`` the mesh is sized
+    for the whole cohort (``fed_mesh_layout``) and ``n_waves == 1``.
+    """
+    if pack < 1:
+        raise ValueError(f"pack must be >= 1, got {pack}")
+    if waves is not None and waves < 1:
+        raise ValueError(f"waves must be >= 1, got {waves}")
+    if n_devices is not None and n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_devices is None:
+        per_wave = (n_participants if waves is None
+                    else math.ceil(n_participants / waves))
+        n_devices = max(1, math.ceil(per_wave / pack))
+    wave_slots = n_devices * pack
+    if waves is None:
+        waves = max(1, math.ceil(n_participants / wave_slots))
+    if wave_slots * waves < n_participants:
+        raise ValueError(
+            f"{waves} waves x {n_devices} devices x pack={pack} = "
+            f"{wave_slots * waves} lanes cannot host {n_participants} "
+            "participants")
+    return n_devices, wave_slots, waves
+
+
 def make_fed_client_mesh(n_participants: int, *, pack: int = 1,
                          n_devices: int | None = None) -> Mesh:
     """1-D ``(CLIENT_AXIS,)`` mesh for the packed federated runtime, using

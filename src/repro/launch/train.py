@@ -46,6 +46,8 @@ def run_fl(args):
     ds = load_dataset(args.dataset, small=args.small)
     cfg = FedConfig(algorithm=args.algorithm, engine=args.engine,
                     num_clients=args.clients, pack=args.pack,
+                    universe=args.universe, n_devices=args.n_devices,
+                    waves=args.waves,
                     alpha=args.alpha, rounds=args.rounds,
                     local_epochs=args.local_epochs, seed=args.seed,
                     num_clusters=args.clusters,
@@ -135,6 +137,19 @@ def main():
     fl.add_argument("--pack", type=int, default=1,
                     help="client lanes per device in the sharded engine "
                          "(C = devices x pack clients in one jitted program)")
+    fl.add_argument("--universe", type=int, default=None,
+                    help="virtual client universe size (sharded engine): "
+                         "--clients base shards are aliased host-side up to "
+                         "this population; sampling/clustering span the "
+                         "full universe (DESIGN.md §15)")
+    fl.add_argument("--n-devices", type=int, default=None, dest="n_devices",
+                    help="pin the mesh to this many devices regardless of "
+                         "cohort size — a cohort larger than devices x pack "
+                         "streams through the mesh in waves")
+    fl.add_argument("--waves", type=int, default=None,
+                    help="explicit wave count per round (default: derived "
+                         "from the cohort and the mesh; waves x devices x "
+                         "pack slots must cover the cohort)")
     fl.add_argument("--alpha", type=float, default=0.5)
     fl.add_argument("--rounds", type=int, default=5)
     fl.add_argument("--clients", type=int, default=16)

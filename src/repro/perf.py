@@ -105,6 +105,22 @@ def span(name: str, round_id: int | None = None):
             bucket[name] = bucket.get(name, 0.0) + dt
 
 
+def add(name: str, dt: float, round_id: int | None = None) -> None:
+    """Accumulate a pre-measured duration under ``name`` — the non-context
+    form of ``span`` for durations measured elsewhere (e.g. the WaveStager's
+    background gather time, measured on the feeder thread but ATTRIBUTED at
+    adoption time on the driver thread).  Bucket selection matches ``span``:
+    the open bucket without ``round_id``, the named round's bucket with."""
+    if not _enabled:
+        return
+    with _lock:
+        if round_id is None or round_id >= len(_rounds):
+            bucket = _current
+        else:
+            bucket = _rounds[round_id]
+        bucket[name] = bucket.get(name, 0.0) + float(dt)
+
+
 def end_round() -> None:
     """Close the current round's bucket (driver: once per completed round)."""
     if not _enabled:

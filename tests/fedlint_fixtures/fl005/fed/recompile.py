@@ -13,3 +13,11 @@ def bad_shape(items):
 class SlotStager:
     def stage(self, plan):
         return plan.slot_client.tobytes()     # ok: the blessed staging path
+
+
+class WaveStager:
+    def stage(self, plan):
+        return plan.slot_client.tobytes()     # ok: blessed wave staging path
+
+    def prefetch(self, plan):
+        return plan.slot_client.tobytes()     # ok: blessed wave staging path

@@ -72,6 +72,14 @@ def test_fl005_catches_tobytes_key_and_comprehension_shape():
     assert_seeded_violations_caught("fl005", "FL005", "fed/recompile.py")
 
 
+def test_fl005_blesses_both_stagers():
+    # the fixture's WaveStager/SlotStager bodies key on .tobytes() with no
+    # VIOLATION marker — assert_seeded_violations_caught above proves they
+    # are NOT flagged; this pins the blessed set itself
+    from tools.fedlint.rules import BLESSED_STAGERS
+    assert BLESSED_STAGERS == frozenset({"SlotStager", "WaveStager"})
+
+
 def test_rule_registry_is_complete():
     assert [rid for rid, _ in RULES] == sorted(RULE_DOCS) == [
         "FL001", "FL002", "FL003", "FL004", "FL005"]

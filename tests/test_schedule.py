@@ -158,8 +158,13 @@ def test_scheduler_validation():
         RoundScheduler(LABELS, participation="stratified", clients_per_round=2)
     with pytest.raises(ValueError):
         RoundScheduler(LABELS, pack=0)
-    with pytest.raises(ValueError):   # 12 participants can't fit 2x2 slots
-        RoundScheduler(LABELS, participation="full", pack=2, n_devices=2)
+    # 12 participants on 2x2 slots is no longer an error: the mesh holds one
+    # WAVE and the scheduler derives the wave count (DESIGN.md §15)
+    s = RoundScheduler(LABELS, participation="full", pack=2, n_devices=2)
+    assert s.wave_slots == 4 and s.n_waves == 3 and s.n_slots == 12
+    with pytest.raises(ValueError):   # but an explicit wave budget must fit
+        RoundScheduler(LABELS, participation="full", pack=2, n_devices=2,
+                       waves=2)
     with pytest.raises(ValueError):
         RoundScheduler(LABELS, dropout_rate=1.0)
     with pytest.raises(ValueError):

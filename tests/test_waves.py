@@ -1,0 +1,365 @@
+"""Wave-scheduled packed rounds (DESIGN.md §15): the client universe is
+decoupled from the mesh — a host-resident ``ClientStore`` aliases a virtual
+population over the base shard pool, ``RoundScheduler`` plans span
+``n_waves x wave_slots`` lanes streamed through a FIXED mesh, and the
+``WaveStager`` double-buffers wave N+1's host gather behind wave N's
+compute.  Contracts pinned here:
+
+- ``fed_wave_layout`` defaults reproduce the single-wave legacy layout;
+  an explicit wave budget that cannot host the cohort refuses.
+- ``RoundPlan.wave(w)`` slices lanes without renormalising — per-wave
+  aggregation rows are slices of the GLOBALLY normalised row, so the
+  unnormalised per-wave partials fold exactly into the cohort mean.
+- plan() cost tracks the COHORT, not the universe (satellite: negligible
+  planning at C = 100k).
+- a cohort that fits one wave is BIT-IDENTICAL to the legacy packed path;
+  multi-wave runs agree with the loop engine <= 1pt under stratified
+  sampling + dropout + semi-async; kill-and-resume with a universe store
+  is bit-identical.
+
+Mesh-dependent tests run in subprocesses (XLA_FLAGS pre-import, see
+tests/_subproc.py).
+"""
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from _subproc import run_script as _run
+
+
+# ------------------------------------------------------------- wave layout
+def test_fed_wave_layout_defaults_reproduce_single_wave():
+    from repro.launch.mesh import fed_mesh_layout, fed_wave_layout
+    for c, pack in [(1, 1), (8, 1), (8, 2), (12, 4), (7, 2)]:
+        nd, ws, nw = fed_wave_layout(c, pack=pack)
+        assert nw == 1 and ws == nd * pack
+        assert (nd, ws) == fed_mesh_layout(c, pack=pack)
+
+
+def test_fed_wave_layout_derives_waves_from_a_pinned_mesh():
+    from repro.launch.mesh import fed_wave_layout
+    # pinned mesh smaller than the cohort -> waves derived, zero recompiles
+    assert fed_wave_layout(32, pack=1, n_devices=8) == (8, 8, 4)
+    assert fed_wave_layout(33, pack=1, n_devices=8) == (8, 8, 5)
+    # pinned waves without a mesh -> smallest mesh that fits the budget
+    assert fed_wave_layout(32, pack=2, waves=4) == (4, 8, 4)
+    # both pinned and sufficient
+    assert fed_wave_layout(12, pack=2, n_devices=2, waves=3) == (2, 4, 3)
+
+
+def test_fed_wave_layout_validation():
+    from repro.launch.mesh import fed_wave_layout
+    with pytest.raises(ValueError):
+        fed_wave_layout(8, pack=0)
+    with pytest.raises(ValueError):
+        fed_wave_layout(8, pack=1, waves=0)
+    with pytest.raises(ValueError):
+        fed_wave_layout(8, pack=1, n_devices=0)
+    with pytest.raises(ValueError):   # 2 waves x 2 slots < 8 participants
+        fed_wave_layout(8, pack=1, n_devices=2, waves=2)
+
+
+# --------------------------------------------------------------- wave plans
+def _scheduler(**kw):
+    from repro.fed.schedule import RoundScheduler
+    labels = np.arange(12) % 3
+    base = dict(participation="stratified", clients_per_round=8,
+                pack=1, n_devices=2, seed=0)
+    base.update(kw)
+    return RoundScheduler(labels, **base)
+
+
+def test_roundplan_wave_slices_lanes_without_renormalising():
+    s = _scheduler()
+    assert (s.wave_slots, s.n_waves, s.n_slots) == (2, 4, 8)
+    p = s.plan(3)
+    assert p.n_waves == 4
+    rebuilt_c, rebuilt_w = [], []
+    for w in range(p.n_waves):
+        wp = p.wave(w)
+        assert wp.n_slots == 2 and wp.n_waves == 1
+        np.testing.assert_array_equal(
+            wp.slot_client, p.slot_client[2 * w:2 * w + 2])
+        # weights are GLOBAL slices: no per-wave renormalisation
+        np.testing.assert_array_equal(
+            wp.agg_row(), p.agg_row()[2 * w:2 * w + 2])
+        # steps_for is elementwise, so the wave slice commutes with it
+        steps = np.arange(12) + 1
+        np.testing.assert_array_equal(
+            wp.steps_for(steps), p.steps_for(steps)[2 * w:2 * w + 2])
+        rebuilt_c.append(wp.slot_client)
+        rebuilt_w.append(wp.slot_weight)
+    np.testing.assert_array_equal(np.concatenate(rebuilt_c), p.slot_client)
+    np.testing.assert_array_equal(np.concatenate(rebuilt_w), p.slot_weight)
+    assert abs(float(p.slot_weight.sum()) - 1.0) < 1e-6
+    with pytest.raises(IndexError):
+        p.wave(4)
+    with pytest.raises(IndexError):
+        p.wave(-1)
+
+
+def test_single_wave_plan_is_legacy_shaped():
+    s = _scheduler(n_devices=None)      # mesh sized for the whole cohort
+    assert s.n_waves == 1 and s.n_slots == s.wave_slots == 8
+    p = s.plan(1)
+    w0 = p.wave(0)
+    np.testing.assert_array_equal(w0.slot_client, p.slot_client)
+    np.testing.assert_array_equal(w0.slot_weight, p.slot_weight)
+
+
+def test_async_delays_ride_the_wave_slices():
+    s = _scheduler(async_mode=True, straggler_frac=0.5, seed=7)
+    p = s.plan(2)
+    assert p.slot_delay is not None
+    got = np.concatenate([p.wave(w).delays for w in range(p.n_waves)])
+    np.testing.assert_array_equal(got, p.delays)
+
+
+# ----------------------------------------------- plan cost vs universe size
+def test_plan_time_tracks_cohort_not_universe():
+    """Satellite: planning at C = 100k stays negligible.  The scheduler may
+    pay O(C) ONCE at construction; per-round plan() must be O(cohort)."""
+    from repro.fed.schedule import RoundScheduler
+
+    def median_plan_s(universe):
+        labels = np.arange(universe) % 4
+        s = RoundScheduler(labels, participation="stratified",
+                           clients_per_round=32, pack=1, n_devices=8,
+                           async_mode=True, straggler_frac=0.3, seed=0)
+        s.plan(0)                       # warm any lazy state
+        ts = []
+        for r in range(1, 6):
+            t0 = time.perf_counter()
+            s.plan(r)
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[len(ts) // 2]
+
+    small = median_plan_s(1_000)
+    large = median_plan_s(100_000)
+    # generous CI bound: a 100x universe may not cost more than 25x the
+    # small-universe plan (the pre-vectorisation planner was ~100x)
+    assert large <= 25 * max(small, 1e-3), (small, large)
+
+
+# ------------------------------------------------------------- client store
+def test_client_store_identity_is_the_base_pool():
+    from repro.data.pipeline import ClientStore, make_client_shards
+    from repro.data.synthetic import load_dataset
+    ds = load_dataset("mnist", small=True)
+    shards = make_client_shards(ds, 6, 0.5, seed=0)
+    store = ClientStore(shards)
+    assert len(store) == store.n_base == 6
+    np.testing.assert_array_equal(store.row_of, np.arange(6))
+    for i in range(6):
+        assert store[i] is shards[i]     # same OBJECTS: batch streams equal
+    assert [sh is b for sh, b in zip(store, shards)] == [True] * 6
+    np.testing.assert_array_equal(
+        store.sizes, [sh.num_examples for sh in shards])
+
+
+def test_client_store_virtual_universe_aliases_base_rows():
+    from repro.data.pipeline import ClientStore, make_client_shards
+    from repro.data.synthetic import load_dataset
+    ds = load_dataset("mnist", small=True)
+    shards = make_client_shards(ds, 4, 0.5, seed=0)
+    store = ClientStore(shards, universe=11)
+    assert len(store) == 11 and store.n_base == 4
+    np.testing.assert_array_equal(store.row_of, np.arange(11) % 4)
+    for vid in range(11):
+        assert store[vid] is shards[vid % 4]
+    np.testing.assert_array_equal(
+        store.sizes, [shards[v % 4].num_examples for v in range(11)])
+    with pytest.raises(ValueError):
+        ClientStore(shards, universe=3)          # universe < base pool
+    with pytest.raises(ValueError):
+        ClientStore([])
+
+
+# ------------------------------------------------------------ config gating
+def test_fedconfig_wave_knob_validation():
+    from repro.fed.rounds import FedConfig
+    with pytest.raises(ValueError):    # universe needs the sharded engine
+        FedConfig(engine="loop", universe=100)
+    with pytest.raises(ValueError):    # universe below the base pool
+        FedConfig(engine="sharded", num_clients=16, universe=8)
+    with pytest.raises(ValueError):    # waves need the sharded engine
+        FedConfig(engine="loop", waves=2)
+    with pytest.raises(ValueError):    # universe x lifecycle is gated off
+        FedConfig(engine="sharded", universe=100,
+                  join_schedule=((2, 2),))
+    with pytest.raises(ValueError):    # cluster-pooled teacher can't wave
+        FedConfig(engine="sharded", num_clients=16, n_devices=2, pack=1,
+                  teacher_data="cluster")
+    cfg = FedConfig(engine="sharded", num_clients=16, universe=64,
+                    n_devices=2, pack=2)
+    assert cfg.total_clients == 64
+
+
+# ------------------------------------------------------------- wave stager
+_STAGER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.fed import sharded as sh
+    from repro.fed.schedule import RoundScheduler
+    from repro.launch.mesh import make_fed_client_mesh
+
+    labels = np.arange(12) % 3
+    s = RoundScheduler(labels, participation="stratified",
+                       clients_per_round=8, pack=1, n_devices=2, seed=0)
+    mesh = make_fed_client_mesh(s.wave_slots, n_devices=s.n_devices)
+    x_all = np.arange(12 * 5, dtype=np.float32).reshape(12, 5)
+    y_all = -x_all
+    row_of = np.arange(12) % 4      # alias map, as a virtual store would
+
+    def expect(wp):
+        cid = np.where(wp.active, wp.slot_client, 0)
+        return x_all[row_of[cid]], y_all[row_of[cid]]
+
+    st = sh.WaveStager(mesh, x_all, y_all, row_maps=(row_of, row_of),
+                       capacity=3)
+    p = s.plan(1)
+
+    # cold stage
+    xs, ys = st.stage(p.wave(0))
+    ex, ey = expect(p.wave(0))
+    np.testing.assert_array_equal(np.asarray(xs), ex)
+    np.testing.assert_array_equal(np.asarray(ys), ey)
+
+    # prefetch + adopt
+    st.prefetch(p.wave(1))
+    xs, ys = st.stage(p.wave(1))
+    np.testing.assert_array_equal(np.asarray(xs), expect(p.wave(1))[0])
+
+    # mispredicted prefetch: staging a DIFFERENT wave still returns the
+    # right rows, and the mispredicted entry does not poison the cache
+    st.prefetch(p.wave(2))
+    xs, ys = st.stage(p.wave(3))
+    np.testing.assert_array_equal(np.asarray(xs), expect(p.wave(3))[0])
+    xs, ys = st.stage(p.wave(2))    # the prefetched wave is still adoptable
+    np.testing.assert_array_equal(np.asarray(xs), expect(p.wave(2))[0])
+
+    # re-staging the same wave hits the LRU (same buffers back)
+    a = st.stage(p.wave(2))
+    b = st.stage(p.wave(2))
+    assert a[0] is b[0]
+
+    # capacity bound: the staged map never exceeds its LRU capacity
+    for w in range(4):
+        st.stage(p.wave(w))
+    assert len(st._staged) <= 3
+    print("WAVESTAGER-OK")
+""")
+
+
+def test_wavestager_prefetch_rowmaps_and_lru():
+    r = _run(_STAGER_SCRIPT)
+    assert "WAVESTAGER-OK" in r.stdout, r.stdout + r.stderr
+
+
+# ----------------------------------------- equivalence: single + multi wave
+_EQUIVALENCE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedsikd", engine="sharded", num_clients=8,
+                  alpha=1.0, rounds=2, local_epochs=1,
+                  teacher_warmup_epochs=1, batch_size=32, num_clusters=2,
+                  pack=2, seed=0)
+    h_legacy = run_federated(ds, FedConfig(**common))
+    # explicit wave knobs that resolve to the SAME single-wave layout must
+    # be BIT-identical to the knobless legacy run (identity ClientStore,
+    # WaveStager, wave(0) slicing and single-partial fold all pass through)
+    h_single = run_federated(ds, FedConfig(universe=8, n_devices=4,
+                                           waves=1, **common))
+    assert h_single["acc"] == h_legacy["acc"], (
+        h_single["acc"], h_legacy["acc"])
+    assert h_single["loss"] == h_legacy["loss"]
+    assert h_single["teacher_loss"] == h_legacy["teacher_loss"]
+    assert h_single["student_loss"] == h_legacy["student_loss"]
+    print("BITID-OK", h_legacy["acc"])
+
+    # multi-wave: same cohort streamed through a QUARTER-size mesh; the
+    # only numeric difference is the per-wave teacher-sync width and the
+    # f32 partial fold, so per-round agreement is ulp-tight (<= 1pt bound)
+    h_waves = run_federated(ds, FedConfig(n_devices=1, **common))
+    assert len(h_waves["acc"]) == len(h_legacy["acc"])
+    for a, b in zip(h_waves["acc"], h_legacy["acc"]):
+        assert abs(a - b) <= 0.01, (h_waves["acc"], h_legacy["acc"])
+    print("MULTIWAVE-OK", h_waves["acc"])
+""")
+
+
+def test_single_wave_bit_identical_and_multi_wave_close():
+    r = _run(_EQUIVALENCE_SCRIPT)
+    assert "BITID-OK" in r.stdout, r.stdout + r.stderr
+    assert "MULTIWAVE-OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------- multi-wave vs loop under sampling+dropout+async
+_LOOP_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    common = dict(algorithm="fedavg", num_clients=8, alpha=1.0, rounds=3,
+                  local_epochs=1, batch_size=32, num_clusters=2,
+                  participation="stratified", clients_per_round=6,
+                  dropout_rate=0.2, async_mode=True, straggler_frac=0.4,
+                  max_staleness=2, seed=0)
+    h_loop = run_federated(ds, FedConfig(engine="loop", **common))
+    # 3 waves of 2 slots: stragglers, dropout and staleness-decayed merges
+    # all cross wave boundaries
+    h_wave = run_federated(ds, FedConfig(engine="sharded", pack=2,
+                                         n_devices=1, **common))
+    assert len(h_wave["acc"]) == len(h_loop["acc"]) == 3
+    for rnd, (a, b) in enumerate(zip(h_loop["acc"], h_wave["acc"]), 1):
+        assert abs(a - b) <= 0.01, (rnd, h_loop["acc"], h_wave["acc"])
+    print("LOOP-PARITY-OK", h_loop["acc"], h_wave["acc"])
+""")
+
+
+def test_multi_wave_matches_loop_under_sampling_dropout_async():
+    r = _run(_LOOP_PARITY_SCRIPT)
+    assert "LOOP-PARITY-OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------- kill-and-resume with a store
+_RESUME_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.data.synthetic import load_dataset
+    from repro.fed.rounds import FedConfig, run_federated
+
+    ds = load_dataset("mnist", small=True)
+    base = dict(algorithm="fedsikd", engine="sharded", num_clients=6,
+                universe=12, alpha=1.0, local_epochs=1,
+                teacher_warmup_epochs=1, batch_size=32, num_clusters=2,
+                participation="stratified", clients_per_round=4,
+                pack=1, n_devices=2, seed=0, ckpt_every=1)
+    with tempfile.TemporaryDirectory() as d:
+        h_full = run_federated(ds, FedConfig(
+            rounds=4, ckpt_dir=os.path.join(d, "a"), **base))
+        # killed after round 2, resumed to 4 — the virtual-universe store
+        # is rebuilt from (seed, num_clients, universe) at setup, so the
+        # resumed tail must be bit-identical
+        run_federated(ds, FedConfig(
+            rounds=2, ckpt_dir=os.path.join(d, "b"), **base))
+        h_res = run_federated(ds, FedConfig(
+            rounds=4, ckpt_dir=os.path.join(d, "b"), resume=True, **base))
+    assert h_res["acc"] == h_full["acc"], (h_res["acc"], h_full["acc"])
+    assert h_res["loss"] == h_full["loss"]
+    print("RESUME-OK", h_full["acc"])
+""")
+
+
+def test_kill_and_resume_with_universe_store_is_bit_identical():
+    r = _run(_RESUME_SCRIPT)
+    assert "RESUME-OK" in r.stdout, r.stdout + r.stderr

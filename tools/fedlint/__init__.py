@@ -21,10 +21,10 @@ them down (DESIGN.md §14):
                                   ``np.*`` on traced values inside jitted /
                                   ``shard_map``-ped / Pallas code.
   FL005  recompile safety         no ``.tobytes()``-keyed structures outside
-                                  the blessed ``SlotStager`` staging path,
-                                  no Python-value-dependent array shapes
-                                  (comprehension-shaped constructors)
-                                  feeding jitted programs.
+                                  the blessed staging classes (``SlotStager``
+                                  / ``WaveStager``), no Python-value-dependent
+                                  array shapes (comprehension-shaped
+                                  constructors) feeding jitted programs.
 
 Findings can be allowlisted in place with ``# fedlint: allow=FL00N`` on (or
 inside the statement spanning) the offending line — every pragma should say

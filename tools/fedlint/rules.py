@@ -626,12 +626,19 @@ def _expr_tainted(expr: ast.AST, tainted: set[str]) -> bool:
 
 
 # ========================================================= FL005: recompiles
+# Classes whose bodies may key on ``.tobytes()``: the staging path is the
+# ONE place a plan's slot assignment legitimately becomes a cache key
+# (SlotStager's per-round memo, WaveStager's per-wave LRU + prefetch boxes).
+BLESSED_STAGERS = frozenset({"SlotStager", "WaveStager"})
+
+
 def check_fl005(project: Project) -> list[Finding]:
     findings: list[Finding] = []
     for m in project.in_dirs("fed", "core"):
         blessed_spans: list[tuple[int, int]] = []
         for node in ast.walk(m.tree):
-            if isinstance(node, ast.ClassDef) and node.name == "SlotStager":
+            if (isinstance(node, ast.ClassDef)
+                    and node.name in BLESSED_STAGERS):
                 blessed_spans.append((node.lineno, node.end_lineno))
 
         def blessed(line: int) -> bool:
@@ -646,9 +653,9 @@ def check_fl005(project: Project) -> list[Finding]:
                 findings.append(Finding(
                     "FL005", m.rel, node.lineno,
                     ".tobytes()-keyed structure outside the blessed "
-                    "staging path (fed/sharded.py SlotStager) — ad-hoc "
-                    "byte keys feeding jit arguments are the recompile "
-                    "bug class"))
+                    "staging path (fed/sharded.py SlotStager/WaveStager) "
+                    "— ad-hoc byte keys feeding jit arguments are the "
+                    "recompile bug class"))
             seg = last_segment(node.func)
             base = (dotted_name(node.func) or "").split(".")[0]
             if (seg in SHAPE_CONSTRUCTORS and base in ("jnp", "jax")
@@ -683,6 +690,7 @@ RULE_DOCS = {
              " state in donated positions",
     "FL004": "tracer safety: no if/float()/.item()/np.* on traced values in"
              " traced code",
-    "FL005": "recompile safety: no .tobytes() keys outside SlotStager, no"
-             " comprehension-shaped jnp constructors",
+    "FL005": "recompile safety: no .tobytes() keys outside the blessed"
+             " stagers (SlotStager/WaveStager), no comprehension-shaped jnp"
+             " constructors",
 }

@@ -4,9 +4,16 @@ On CPU the interesting number is the REFERENCE path wall time (the Pallas
 interpreter is a correctness harness, not a performance path) plus the
 derived HBM-traffic model for TPU: the fused KD kernel reads logits once
 (2*T*V*2B) where the reference makes ~4 passes; the table prints both.
+
+``--out BENCH_kernels.json`` additionally writes the rows as a JSON
+artifact; CI refreshes the committed copy every run so the microbench
+trajectory is recorded per commit (same pattern as BENCH_engines.json).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
 
 import jax
@@ -36,6 +43,9 @@ def bench_kd(T=2048, V=8192):
     print(f"kd_loss,{us:.0f},ref-jnp T={T} V={V}; "
           f"TPU HBM model: fused {bytes_fused/1e6:.0f}MB vs ref "
           f"{bytes_ref/1e6:.0f}MB ({bytes_ref/bytes_fused:.1f}x read amp)")
+    return {"kernel": "kd_loss", "ref_us": round(us, 1),
+            "shape": {"T": T, "V": V},
+            "hbm_model_bytes": {"fused": bytes_fused, "ref": bytes_ref}}
 
 
 def bench_kd_batched(C=8, B=4, T=64, V=4096):
@@ -54,6 +64,10 @@ def bench_kd_batched(C=8, B=4, T=64, V=4096):
     print(f"kd_loss_batched,{us:.0f},ref-jnp B={B} T={T} V={V}; sharded "
           f"round on {C} devices: fused {C * per_dev_fused / 1e6:.0f}MB vs "
           f"ref {C * per_dev_ref / 1e6:.0f}MB logit traffic per step")
+    return {"kernel": "kd_loss_batched", "ref_us": round(us, 1),
+            "shape": {"C": C, "B": B, "T": T, "V": V},
+            "hbm_model_bytes": {"fused": C * per_dev_fused,
+                                "ref": C * per_dev_ref}}
 
 
 def bench_flash(B=1, H=8, T=1024, hd=64):
@@ -68,6 +82,10 @@ def bench_flash(B=1, H=8, T=1024, hd=64):
     print(f"flash_attention,{us:.0f},ref-jnp B{B}H{H}T{T}; TPU HBM model: "
           f"ref materializes {scores_bytes/1e6:.0f}MB scores, kernel streams "
           f"{2*128*hd*4/1e3:.0f}KB blocks in VMEM")
+    return {"kernel": "flash_attention", "ref_us": round(us, 1),
+            "shape": {"B": B, "H": H, "T": T, "hd": hd},
+            "hbm_model_bytes": {"ref_scores": scores_bytes,
+                                "kernel_vmem_block": 2 * 128 * hd * 4}}
 
 
 def bench_kmeans(N=4096, F=128, K=16):
@@ -77,6 +95,8 @@ def bench_kmeans(N=4096, F=128, K=16):
     f_ref = jax.jit(lambda x, c: ref.kmeans_assign_ref(x, c)[0])
     us = _time(f_ref, x, c)
     print(f"kmeans_assign,{us:.0f},ref-jnp N={N} F={F} K={K}")
+    return {"kernel": "kmeans_assign", "ref_us": round(us, 1),
+            "shape": {"N": N, "F": F, "K": K}}
 
 
 def bench_chunked_scan(B=1, H=8, T=2048, dk=64):
@@ -90,14 +110,31 @@ def bench_chunked_scan(B=1, H=8, T=2048, dk=64):
     us = _time(f_chunk, q, k, v, la)
     print(f"chunked_decay_scan,{us:.0f},chunk=32 B{B}H{H}T{T} "
           f"(vs O(T) sequential scan: {T//32}x fewer carry deps)")
+    return {"kernel": "chunked_decay_scan", "ref_us": round(us, 1),
+            "shape": {"B": B, "H": H, "T": T, "dk": dk, "chunk": 32}}
 
 
 def main():
-    bench_kd()
-    bench_kd_batched()
-    bench_flash()
-    bench_kmeans()
-    bench_chunked_scan()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="also write the rows as a JSON artifact "
+                         "(BENCH_kernels.json in CI)")
+    args = ap.parse_args()
+    rows = [bench_kd(), bench_kd_batched(), bench_flash(), bench_kmeans(),
+            bench_chunked_scan()]
+    if args.out:
+        artifact = {
+            "benchmark": "kernel microbench (jnp reference path on CPU; "
+                         "HBM traffic is the TPU model, not a measurement)",
+            "host": {"platform": platform.platform(),
+                     "device": jax.devices()[0].platform,
+                     "n_devices": jax.device_count()},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.out} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -98,7 +98,7 @@ def stack_stats(all_stats: list[ClientStats]) -> jax.Array:
     Roster-shaped by design: runs only at (re-)clustering events, feeds the
     host-side k-means — never a steady-state jitted program."""
     return jnp.stack([s.vector() for s in all_stats],
-                     axis=0)  # fedlint: allow=FL005
+                     axis=0)  # fedlint: allow=FL005 -- runs only at (re-)clustering events and feeds host-side k-means, never a steady-state jitted program
 
 
 # ------------------------------------------------------ batched front-end

@@ -69,7 +69,7 @@ def stat_features(shards, cfg, roster=None) -> jax.Array:
         # roster-shaped by design: recompiles only on membership events,
         # never in the steady-state round loop
         keys = jnp.stack([jax.random.fold_in(key, int(i))
-                          for i in roster])  # fedlint: allow=FL005
+                          for i in roster])  # fedlint: allow=FL005 -- roster-shaped by design: recompiles only on membership events, never in the steady round loop
         mean, std, skew = stats.privatize_batched(
             mean, std, skew, noise_multiplier=cfg.dp_noise, keys=keys)
     return jnp.concatenate([mean, std, skew], axis=1)

@@ -297,6 +297,12 @@ class RoundDriver:
         if cfg.guards:
             guards.install()
             guard_from = start_round + 3
+            if cfg.guards == "jitter":
+                # race harness (DESIGN.md §16): deterministic seeded sleeps
+                # at every thread-handoff point — prefetch workers, wave
+                # LRU eviction, async checkpoint submit/drain — stretch
+                # the interleavings; the history must not change by a bit
+                guards.enable_jitter(cfg.seed)
         try:
             for rnd in range(start_round + 1, cfg.rounds + 1):
                 guarded = guard_from is not None and rnd >= guard_from
@@ -357,6 +363,8 @@ class RoundDriver:
                     guards.assert_no_new_compiles(
                         compile_base, f"round {rnd}")
         finally:
+            if cfg.guards == "jitter":
+                guards.disable_jitter()
             if self.writer is not None:
                 # drain pending writes (and surface any writer error) even
                 # on an exception: a killed run must still leave only

@@ -54,6 +54,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro import guards
 from repro import perf
 
 _ROUND_RE = re.compile(r"^round_(\d+)\.npz$")
@@ -161,6 +162,9 @@ class AsyncCheckpointWriter:
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
         self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        # _error crosses the thread boundary in both directions (worker
+        # parks it, callers pop it), so every touch holds _lock (FL006)
+        self._lock = threading.Lock()
         self._error: Optional[BaseException] = None
         self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True,
@@ -170,11 +174,14 @@ class AsyncCheckpointWriter:
     def _worker(self):
         while True:
             item = self._q.get()
+            guards.jitter_point("ckpt-worker")
             try:
                 if item is None:         # close() sentinel
                     return
                 state, token = item
-                if self._error is None:  # after an error, drain without writing
+                with self._lock:
+                    failed = self._error is not None
+                if not failed:  # after an error, drain without writing
                     # the checkpoint span runs HERE, possibly rounds after
                     # the submitting round closed its bucket — the token
                     # captured at submit time routes it back (perf.py)
@@ -182,13 +189,15 @@ class AsyncCheckpointWriter:
                         save_round(self.ckpt_dir, state,
                                    keep_last=self.keep_last)
             except BaseException as e:
-                self._error = e
+                with self._lock:
+                    self._error = e
             finally:
                 self._q.task_done()
 
     def _raise_pending(self):
-        if self._error is not None:
+        with self._lock:
             e, self._error = self._error, None
+        if e is not None:
             raise RuntimeError(
                 f"async checkpoint writer failed for {self.ckpt_dir!r}"
             ) from e
@@ -203,6 +212,7 @@ class AsyncCheckpointWriter:
             state, history=json_safe(state.history),
             meta=json_safe(state.meta),
             buffer_meta=json_safe(state.buffer_meta))
+        guards.jitter_point("ckpt-submit")
         self._q.put((state, perf.round_token()))
 
     def flush(self) -> None:

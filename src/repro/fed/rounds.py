@@ -163,8 +163,12 @@ class FedConfig:
     # the warm-in rounds raises).  Execution-only: guards never change a
     # computed bit, they only turn silent performance regressions into
     # errors.  Sharded engines only — the loop engine feeds numpy batches
-    # straight into jit by design.
-    guards: bool = False
+    # straight into jit by design.  The string value "jitter" additionally
+    # arms the schedule-jitter race harness (guards.enable_jitter):
+    # deterministic seeded sleeps at every thread-handoff point stretch the
+    # prefetch/async-ckpt interleavings adversarially — histories must stay
+    # bitwise identical (DESIGN.md §16).
+    guards: bool | str = False
     seed: int = 0
 
     def __post_init__(self):
@@ -260,6 +264,10 @@ class FedConfig:
                 f"ckpt_keep must be >= 1 or None, got {self.ckpt_keep}")
         if self.resume and not self.ckpt_dir:
             raise ValueError("resume=True needs ckpt_dir")
+        if self.guards not in (False, True, "jitter"):
+            raise ValueError(
+                f"guards must be False, True, or 'jitter', got "
+                f"{self.guards!r}")
         if self.guards and self.engine != "sharded":
             raise ValueError(
                 "guards=True requires engine='sharded': the loop engine "

@@ -385,8 +385,9 @@ class RoundScheduler:
         # numerics.  Its [seed, round+1] shape cannot meet any salted
         # stream — those all have entropy length >= 3.
         return np.random.default_rng(
-            np.random.SeedSequence([self.seed & 0x7FFFFFFF,
-                                    round_index + 1]))  # fedlint: allow=FL001
+            np.random.SeedSequence(
+                [self.seed & 0x7FFFFFFF, round_index + 1]
+            ))  # fedlint: allow=FL001 -- legacy pre-registry stream; its 2-elt shape collides with no salted stream and retro-salting would invalidate committed numerics
 
     # ---------------------------------------------------------- speed model
     def _is_straggler(self, client: int) -> bool:

@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import perf
+from repro import guards, perf
 from repro.core import cluster_collectives as cc
 from repro.core.distill import distillation_loss, softmax_cross_entropy
 from repro.fed.schedule import RoundPlan
@@ -190,6 +190,7 @@ class SlotStager:
         box = {}
 
         def work():
+            guards.jitter_point("slot-prefetch")
             try:
                 box["staged"] = stage_on_slots(self.mesh, plan, *self.arrays)
             except Exception as e:   # pragma: no cover - surfaced via fallback
@@ -206,6 +207,7 @@ class SlotStager:
             return None
         _, th, box = self._pending
         self._pending = None
+        guards.jitter_point("slot-stage")
         th.join()
         return box.get("staged")     # error -> None -> sync retry raises it
 
@@ -261,6 +263,7 @@ class WaveStager:
         pend = self._pending.pop(key, None)
         if pend is not None:
             th, box = pend
+            guards.jitter_point("wave-stage")
             t0 = time.perf_counter()
             th.join()
             wait = time.perf_counter() - t0
@@ -290,6 +293,7 @@ class WaveStager:
         box: dict = {}
 
         def work():
+            guards.jitter_point("wave-prefetch")
             t0 = time.perf_counter()
             try:
                 box["staged"] = self._gather(plan)
@@ -300,6 +304,12 @@ class WaveStager:
         th = threading.Thread(target=work, daemon=True, name="wave-prefetch")
         th.start()
         self._pending[key] = (th, box)
+        # Pending-dict eviction is main-thread-only: the evicted entry's
+        # worker keeps running against ITS OWN box and is never adopted —
+        # stage() for that key falls back to a synchronous gather.  The
+        # jitter point lets the race harness stretch this window
+        # (tests/test_race_harness.py eviction regression).
+        guards.jitter_point("wave-evict")
         while len(self._pending) > self.capacity:
             self._pending.pop(next(iter(self._pending)))
 

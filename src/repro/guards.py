@@ -27,12 +27,27 @@ Thread-locality: the transfer guard is thread-local, so the async
 checkpoint writer's device->host pulls on its own thread are unaffected
 by a guard on the driver thread.  The compile counter is process-global
 on purpose — a recompile is a regression no matter which thread asks.
+
+* schedule-jitter race harness (DESIGN.md §16) — ``enable_jitter(seed)``
+  arms ``jitter_point(tag)`` call sites threaded through every
+  thread-handoff edge of the overlap machinery (stager prefetch workers,
+  the wave LRU, the async checkpoint writer).  Each call sleeps a small,
+  DETERMINISTIC duration derived from ``(seed, tag, per-tag counter)``,
+  forcing adversarial interleavings — prefetch completing before/after
+  the consuming ``stage``, checkpoint writes straddling round
+  boundaries — without any randomness across runs.  Correctness claim
+  under test: histories are bitwise identical with jitter on vs. off,
+  because threads only ever overlap *timing*, never sources of truth.
+  Off by default; ``jitter_point`` is a no-op (one dict lookup) unless
+  ``FedConfig.guards == "jitter"`` armed it.
 """
 from __future__ import annotations
 
 import contextlib
 import gc
+import hashlib
 import threading
+import time
 
 import jax
 
@@ -110,6 +125,48 @@ def no_implicit_transfers():
     """
     with jax.transfer_guard_host_to_device("disallow"):
         yield
+
+
+# ------------------------------------------------------ schedule jitter
+_jitter_seed: int | None = None
+_jitter_counts: dict[str, int] = {}
+_JITTER_MAX_S = 0.02    # longest injected sleep; enough to flip any race
+
+
+def enable_jitter(seed: int) -> None:
+    """Arm the race harness: every ``jitter_point`` sleeps a deterministic
+    amount derived from ``(seed, tag, firing index)``."""
+    global _jitter_seed
+    with _lock:
+        _jitter_seed = int(seed)
+        _jitter_counts.clear()
+
+
+def disable_jitter() -> None:
+    global _jitter_seed
+    with _lock:
+        _jitter_seed = None
+        _jitter_counts.clear()
+
+
+def jitter_enabled() -> bool:
+    with _lock:
+        return _jitter_seed is not None
+
+
+def jitter_point(tag: str) -> None:
+    """A named thread-handoff edge.  No-op unless ``enable_jitter`` armed
+    the harness; armed, it sleeps 0..20ms chosen by hashing ``(seed, tag,
+    n-th firing of this tag)`` — the schedule is adversarial (every edge
+    gets stretched differently every time) yet exactly reproducible."""
+    with _lock:
+        if _jitter_seed is None:
+            return
+        n = _jitter_counts.get(tag, 0)
+        _jitter_counts[tag] = n + 1
+        key = f"{_jitter_seed}:{tag}:{n}".encode()
+    h = int.from_bytes(hashlib.blake2b(key, digest_size=4).digest(), "big")
+    time.sleep((h % 1024) / 1024.0 * _JITTER_MAX_S)
 
 
 @contextlib.contextmanager

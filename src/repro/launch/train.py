@@ -204,12 +204,16 @@ def main():
     fl.add_argument("--async-ckpt", action="store_true", dest="async_ckpt",
                     help="write round checkpoints on a background thread "
                          "(atomic publish; identical bytes to sync writes)")
-    fl.add_argument("--guards", action="store_true",
+    fl.add_argument("--guards", nargs="?", const=True, default=False,
+                    choices=[True, False, "jitter"], metavar="[jitter]",
                     help="run steady-state rounds under the runtime "
                          "sanitizers (src/repro/guards.py): implicit "
                          "host<->device transfers and post-warm-in "
                          "recompiles raise instead of silently slowing the "
-                         "run (sharded engine only)")
+                         "run (sharded engine only); '--guards jitter' "
+                         "additionally injects deterministic seeded sleeps "
+                         "at every thread handoff (race harness, DESIGN.md "
+                         "§16) — histories must stay bit-identical")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

@@ -1,0 +1,14 @@
+"""FL000 fixture: bare pragmas (no `` -- reason`` suffix) are findings."""
+
+
+def reasoned(x):
+    return x.tobytes()  # fedlint: allow=FL005 -- demo of a reasoned pragma; not reported
+
+
+def bare(x):
+    return x.tobytes()  # VIOLATION bare pragma  # fedlint: allow=FL005
+
+
+# VIOLATION comment-only bare pragma, and allow=all cannot self-allowlist FL000  # fedlint: allow=all
+def also_bare(x):
+    return x

@@ -5,4 +5,4 @@ import numpy as np
 def legacy(seed, r):
     # pre-registry stream kept for numerics compatibility
     return np.random.default_rng(
-        np.random.SeedSequence([seed, r]))  # fedlint: allow=FL001
+        np.random.SeedSequence([seed, r]))  # fedlint: allow=FL001 -- legacy stream kept for numerics compatibility

@@ -25,3 +25,58 @@ def finish(tp_k, upd):
 
 
 finish_jit = jax.jit(finish, donate_argnums=(0,))  # VIOLATION: canonical param donated
+
+
+# ----- interprocedural cases (fedlint v2 call-graph pass) -----------------
+donor_step = jax.jit(lambda p, b: p, donate_argnums=(0,))
+
+
+def forwarding_helper(p, x):
+    return donor_step(p, x)     # donates its own param 0 (summary)
+
+
+def donated_through_helper(params, x):
+    out = forwarding_helper(params, x)
+    return params + out         # VIOLATION: params donated through the helper
+
+
+class Trainer:
+    def __init__(self, params):
+        self.params = params
+        self.step = jax.jit(lambda p, b: p, donate_argnums=(0,))
+
+    def run(self, x):
+        out = self.step(self.params, x)
+        return out + self._norm()   # VIOLATION: helper reads self.params after donation
+
+    def _norm(self):
+        return self.params.sum()
+
+
+class DeepTrainer:
+    def __init__(self, params):
+        self.params = params
+        self.dstep = jax.jit(lambda p, b: p, donate_argnums=(0,))
+
+    def go(self, x):
+        out = self.dstep(self.params, x)
+        return out + self._outer()  # VIOLATION: transitive helper read after donation
+
+    def _outer(self):
+        return self._inner() * 2
+
+    def _inner(self):
+        return self.params.sum()
+
+
+class SafeTrainer:
+    def __init__(self, params):
+        self.params = params
+        self.sstep = jax.jit(lambda p, b: p, donate_argnums=(0,))
+
+    def run_safe(self, x):
+        self.params = self.sstep(self.params, x)
+        return self._norm2()        # ok: rebound to the result before the helper
+
+    def _norm2(self):
+        return self.params.sum()

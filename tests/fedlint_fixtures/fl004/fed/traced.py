@@ -27,3 +27,28 @@ def static_ok(x, n):
     if n > 2:               # ok: n is a static (Python) argument
         return x * n
     return x
+
+
+# ----- interprocedural cases (fedlint v2 call-graph pass) -----------------
+def leak(v):
+    return float(v)             # escapes its own param (summary)
+
+
+def deep_leak(v):
+    return leak(v)              # forwards into an escaping helper (summary)
+
+
+@jax.jit
+def through_helper(x):
+    return leak(x)              # VIOLATION: x concretized inside leak()
+
+
+@jax.jit
+def through_two_helpers(x):
+    return deep_leak(x)         # VIOLATION: concretized two helpers deep
+
+
+@jax.jit
+def helper_on_host_value(x, meta=None):
+    n = leak(3.0)               # ok: the escaping arg is a host value
+    return x * n

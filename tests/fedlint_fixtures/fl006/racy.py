@@ -1,0 +1,70 @@
+"""FL006 fixture: attributes mutated from both a worker thread and
+main-thread methods must be written under a held lock (or be a
+queue/lock handoff)."""
+import queue
+import threading
+
+
+class RacyStager:
+    """Shares ``_staged`` and ``_error`` across the thread boundary with a
+    lock it never holds."""
+
+    def __init__(self):
+        self._staged = {}
+        self._error = None
+        self._q = queue.Queue()
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()             # ok: Queue is its own handoff
+            self._staged[item] = item        # VIOLATION: unlocked store (worker side)
+            self._error = None               # VIOLATION: unlocked rebind (worker side)
+
+    def stage(self, key):
+        self._staged.pop(key, None)          # VIOLATION: unlocked mutator (main side)
+        return dict(self._staged)
+
+    def fail(self, e):
+        self._error = e                      # VIOLATION: unlocked rebind (main side)
+
+
+class SubmitStager:
+    """Same bug class through an executor ``submit`` instead of Thread."""
+
+    def __init__(self, pool):
+        self.pool = pool
+        self._jobs = []
+        pool.submit(self._drain)
+
+    def _drain(self):
+        self._jobs.clear()                   # VIOLATION: unlocked mutator (submitted side)
+
+    def push(self, job):
+        self._jobs.append(job)               # VIOLATION: unlocked append (main side)
+
+
+class LockedStager:
+    """The disciplined twin: every shared write holds the lock — clean."""
+
+    def __init__(self):
+        self._staged = {}
+        self._q = queue.Queue()
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()             # ok: blessed queue handoff
+            with self._lock:
+                self._staged[item] = item    # ok: lock held
+
+    def stage(self, key):
+        with self._lock:
+            return self._staged.pop(key, None)   # ok: lock held
+
+    def main_only(self, note):
+        self.note = note                     # ok: never touched by the worker

@@ -1,0 +1,41 @@
+"""FL007 fixture: blocking calls inside the steady-round hot spans
+(``perf.span("stage"|"compute"|"aggregate")``), including through
+module-local helpers called from hot code."""
+import time
+
+import numpy as np
+
+from repro import perf
+
+
+def run_round(stager, q, th, out, xs):
+    with perf.span("stage"):
+        staged = stager.stage(xs)        # ok: attribute boundary = blessed entry
+    with perf.span("compute"):
+        y = compute_fn(staged)
+        y.block_until_ready()            # VIOLATION: device sync in a hot span
+        q.put(y)                         # VIOLATION: blocking queue put in a hot span
+        q.put(y, block=False)            # ok: non-blocking handoff
+        time.sleep(0.1)                  # VIOLATION: sleep in a hot span
+        th.join()                        # VIOLATION: unbounded thread join in a hot span
+        th.join(0.5)                     # ok: bounded join
+        perf.add("loss", 0.0)            # ok: perf instrumentation is blessed
+    with perf.span("aggregate"):
+        log_metrics(out, y)
+    with perf.span("checkpoint"):
+        np.save(out, y)                  # ok: the checkpoint span is not a hot span
+    return y
+
+
+def compute_fn(staged):
+    return staged                        # hot via the compute span, but clean
+
+
+def log_metrics(out, y):
+    f = open(out, "a")                   # VIOLATION: file I/O inside a helper called from a hot span
+    f.write(str(y))
+    f.close()
+
+
+def between_rounds(out, y):
+    np.save(out, y)                      # ok: never called from a hot span

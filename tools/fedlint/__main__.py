@@ -18,7 +18,7 @@ from tools.fedlint.rules import RULE_DOCS, RULES
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.fedlint",
-        description="Repo-invariant static analysis (FL001-FL005).")
+        description="Repo-invariant static analysis (FL000-FL007).")
     parser.add_argument("paths", nargs="*", default=["src/repro"],
                         help="files or directories to scan "
                              "(default: src/repro)")

@@ -5,12 +5,24 @@ A ``Project`` is the parsed view of one source tree (the shipped
 plain functions ``rule(project) -> list[Finding]``; the engine owns the
 one thing every rule shares — the allowlist pragma:
 
-    x = something_flagged()   # fedlint: allow=FL004  <why it is safe>
+    x = something_flagged()   # fedlint: allow=FL004 -- <why it is safe>
 
 A pragma suppresses the named rules on every line of the statement that
 spans it (so a pragma on the closing line of a multi-line call covers the
 call), and — when it sits on a comment-only line — on the statement that
 starts on the next code line.  ``allow=all`` suppresses every rule.
+
+Every pragma must carry a `` -- reason`` suffix: a bare ``allow=`` is
+itself a finding (FL000), and FL000 findings are exempt from the
+allowlist — a pragma cannot vouch for itself.
+
+The engine also owns the module-local **call graph** (``CallGraph``) the
+interprocedural rules build on: functions/methods keyed by bare name,
+direct-call edges for bare-name and ``self.method(...)`` calls, and
+transitive closures over callees and external loads.  Calls through other
+objects (``self.stager.stage(...)``) deliberately do NOT propagate —
+crossing an attribute boundary is the blessed-entry-point escape hatch
+(FL007) and keeps the analysis module-local and cheap.
 """
 from __future__ import annotations
 
@@ -20,7 +32,9 @@ import re
 from pathlib import Path
 from typing import Callable, Iterable, Optional
 
-PRAGMA_RE = re.compile(r"#\s*fedlint:\s*allow=([A-Za-z0-9_,\s]+)")
+PRAGMA_RE = re.compile(
+    r"#\s*fedlint:\s*allow=([A-Za-z0-9_,\s]*[A-Za-z0-9_])"
+    r"(?:\s*--\s*(?P<reason>\S.*))?")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,19 +63,28 @@ class Module:
         self.source = source
         self.lines = source.splitlines()
         self.tree = ast.parse(source, filename=str(path))
+        self.pragmas = self._scan_pragmas()
         self._allowed = self._build_allowlist()
 
     # ------------------------------------------------------------- pragmas
-    def _pragma_lines(self) -> dict[int, set[str]]:
-        """1-based line -> set of rule ids allowed there ('all' wildcard)."""
-        out: dict[int, set[str]] = {}
+    def _scan_pragmas(self) -> dict[int, tuple[set[str], Optional[str]]]:
+        """1-based pragma line -> (allowed rule ids, `` -- reason`` text or
+        None).  The allowlist consumes the rule ids; FL000 audits the
+        reason — a bare pragma (no reason) is itself a finding."""
+        out: dict[int, tuple[set[str], Optional[str]]] = {}
         for i, text in enumerate(self.lines, start=1):
             m = PRAGMA_RE.search(text)
             if m:
-                rules = {tok.strip().upper() for tok in m.group(1).split(",")
-                         if tok.strip()}
-                out[i] = {"ALL" if r == "ALL" else r for r in rules}
+                rules = {tok.upper() for tok in
+                         re.split(r"[,\s]+", m.group(1).strip()) if tok}
+                reason = m.group("reason")
+                out[i] = ({"ALL" if r == "ALL" else r for r in rules},
+                          reason.strip() if reason else None)
         return out
+
+    def _pragma_lines(self) -> dict[int, set[str]]:
+        """1-based line -> set of rule ids allowed there ('all' wildcard)."""
+        return {ln: set(rules) for ln, (rules, _r) in self.pragmas.items()}
 
     def _build_allowlist(self) -> dict[int, set[str]]:
         """Expand pragma lines over the statements that span them."""
@@ -135,6 +158,102 @@ class Project:
                 if set(Path(m.rel).parts[:-1]) & set(names)]
 
 
+# ----------------------------------------------------------------- call graph
+class CallGraph:
+    """Module-local call graph for the interprocedural rule passes.
+
+    Functions and methods are keyed by BARE name (module-level defs, class
+    methods, and nested defs share one namespace — the same convention the
+    FL003 donor table uses, so ``self._finish(...)`` and ``finish(...)``
+    both resolve to the local definition).  Edges are DIRECT calls only: a
+    bare-name call, or a ``self.method(...)`` call, whose target is defined
+    in this module.  Calls through any other object
+    (``self.stager.stage(...)``) do NOT create edges on purpose — crossing
+    an attribute boundary is how code declares a blessed entry point, and
+    it keeps the closure module-local.
+    """
+
+    def __init__(self, module: Module):
+        self.module = module
+        self.functions: dict[str, ast.AST] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+        self._calls = {name: self._direct_calls(fn)
+                       for name, fn in self.functions.items()}
+        self._loads = {name: self._external_loads(fn)
+                       for name, fn in self.functions.items()}
+        self._closure: dict[str, frozenset[str]] = {}
+
+    @staticmethod
+    def callee_key(func: ast.AST) -> Optional[str]:
+        """Call target -> local-function key: bare names as-is, ``self.m``
+        by the attribute name; anything else is not a local edge."""
+        if isinstance(func, ast.Name):
+            return func.id
+        if (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Name)
+                and func.value.id == "self"):
+            return func.attr
+        return None
+
+    def _direct_calls(self, fn: ast.AST) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                key = self.callee_key(node.func)
+                if key in self.functions and self.functions[key] is not fn:
+                    out.add(key)
+        return out
+
+    def _external_loads(self, fn: ast.AST) -> set[str]:
+        """Identifiers a function reads from OUTSIDE its own scope:
+        ``self.attr`` chains plus global/closure names never bound locally
+        — what a helper call can observe of the caller's donated state."""
+        bound = {a.arg for a in ast.walk(fn) if isinstance(a, ast.arg)}
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, (ast.Store, ast.Del))):
+                bound.add(node.id)
+        loads: set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.ctx, ast.Load)):
+                d = dotted_name(node)
+                if d and d.startswith("self."):
+                    loads.add(d)
+            elif (isinstance(node, ast.Name)
+                  and isinstance(node.ctx, ast.Load)
+                  and node.id not in bound):
+                loads.add(node.id)
+        return loads
+
+    def transitive_callees(self, name: str) -> frozenset[str]:
+        """Every local function reachable from ``name`` via direct edges
+        (cycle-safe, memoised)."""
+        if name in self._closure:
+            return self._closure[name]
+        seen: set[str] = set()
+        stack = [name]
+        while stack:
+            for nxt in self._calls.get(stack.pop(), ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        out = frozenset(seen)
+        self._closure[name] = out
+        return out
+
+    def transitive_loads(self, name: str) -> set[str]:
+        """External loads of ``name`` and everything it transitively calls
+        — the FL003 read-after-donate check intersects this with the
+        consumed set at each helper call site."""
+        out = set(self._loads.get(name, ()))
+        for callee in self.transitive_callees(name):
+            out |= self._loads.get(callee, set())
+        return out
+
+
 # --------------------------------------------------------------- AST helpers
 def dotted_name(node: ast.AST) -> Optional[str]:
     """``a.b.c`` for Name/Attribute chains, else None."""
@@ -198,13 +317,18 @@ Rule = Callable[[Project], list[Finding]]
 
 def run_rules(project: Project, rules: Iterable[tuple[str, Rule]]
               ) -> list[Finding]:
-    """Run every rule, drop pragma-allowlisted findings, sort by location."""
+    """Run every rule, drop pragma-allowlisted findings, sort by location.
+
+    FL000 findings (bare pragmas) are exempt from the allowlist: a pragma
+    cannot vouch for itself, so ``# fedlint: allow=all`` on a reasonless
+    pragma line still reports."""
     by_rel = {m.rel: m for m in project.modules}
     findings: list[Finding] = []
     for _rule_id, fn in rules:
         for f in fn(project):
             mod = by_rel.get(f.path)
-            if mod is not None and mod.allows(f.rule, f.line):
+            if (f.rule != "FL000" and mod is not None
+                    and mod.allows(f.rule, f.line)):
                 continue
             findings.append(f)
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

@@ -1,19 +1,28 @@
-"""fedlint rules FL001-FL005 (rule catalog in DESIGN.md §14).
+"""fedlint rules FL000-FL007 (rule catalog in DESIGN.md §14 and §16).
 
 Each rule is ``check_flNNN(project) -> list[Finding]``.  Rules locate the
 repo anchors STRUCTURALLY (the ``SALT_*`` registry is wherever module-level
 ``SALT_*`` int constants live; ``FedConfig``/``fingerprint``/
-``EXECUTION_ONLY`` are found by name anywhere in the tree), so the same
-rules run unchanged over the shipped ``src/repro`` tree and over the seeded
-fixture trees in ``tests/fedlint_fixtures/``.
+``EXECUTION_ONLY`` are found by name anywhere in the tree; thread targets
+are wherever ``threading.Thread(target=...)``/``.submit(...)`` appear), so
+the same rules run unchanged over the shipped ``src/repro`` tree and over
+the seeded fixture trees in ``tests/fedlint_fixtures/``.
+
+FL003/FL004 are interprocedural within a module: the ``CallGraph`` in
+``core.py`` follows bare-name and ``self.method(...)`` calls, so a donated
+binding read inside a helper called after the jitted call, or a traced
+value concretized two helpers deep, still reports at the offending call
+site.  Calls through any other object boundary (``self.stager.stage(...)``)
+intentionally stop propagation — that is the blessed-entry-point contract.
 """
 from __future__ import annotations
 
 import ast
 from typing import Optional
 
-from tools.fedlint.core import (Finding, Module, Project, assigned_names,
-                                dotted_name, int_tuple, last_segment)
+from tools.fedlint.core import (CallGraph, Finding, Module, Project,
+                                assigned_names, dotted_name, int_tuple,
+                                last_segment)
 
 # The canonical salt slot in every SeedSequence entropy list:
 # [seed, round-slot, SALT, ...extra discriminators].
@@ -42,6 +51,51 @@ CONCRETIZING_METHODS = {"item", "tolist", "tobytes"}
 # Array constructors whose comprehension-shaped argument bakes a Python
 # value into the array SHAPE (FL005).
 SHAPE_CONSTRUCTORS = {"asarray", "array", "stack", "concatenate"}
+
+# FL006: attribute types that are their own synchronization (writing through
+# them is an immutable-handoff, not a shared mutation) and the lock types
+# whose ``with self.<lock>:`` blocks count as guarded.
+THREAD_SAFE_TYPES = {
+    "Queue", "SimpleQueue", "LifoQueue", "PriorityQueue", "Lock", "RLock",
+    "Event", "Condition", "Semaphore", "BoundedSemaphore", "Barrier",
+}
+LOCK_TYPES = {"Lock", "RLock"}
+
+# FL006: method calls that mutate their receiver in place (list/set/dict/
+# queue mutators).  ``self.attr.append(...)`` is a write to ``attr``.
+MUTATING_METHODS = {
+    "append", "extend", "insert", "add", "remove", "discard", "clear",
+    "update", "setdefault", "pop", "popitem", "put", "put_nowait",
+    "get", "get_nowait", "task_done",
+}
+
+# FL006: attribute names exempted by construction (none today — the queue/
+# lock structural blessing covers the shipped tree; extend with care).
+FL006_BLESSED: frozenset[str] = frozenset()
+
+# FL007: the steady-round compute spans (perf.span names) that must never
+# block, and the call bases blessed to appear inside them (instrumentation
+# and the jitter harness are the sanctioned entry points).
+HOT_SPANS = {"stage", "compute", "aggregate"}
+FL007_BLESSED_BASES = ("perf", "guards")
+
+
+# =========================================================== FL000: pragmas
+def check_fl000(project: Project) -> list[Finding]:
+    """Every ``# fedlint: allow=...`` pragma must carry a `` -- reason``
+    suffix.  FL000 findings are exempt from the allowlist (core.run_rules):
+    a pragma cannot vouch for itself."""
+    findings: list[Finding] = []
+    for m in project.modules:
+        for line, (rules, reason) in sorted(m.pragmas.items()):
+            if reason is None:
+                findings.append(Finding(
+                    "FL000", m.rel, line,
+                    f"bare fedlint pragma (allow={','.join(sorted(rules))}):"
+                    " every allowlist entry needs a ' -- reason' suffix"
+                    " saying why the rule is waived here (auditable"
+                    " allowlists, DESIGN.md §16)"))
+    return findings
 
 
 # =========================================================== FL001: streams
@@ -360,6 +414,45 @@ def _donatable_ident(node: ast.AST) -> Optional[str]:
     return None
 
 
+def _helper_donation_summaries(graph: CallGraph,
+                               donors: dict[str, tuple[int, ...]]
+                               ) -> dict[str, tuple[int, ...]]:
+    """Module-local helpers that forward a parameter into a donated
+    position — calling them donates that argument too.  Fixpoint so a
+    helper forwarding into another forwarding helper is still caught.
+    Summary indices are CALL-ARG positions (``self`` excluded)."""
+    summaries: dict[str, tuple[int, ...]] = {}
+    changed = True
+    while changed:
+        changed = False
+        table = {**summaries, **donors}
+        for name, fn in graph.functions.items():
+            if name in donors:
+                continue
+            params = [a.arg for a in fn.args.args]
+            offset = 1 if params and params[0] == "self" else 0
+            donated = set(summaries.get(name, ()))
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                key = _donor_key(node.func)
+                if key is None or key not in table:
+                    continue
+                for i in table[key]:
+                    if i >= len(node.args):
+                        continue
+                    arg = node.args[i]
+                    if isinstance(arg, ast.Name) and arg.id in params:
+                        pos = params.index(arg.id) - offset
+                        if pos >= 0:
+                            donated.add(pos)
+            new = tuple(sorted(donated))
+            if new and new != summaries.get(name):
+                summaries[name] = new
+                changed = True
+    return summaries
+
+
 def check_fl003(project: Project) -> list[Finding]:
     findings: list[Finding] = []
     for m in project.modules:
@@ -367,10 +460,13 @@ def check_fl003(project: Project) -> list[Finding]:
         donors = _collect_donors(m)
         if not donors:
             continue
+        graph = CallGraph(m)
+        # helpers that forward args into donated positions donate too
+        donors = {**_helper_donation_summaries(graph, donors), **donors}
         for fn in ast.walk(m.tree):
             if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
-            findings.extend(_scan_consumed(m, fn, donors))
+            findings.extend(_scan_consumed(m, fn, donors, graph))
     return findings
 
 
@@ -391,8 +487,12 @@ def _flat_stmts(body: list[ast.stmt]) -> list[ast.stmt]:
 
 
 def _scan_consumed(m: Module, fn: ast.FunctionDef,
-                   donors: dict[str, tuple[int, ...]]) -> list[Finding]:
-    """Linear read-after-donate scan over one function body."""
+                   donors: dict[str, tuple[int, ...]],
+                   graph: Optional[CallGraph] = None) -> list[Finding]:
+    """Linear read-after-donate scan over one function body, with an
+    interprocedural branch: a call to a module-local helper whose
+    transitive external loads touch a consumed binding reads donated
+    memory even though no load appears at this call site."""
     findings: list[Finding] = []
     consumed: dict[str, int] = {}      # identifier -> donating call line
     for stmt in _flat_stmts(fn.body):
@@ -406,6 +506,24 @@ def _scan_consumed(m: Module, fn: ast.FunctionDef,
                     f"callee at line {consumed[ident]} — the buffer was "
                     "consumed in place (DESIGN.md §13 donation contract)"))
                 del consumed[ident]    # report once per donation
+        # 1b. helper calls that READ a consumed binding from inside
+        # (module-local functions only: attribute-boundary calls are the
+        # blessed entry points and do not propagate)
+        if graph is not None and consumed:
+            for node in _own_nodes(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                key = CallGraph.callee_key(node.func)
+                if key is None or key not in graph.functions:
+                    continue
+                for ident in sorted(set(consumed) &
+                                    graph.transitive_loads(key)):
+                    findings.append(Finding(
+                        "FL003", m.rel, node.lineno,
+                        f"'{ident}' (donated at line {consumed[ident]}) is "
+                        f"read inside '{key}' called here — helpers see "
+                        "donated buffers too (DESIGN.md §13)"))
+                    del consumed[ident]
         # 2. donating calls in this statement consume their donated args
         for node in _own_nodes(stmt):
             if not isinstance(node, ast.Call):
@@ -525,13 +643,84 @@ def check_fl004(project: Project) -> list[Finding]:
     findings: list[Finding] = []
     for m in project.in_dirs("fed", "core", "kernels"):
         np_names = _np_aliases(m)
+        graph = CallGraph(m)
+        summaries = _concretizing_summaries(graph, np_names)
         for fn, static in _traced_defs(m):
-            findings.extend(_scan_traced(m, fn, static, np_names))
+            findings.extend(_scan_traced(m, fn, static, np_names, summaries))
     return findings
 
 
+def _param_escapes(fn: ast.AST, param: str,
+                   summaries: dict[str, tuple[int, ...]],
+                   np_names: set[str]) -> bool:
+    """Does a value bound to ``param`` escape to the Python side inside
+    ``fn`` (branch/concretizer/host numpy), directly or through another
+    summarised helper?"""
+    tainted = {param}
+    stmts = _all_stmts(fn)
+    for _ in range(2):
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if _expr_tainted(stmt.value, tainted):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    for t in targets:
+                        tainted.update(assigned_names(t))
+    for node in (n for s in stmts for n in ast.walk(s)):
+        if (isinstance(node, (ast.If, ast.While))
+                and _expr_tainted(node.test, tainted)):
+            return True
+        if not isinstance(node, ast.Call):
+            continue
+        seg = last_segment(node.func)
+        if (seg in CONCRETIZERS and isinstance(node.func, ast.Name)
+                and any(_expr_tainted(a, tainted) for a in node.args)):
+            return True
+        if isinstance(node.func, ast.Attribute):
+            if (node.func.attr in CONCRETIZING_METHODS
+                    and _expr_tainted(node.func.value, tainted)):
+                return True
+            if (isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in np_names
+                    and any(_expr_tainted(a, tainted) for a in node.args)):
+                return True
+        key = CallGraph.callee_key(node.func)
+        for i in (summaries.get(key, ()) if key else ()):
+            if i < len(node.args) and _expr_tainted(node.args[i], tainted):
+                return True
+    return False
+
+
+def _concretizing_summaries(graph: CallGraph, np_names: set[str]
+                            ) -> dict[str, tuple[int, ...]]:
+    """Call-arg indices through which each module-local function escapes a
+    value to the Python side.  Fixpoint over helper->helper forwarding so
+    a concretization two calls deep still maps back to the outermost call
+    site inside traced code.  Indices are CALL-ARG positions (``self``
+    excluded)."""
+    summaries: dict[str, tuple[int, ...]] = {}
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in graph.functions.items():
+            params = [a.arg for a in fn.args.args]
+            offset = 1 if params and params[0] == "self" else 0
+            escaping = set(summaries.get(name, ()))
+            for i, p in enumerate(params[offset:]):
+                if i not in escaping and _param_escapes(fn, p, summaries,
+                                                        np_names):
+                    escaping.add(i)
+            new = tuple(sorted(escaping))
+            if new and new != summaries.get(name):
+                summaries[name] = new
+                changed = True
+    return summaries
+
+
 def _scan_traced(m: Module, fn: ast.AST, static: set[str],
-                 np_names: set[str]) -> list[Finding]:
+                 np_names: set[str],
+                 summaries: Optional[dict[str, tuple[int, ...]]] = None
+                 ) -> list[Finding]:
     """Taint-and-flag over one traced function: taint starts at the traced
     params (of the function and of every nested def — nested defs trace
     too), flows through simple assignments, and is flagged wherever a
@@ -600,6 +789,18 @@ def _scan_traced(m: Module, fn: ast.AST, static: set[str],
                              f"{node.func.value.id}.{node.func.attr}() on "
                              f"traced value '{name}' inside traced code — "
                              "use jnp")
+            if summaries:
+                key = CallGraph.callee_key(node.func)
+                for i in (summaries.get(key, ()) if key else ()):
+                    if i >= len(node.args):
+                        continue
+                    for name in sorted(
+                            _tainted_names(node.args[i], tainted)):
+                        flag(node.lineno,
+                             f"traced value '{name}' escapes through "
+                             f"helper '{key}' (its argument {i} is "
+                             "branched on or concretized inside) — "
+                             "helpers trace with their caller")
     return findings
 
 
@@ -673,15 +874,302 @@ def check_fl005(project: Project) -> list[Finding]:
     return findings
 
 
+# ====================================================== FL006: lock discipline
+def _class_functions(cls: ast.ClassDef) -> dict[str, ast.AST]:
+    """Every def lexically inside the class, keyed by bare name — methods
+    and their nested worker defs share one namespace, mirroring CallGraph."""
+    out: dict[str, ast.AST] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _thread_entries(cls: ast.ClassDef) -> set[str]:
+    """Function names this class hands to another thread:
+    ``Thread(target=X)`` targets and ``.submit(X, ...)`` callables, where
+    X is a bare name (nested worker def) or ``self.method``."""
+    out: set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        if last_segment(node.func) == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    key = CallGraph.callee_key(kw.value)
+                    if key:
+                        out.add(key)
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "submit" and node.args):
+            key = CallGraph.callee_key(node.args[0])
+            if key:
+                out.add(key)
+    return out
+
+
+def _reachable(entries: set[str], funcs: dict[str, ast.AST]) -> set[str]:
+    """Transitive closure of ``entries`` over bare-name/``self.m`` calls
+    within the class's own functions."""
+    seen = {e for e in entries if e in funcs}
+    stack = list(seen)
+    while stack:
+        for node in ast.walk(funcs[stack.pop()]):
+            if isinstance(node, ast.Call):
+                key = CallGraph.callee_key(node.func)
+                if key in funcs and key not in seen:
+                    seen.add(key)
+                    stack.append(key)
+    return seen
+
+
+def _init_attr_types(funcs: dict[str, ast.AST]) -> dict[str, Optional[str]]:
+    """``self.X = Ctor(...)`` assignments in ``__init__``: attr -> the
+    constructor's last segment (the structural-blessing table)."""
+    init = funcs.get("__init__")
+    types: dict[str, Optional[str]] = {}
+    if init is None:
+        return types
+    for stmt in ast.walk(init):
+        if not (isinstance(stmt, (ast.Assign, ast.AnnAssign))
+                and isinstance(stmt.value, ast.Call)):
+            continue
+        seg = last_segment(stmt.value.func)
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            d = dotted_name(t)
+            if d and d.startswith("self.") and d.count(".") == 1:
+                types[d.split(".")[1]] = seg
+    return types
+
+
+def _self_attr_of(node: ast.AST) -> Optional[str]:
+    """``self.X`` (exactly one level) -> ``X``."""
+    d = dotted_name(node)
+    if d and d.startswith("self.") and d.count(".") == 1:
+        return d.split(".")[1]
+    return None
+
+
+def _attr_writes(fn: ast.AST, lock_attrs: set[str]
+                 ) -> list[tuple[str, int, bool]]:
+    """(attr, line, lock_held) for every write to ``self.<attr>`` in the
+    function body: attribute (re)binds, ``self.X[...] = ...`` item stores,
+    and in-place mutator calls ``self.X.append/pop/put(...)``.  Nested
+    defs are skipped — they run on whichever side spawns them and are
+    scanned as their own functions."""
+    out: list[tuple[str, int, bool]] = []
+
+    def collect(stmt: ast.stmt, held: bool) -> None:
+        for node in _own_nodes(stmt):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.ctx, (ast.Store, ast.Del))
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "self"):
+                out.append((node.attr, node.lineno, held))
+            elif (isinstance(node, ast.Subscript)
+                  and isinstance(node.ctx, (ast.Store, ast.Del))):
+                attr = _self_attr_of(node.value)
+                if attr:
+                    out.append((attr, node.lineno, held))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in MUTATING_METHODS):
+                attr = _self_attr_of(node.func.value)
+                if attr:
+                    out.append((attr, node.lineno, held))
+
+    def visit(stmts: list[ast.stmt], held: bool) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            collect(stmt, held)
+            inner = held
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    attr = _self_attr_of(item.context_expr)
+                    if attr in lock_attrs:
+                        inner = True
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(stmt, field, []) or [], inner)
+            for h in getattr(stmt, "handlers", []) or []:
+                visit(h.body, inner)
+
+    visit(fn.body, False)
+    return out
+
+
+def check_fl006(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in project.modules:
+        for cls in ast.walk(m.tree):
+            if isinstance(cls, ast.ClassDef):
+                findings.extend(_scan_class_locks(m, cls))
+    return findings
+
+
+def _scan_class_locks(m: Module, cls: ast.ClassDef) -> list[Finding]:
+    funcs = _class_functions(cls)
+    thread_side = _reachable(_thread_entries(cls), funcs)
+    if not thread_side:
+        return []
+    attr_types = _init_attr_types(funcs)
+    lock_attrs = {a for a, seg in attr_types.items() if seg in LOCK_TYPES}
+    blessed = ({a for a, seg in attr_types.items()
+                if seg in THREAD_SAFE_TYPES}
+               | set(FL006_BLESSED) | lock_attrs)
+    methods = {n.name for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    # __init__ writes happen-before the thread starts; nested defs outside
+    # the thread closure run inline on the main side.
+    t_writes: list[tuple[str, int, bool, str]] = []
+    m_writes: list[tuple[str, int, bool, str]] = []
+    for name, fn in funcs.items():
+        if name == "__init__":
+            continue
+        side = t_writes if name in thread_side else (
+            m_writes if name in methods else None)
+        if side is None:
+            continue
+        side.extend((a, ln, held, name)
+                    for a, ln, held in _attr_writes(fn, lock_attrs))
+    shared = ({a for a, *_ in t_writes} & {a for a, *_ in m_writes}) - blessed
+    findings = []
+    for writes, here, there in ((t_writes, "worker-thread", "main-thread"),
+                                (m_writes, "main-thread", "worker-thread")):
+        for a, ln, held, fn_name in writes:
+            if a in shared and not held:
+                findings.append(Finding(
+                    "FL006", m.rel, ln,
+                    f"'{cls.name}.{a}' is mutated here ({here} side, in "
+                    f"'{fn_name}') without a held lock, and also from the "
+                    f"{there} side — every write to thread-shared state "
+                    "must sit under `with self.<Lock>:` or hand off "
+                    "through a queue/immutable snapshot (DESIGN.md §16)"))
+    return sorted(findings, key=lambda f: f.line)
+
+
+# =================================================== FL007: hot-path blocking
+def _is_hot_span(expr: ast.AST) -> bool:
+    """``perf.span("stage"|"compute"|"aggregate", ...)`` as a with-item."""
+    return (isinstance(expr, ast.Call)
+            and last_segment(expr.func) == "span"
+            and (dotted_name(expr.func) or "").split(".")[0] == "perf"
+            and bool(expr.args)
+            and isinstance(expr.args[0], ast.Constant)
+            and expr.args[0].value in HOT_SPANS)
+
+
+def check_fl007(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for m in project.in_dirs("fed"):
+        np_names = _np_aliases(m)
+        graph = CallGraph(m)
+        hot_stmts: list[ast.stmt] = []
+        for node in ast.walk(m.tree):
+            if (isinstance(node, (ast.With, ast.AsyncWith))
+                    and any(_is_hot_span(i.context_expr)
+                            for i in node.items)):
+                hot_stmts.extend(_flat_stmts(node.body))
+        if not hot_stmts:
+            continue
+        # a module-local helper called from hot code is hot too; calls
+        # through other objects (self.stager.stage) are the blessed
+        # entry points and stop propagation
+        hot_fns: set[str] = set()
+        for stmt in hot_stmts:
+            for node in _own_nodes(stmt):
+                if isinstance(node, ast.Call):
+                    key = CallGraph.callee_key(node.func)
+                    if key in graph.functions:
+                        hot_fns.add(key)
+        for entry in sorted(hot_fns):
+            hot_fns |= set(graph.transitive_callees(entry))
+        for name in sorted(hot_fns):
+            hot_stmts.extend(_flat_stmts(graph.functions[name].body))
+        findings.extend(_blocking_findings(m, hot_stmts, np_names))
+    return findings
+
+
+def _blocking_findings(m: Module, stmts: list[ast.stmt],
+                       np_names: set[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    seen: set[tuple[int, str]] = set()
+
+    def flag(line: int, msg: str) -> None:
+        if (line, msg) not in seen:
+            seen.add((line, msg))
+            findings.append(Finding("FL007", m.rel, line, msg))
+
+    for stmt in stmts:
+        for node in _own_nodes(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            base = (dotted_name(node.func) or "").split(".")[0]
+            if base in FL007_BLESSED_BASES:
+                continue           # perf/guards instrumentation is sanctioned
+            if isinstance(node.func, ast.Name) and node.func.id == "open":
+                flag(node.lineno,
+                     "open() inside a steady-round hot span — file I/O "
+                     "belongs on the async checkpoint path, outside "
+                     "stage/compute/aggregate")
+                continue
+            if not isinstance(node.func, ast.Attribute):
+                continue
+            attr = node.func.attr
+            if attr == "block_until_ready":
+                flag(node.lineno,
+                     ".block_until_ready() inside a hot span — device "
+                     "syncs belong outside stage/compute/aggregate "
+                     "(measure dispatch, not completion)")
+            elif attr == "put" and not any(
+                    kw.arg == "block"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is False for kw in node.keywords):
+                flag(node.lineno,
+                     "blocking queue .put() inside a hot span — use "
+                     "put_nowait()/put(..., block=False) or move the "
+                     "handoff outside the span")
+            elif attr == "join" and not node.args and not node.keywords:
+                flag(node.lineno,
+                     "unbounded .join() inside a hot span — a no-timeout "
+                     "thread join stalls the round; bound it or move it "
+                     "off the hot path")
+            elif attr == "sleep" and base == "time":
+                flag(node.lineno, "time.sleep() inside a hot span")
+            elif attr in ("write_text", "write_bytes",
+                          "read_text", "read_bytes"):
+                flag(node.lineno,
+                     f".{attr}() file I/O inside a hot span — route it "
+                     "through the blessed checkpoint writer outside the "
+                     "span")
+            elif (base in np_names
+                  and attr in ("save", "savez", "savez_compressed",
+                               "load", "savetxt", "loadtxt")):
+                flag(node.lineno,
+                     f"{base}.{attr}() file I/O inside a hot span")
+            elif attr == "dump" and base in ("json", "pickle"):
+                flag(node.lineno,
+                     f"{base}.dump() file I/O inside a hot span")
+    return findings
+
+
 RULES: list[tuple[str, object]] = [
+    ("FL000", check_fl000),
     ("FL001", check_fl001),
     ("FL002", check_fl002),
     ("FL003", check_fl003),
     ("FL004", check_fl004),
     ("FL005", check_fl005),
+    ("FL006", check_fl006),
+    ("FL007", check_fl007),
 ]
 
 RULE_DOCS = {
+    "FL000": "pragma hygiene: every '# fedlint: allow=' carries a"
+             " ' -- reason' suffix (bare pragmas are findings and cannot"
+             " self-allowlist)",
     "FL001": "PRNG stream discipline: registered SALT_* at entropy index 2,"
              " one tuple shape per salt",
     "FL002": "fingerprint completeness: FedConfig fields == fingerprint keys"
@@ -693,4 +1181,11 @@ RULE_DOCS = {
     "FL005": "recompile safety: no .tobytes() keys outside the blessed"
              " stagers (SlotStager/WaveStager), no comprehension-shaped jnp"
              " constructors",
+    "FL006": "lock discipline: attributes mutated from both a worker thread"
+             " and main-thread methods must be written under a held lock or"
+             " be a queue/lock/event handoff",
+    "FL007": "hot-path latency: no device syncs, blocking queue puts,"
+             " unbounded joins, sleeps, or file I/O inside the"
+             " stage/compute/aggregate spans (perf/guards entry points are"
+             " blessed)",
 }

@@ -1,0 +1,19 @@
+"""shapecert: compile-surface certification for the packed federated
+runtime (DESIGN.md §16).
+
+``python -m tools.shapecert --out SHAPES.json`` walks the real
+``FedConfig`` grid (engines x algorithms x waves x async x guards), runs
+``jax.eval_shape`` over each sharded strategy's round-program factories,
+and emits a canonical JSON report of every (program, input-shapes,
+dtypes, output-shapes) tuple.  ``--check SHAPES.json`` regenerates the
+report and diffs it against the committed one, then enforces the wave
+invariant: compiled shapes may depend on ``wave_slots`` (the mesh), never
+on the cohort or client universe behind it.
+"""
+from tools.shapecert.cert import (  # noqa: F401
+    build_grid,
+    certify,
+    certify_config,
+    check_invariants,
+    diff_reports,
+)

@@ -1,0 +1,80 @@
+"""CLI: ``python -m tools.shapecert --out SHAPES.json`` regenerates the
+compile-surface certificate; ``--check SHAPES.json`` regenerates and
+diffs against the committed one, then runs the wave-invariance check.
+
+Exit codes: 0 certified / in sync, 1 invariant violation or drift from
+the committed report, 2 usage error.
+"""
+import argparse
+import os
+import sys
+from pathlib import Path
+
+# Abstract evaluation needs real devices for the mesh, not real compute:
+# pin a deterministic 8-device host platform BEFORE jax import (no-op if
+# the caller already configured the env, e.g. under pytest or CI).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+REPO = Path(__file__).resolve().parents[2]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+import json
+
+from tools.shapecert.cert import (  # noqa: E402
+    canonical_json,
+    certify,
+    check_invariants,
+    diff_reports,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.shapecert",
+        description="Certify the packed runtime's compile surface: "
+                    "jax.eval_shape over the real FedConfig grid's round "
+                    "programs (DESIGN.md §16).")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--out", metavar="PATH",
+                      help="write the canonical certificate JSON here")
+    mode.add_argument("--check", metavar="PATH",
+                      help="regenerate and diff against this committed "
+                           "certificate, then verify wave invariance")
+    args = ap.parse_args(argv)
+
+    report = certify()
+    errors = check_invariants(report)
+    for e in errors:
+        print(f"shapecert: INVARIANT: {e}", file=sys.stderr)
+
+    if args.out:
+        if errors:
+            return 1
+        Path(args.out).write_text(canonical_json(report))
+        n = sum(len(e["programs"]) for e in report["entries"])
+        print(f"shapecert: certified {n} program(s) across "
+              f"{len(report['entries'])} config(s) -> {args.out}")
+        return 0
+
+    committed_path = Path(args.check)
+    if not committed_path.exists():
+        print(f"shapecert: committed report {args.check!r} not found — "
+              "generate it with --out first", file=sys.stderr)
+        return 2
+    committed = json.loads(committed_path.read_text())
+    drift = diff_reports(committed, report)
+    for d in drift:
+        print(f"shapecert: DRIFT: {d}", file=sys.stderr)
+    if errors or drift:
+        return 1
+    n = sum(len(e["programs"]) for e in report["entries"])
+    print(f"shapecert: OK — {n} program(s) across "
+          f"{len(report['entries'])} config(s) match {args.check} and the "
+          "compile surface depends on wave_slots alone")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
